@@ -1,0 +1,55 @@
+"""Paper Tab. II / Eq. 1-2 reproduction: analytic communication volumes per
+DLRM config, cross-checked against the collective bytes parsed out of the
+compiled dry-run HLO.
+
+    Eq. 1:  SZ_allreduce  = sum_l (f_i^l * f_o^l + f_o^l)   (per rank,
+            rank-count independent -> the strong-scaling wall)
+    Eq. 2:  SZ_alltoall   = S * N * E                        (global; per-rank
+            share shrinks as ranks grow)
+"""
+
+import json
+from pathlib import Path
+
+from repro.configs.dlrm_paper import dlrm_large, dlrm_mlperf, dlrm_small
+from repro.models.mlp import allreduce_bytes
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def analytic(cfg):
+    sz_allreduce = allreduce_bytes(cfg.bottom_sizes) + \
+        allreduce_bytes(cfg.top_sizes)
+    S, N, E = len(cfg.table_rows), cfg.batch, cfg.emb_dim
+    sz_alltoall = S * N * E * 4
+    emb_gib = cfg.spec.bytes(4) / 2**30
+    return sz_allreduce, sz_alltoall, emb_gib
+
+
+def rows():
+    out = []
+    for mk, name in ((dlrm_small, "dlrm-small"), (dlrm_large, "dlrm-large"),
+                     (dlrm_mlperf, "dlrm-mlperf")):
+        cfg = mk()
+        ar, a2a, emb = analytic(cfg)
+        out.append((f"{name}_eq1_allreduce_MB", ar / 2**20, "paper Eq.1"))
+        out.append((f"{name}_eq2_alltoall_MB", a2a / 2**20, "paper Eq.2"))
+        out.append((f"{name}_emb_capacity_GiB", emb, "paper Tab.II row 1"))
+        f = RESULTS / f"{name}__train_tablewise__pod1x16x16.json"
+        if f.exists():
+            rec = json.loads(f.read_text())
+            if rec.get("status") == "ok":
+                coll = rec["collectives"]["bytes_by_op"]
+                out.append((f"{name}_measured_a2a_MB_per_dev",
+                            coll.get("all-to-all", 0) / 2**20,
+                            "compiled HLO (table mode)"))
+    return out
+
+
+def main():
+    for name, val, derived in rows():
+        print(f"{name},{val:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

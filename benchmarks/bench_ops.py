@@ -1,0 +1,85 @@
+"""Single-socket operator breakdown (paper Fig. 7/8 analogue).
+
+CPU wall-times of the DLRM hot operators, including the paper's Fig. 8
+experiment: embedding UPDATE strategies under uniform vs skewed (zipf)
+indices.  The 'sorted-dedup' strategy is the TPU-native analogue of the
+paper's race-free Alg. 4 (pre-reduce duplicates, then disjoint writes);
+'scatter-add' is Alg. 3 with XLA supplying the atomicity.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import EmbeddingSpec, bag_lookup, bag_update, \
+    globalize
+from repro.core.sharded_embedding import apply_rows_split_sgd
+from repro.data.synthetic import zipf_indices
+from repro.optim.split_sgd import split_fp32
+
+
+def timeit(fn, *args, iters=20):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = []
+    spec = EmbeddingSpec((100_000,) * 8, 64)
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.standard_normal((spec.total_rows, 64)), jnp.float32)
+    B, P = 2048, 20
+
+    for alpha, tag in ((0.0, "uniform"), (1.05, "zipf")):
+        idx = np.stack([zipf_indices(rng, 100_000, (B, P), alpha)
+                        for _ in range(8)], 1).astype(np.int32)
+        g = globalize(spec, jnp.asarray(idx))
+        dY = jnp.asarray(rng.standard_normal((B, 8, 64)), jnp.float32)
+
+        us = timeit(jax.jit(bag_lookup), W, g)
+        out.append((f"embed_fwd_{tag}", us, f"B{B}xS8xP{P}xE64"))
+
+        us = timeit(jax.jit(lambda W, g, dY: bag_update(W, g, dY, 0.1)),
+                    W, g, dY)
+        out.append((f"embed_update_scatter_{tag}", us, "alg3-scatter-add"))
+
+        hi, lo = split_fp32(W)
+        flat_g = g.reshape(-1)
+        grad = jnp.broadcast_to(dY[:, :, None, :], (B, 8, P, 64)
+                                ).reshape(-1, 64)
+        us = timeit(jax.jit(
+            lambda h, l, t, gr: apply_rows_split_sgd(h, l, t, gr, 0.1)),
+            hi, lo, flat_g, grad)
+        out.append((f"embed_update_dedup_split_{tag}", us,
+                    "alg4-dedup+split-sgd"))
+
+    # MLP + interaction
+    from repro.models.mlp import init_mlp, mlp_forward
+    from repro.core.interaction import dot_interaction
+    mlp = init_mlp(jax.random.PRNGKey(0), [512, 1024, 1024, 256])
+    x = jnp.asarray(rng.standard_normal((2048, 512)), jnp.bfloat16)
+    us = timeit(jax.jit(lambda p, x: mlp_forward(p, x)), mlp, x)
+    gflops = 2 * 2048 * (512 * 1024 + 1024 * 1024 + 1024 * 256) / us / 1e3
+    out.append(("mlp_fwd_2048x512-1024-1024-256", us, f"{gflops:.1f}GFLOP/s"))
+
+    dense = jnp.asarray(rng.standard_normal((2048, 64)), jnp.float32)
+    emb = jnp.asarray(rng.standard_normal((2048, 8, 64)), jnp.float32)
+    us = timeit(jax.jit(dot_interaction), dense, emb)
+    out.append(("interaction_dot_2048xF9xE64", us, "batched-self-dot"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

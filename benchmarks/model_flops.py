@@ -1,0 +1,91 @@
+"""Analytic MODEL_FLOPS per (arch x shape) — the 'useful compute' numerator
+of the roofline ratio (EXPERIMENTS.md section Roofline).
+
+LM: 6*N_active*D for training, 2*N_active*D for inference (standard).
+DLRM/recsys: per-op accounting (embedding adds + dense matmuls +
+interaction), x3 for training (fwd + bwd-data + bwd-weights).
+GNN: per-layer edge/node MLP matmul counts, x3 for training.
+"""
+
+from __future__ import annotations
+
+
+def _mlp_flops(sizes, batch):
+    return sum(2 * a * b for a, b in zip(sizes[:-1], sizes[1:])) * batch
+
+
+def lm_flops(meta: dict) -> float:
+    n = meta["active_params"]
+    toks = meta["tokens"]
+    if meta["kind"] == "train":
+        return 6.0 * n * toks
+    return 2.0 * n * toks
+
+
+def dlrm_flops(meta: dict, cfg=None) -> float:
+    """meta carries batch/slots/pooling/emb_dim(+bottom/top for dlrm)."""
+    B = meta["batch"]
+    S, P, E = meta["slots"], meta["pooling"], meta["emb_dim"]
+    emb = 2.0 * B * S * P * E            # gather-add fwd
+    train = meta["kind"] == "train"
+    dense = 0.0
+    if "bottom" in meta:
+        dense += _mlp_flops(meta["bottom"], B)
+        dense += _mlp_flops(meta["top"], B)
+        F = S + 1
+        dense += 2.0 * B * F * F * E     # dot interaction
+    if train:
+        return 3.0 * dense + 2.0 * emb   # emb bwd+update ~= fwd cost
+    return dense + emb
+
+
+def recsys_flops(meta: dict) -> float:
+    B = meta["batch"]
+    S, E = meta["slots"], meta["emb_dim"]
+    emb = 2.0 * B * S * meta["pooling"] * E
+    arch = meta["arch"]
+    if arch == "fm":
+        dense = 2.0 * B * S * E * 2
+    elif arch == "bst":
+        L, d, H = 21, 32, 8
+        attn = 2 * B * (4 * L * d * d + 2 * L * L * d)
+        ffn = 2 * B * L * (d * 4 * d * 2)
+        mlp = _mlp_flops([29 * d if False else L * d + 8 * d, 1024, 512,
+                          256, 1], B)
+        dense = attn + ffn + mlp
+    elif arch == "sasrec":
+        L, d = 50, 50
+        dense = 2 * B * 2 * (4 * L * d * d + 2 * L * L * d + L * d * d * 2)
+    else:  # din
+        T, E_, = 100, 18
+        attn_mlp = _mlp_flops([4 * E_, 80, 40, 1], B * T)
+        mlp = _mlp_flops([6 * E_, 200, 80, 1], B)
+        dense = attn_mlp + mlp
+    if meta["kind"] == "train":
+        return 3.0 * dense + 2.0 * emb
+    if meta["kind"] == "retrieval":
+        nc = meta.get("n_candidates", 1)
+        return dense / max(B, 1) * nc + emb
+    return dense + emb
+
+
+def egnn_flops(meta: dict) -> float:
+    h = 64
+    E_edges, N = meta["n_edges"], meta["n_nodes"]
+    nl = meta["n_layers"]
+    per_layer = (E_edges * (2 * (2 * h + 1) * h + 2 * h * h)      # phi_e
+                 + E_edges * (2 * h * h + 2 * h)                  # phi_x
+                 + N * (2 * 2 * h * h + 2 * h * h))               # phi_h
+    total = nl * per_layer
+    return 3.0 * total  # training
+
+
+def model_flops(meta: dict) -> float:
+    fam = meta["family"]
+    if fam == "lm":
+        return lm_flops(meta)
+    if fam == "gnn":
+        return egnn_flops(meta)
+    if fam == "dlrm":
+        return dlrm_flops(meta)
+    return recsys_flops(meta)

@@ -1,0 +1,90 @@
+"""Render results/dryrun + results/roofline into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline]
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def _fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted((RESULTS / "dryrun").glob("*.json")):
+        r = json.loads(f.read_text())
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], r["mesh"], "skipped", "",
+                         "", "", ""))
+            continue
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], r["mesh"], "ERROR", "", "",
+                         "", ""))
+            continue
+        mem = r["memory"]
+        rows.append((
+            r["arch"], r["shape"], r["mesh"], "ok",
+            _fmt_bytes(mem["peak_estimate_bytes"]),
+            f"{r['cost']['flops']:.3g}",
+            f"{r['collectives']['total_bytes']:.3g}",
+            str(r.get("compile_s", "")),
+        ))
+    out = ["| arch | shape | mesh | status | peak GiB/dev | HLO flops/dev "
+           "(scan-once) | coll B/dev | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for row in rows:
+        out.append("| " + " | ".join(str(x) for x in row) + " |")
+    return "\n".join(out)
+
+
+def roofline_table(dirname="roofline") -> str:
+    rows = []
+    for f in sorted((RESULTS / dirname).glob("*.json")):
+        r = json.loads(f.read_text())
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], "skipped", "", "", "", "",
+                         "", ""))
+            continue
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], "ERROR", "", "", "", "", "",
+                         ""))
+            continue
+        t = r["terms"]
+        rows.append((
+            r["arch"], r["shape"], r["kind"],
+            f"{t['compute_s']*1e3:.2f}", f"{t['memory_s']*1e3:.2f}",
+            f"{t['collective_s']*1e3:.2f}",
+            r["bottleneck"].replace("_s", ""),
+            f"{r['useful_flops_ratio']*100:.0f}%",
+            f"{r['roofline_fraction']*100:.2f}%",
+        ))
+    out = ["| arch | shape | kind | compute ms | memory ms | collective ms "
+           "| bottleneck | useful/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for row in rows:
+        out.append("| " + " | ".join(str(x) for x in row) + " |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", choices=("dryrun", "roofline", "baseline"),
+                    default=None)
+    args = ap.parse_args()
+    if args.section in (None, "dryrun"):
+        print("## Dry-run\n")
+        print(dryrun_table())
+    if args.section in (None, "roofline"):
+        print("\n## Roofline\n")
+        print(roofline_table())
+    if args.section == "baseline":
+        print(roofline_table("roofline_baseline"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis (EXPERIMENTS.md section Roofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh, derive the three terms:
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory_s     = HLO_bytes_per_device / HBM_bw
+    collective_s = collective_operand_bytes_per_device / ICI_link_bw
+
+cost_analysis counts a ``lax.scan`` body ONCE regardless of trip count, so
+scanned programs (LM layer stacks, EGNN layers, chunked embedding updates)
+are extrapolated linearly from two lowerings with different layer counts /
+batch sizes:  c(N) = c(n1) + (c(n2)-c(n1)) * (N-n1)/(n2-n1).
+
+The roofline fraction reported in section Perf is
+    MODEL_FLOPS_per_device / (peak * max(compute_s, memory_s, collective_s))
+i.e. model-flops utilization at the roofline-limited step time.
+
+Caveat (documented): the CPU dry-run backend normalizes bf16 loop carries to
+f32, inflating 'bytes accessed' and some temp buffers ~2x vs real TPU; the
+relative term comparison and the iteration log are unaffected.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--arch A] [--shape S]
+Results: results/roofline/<arch>__<shape>.json + stdout table.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.model_flops import model_flops
+from repro.configs import base as cfgbase
+from repro.hw import TPU_V5E
+from repro.launch.dryrun import parse_collective_bytes
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "roofline"
+
+
+def measure(build, mesh) -> dict:
+    with jax.set_mesh(mesh):
+        lowered = build.fn.lower(*build.args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = parse_collective_bytes(compiled.as_text())
+    ma = compiled.memory_analysis()
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(coll["total_bytes"]),
+            "coll_by_op": coll["bytes_by_op"],
+            "peak_gib": (ma.argument_size_in_bytes
+                         + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                         - ma.alias_size_in_bytes) / 2**30}
+
+
+def extrapolate(ad, shape, mesh, meta) -> dict:
+    """Layer- or batch-extrapolated per-device cost."""
+    fam = meta["family"]
+    if fam in ("lm", "gnn"):
+        unit = meta.get("scan_unit", 1)
+        pre = meta.get("scan_outside", 0)
+        n_full = meta["n_layers"]
+        n1, n2 = pre + unit, pre + 2 * unit
+        if n_full <= n2:                       # tiny configs: measure direct
+            return measure(ad.build(shape, mesh, cost_mode=True), mesh)
+        c1 = measure(ad.build(shape, mesh, n_layers=n1, cost_mode=True),
+                     mesh)
+        c2 = measure(ad.build(shape, mesh, n_layers=n2, cost_mode=True),
+                     mesh)
+        out = {}
+        for k in ("flops", "bytes", "coll"):
+            slope = (c2[k] - c1[k]) / (n2 - n1)
+            out[k] = max(0.0, c1[k] + slope * (n_full - n1))
+        out["coll_by_op"] = {
+            op: c1["coll_by_op"].get(op, 0)
+            + (c2["coll_by_op"].get(op, 0) - c1["coll_by_op"].get(op, 0))
+            / (n2 - n1) * (n_full - n1)
+            for op in set(c1["coll_by_op"]) | set(c2["coll_by_op"])}
+        full = measure(ad.build(shape, mesh), mesh)   # real peak memory
+        out["peak_gib"] = full["peak_gib"]
+        out["extrapolated"] = f"layers {n1},{n2} -> {n_full}"
+        return out
+    # recsys/dlrm: batch extrapolation (chunk scans disabled via env so the
+    # reduced-batch cost builds are scan-free; linear in B with the RS+AG
+    # parameter traffic captured by the intercept)
+    B = meta["batch"]
+    ns = int(np.prod(list(mesh.shape.values())))
+    b1 = max(ns, B // 16)
+    b2 = 2 * b1
+    os.environ["REPRO_EMB_CHUNK_BUDGET"] = str(1 << 62)
+    try:
+        if b2 >= B:
+            return measure(ad.build(shape, mesh), mesh)
+        c1 = measure(ad.build(shape, mesh, batch=b1), mesh)
+        c2 = measure(ad.build(shape, mesh, batch=b2), mesh)
+    finally:
+        os.environ.pop("REPRO_EMB_CHUNK_BUDGET", None)
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        slope = (c2[k] - c1[k]) / (b2 - b1)
+        out[k] = c1[k] + slope * (B - b1)
+    out["coll_by_op"] = {
+        op: c1["coll_by_op"].get(op, 0)
+        + (c2["coll_by_op"].get(op, 0) - c1["coll_by_op"].get(op, 0))
+        / (b2 - b1) * (B - b1)
+        for op in set(c1["coll_by_op"]) | set(c2["coll_by_op"])}
+    full = measure(ad.build(shape, mesh), mesh)
+    out["peak_gib"] = full["peak_gib"]
+    out["extrapolated"] = f"batch {b1},{b2} -> {B}"
+    return out
+
+
+def analyze(arch: str, shape: str, mesh) -> dict:
+    ad = cfgbase.get(arch)
+    cell = next(c for c in ad.cells if c.shape == shape)
+    if cell.skip:
+        return {"arch": arch, "shape": shape, "status": "skipped",
+                "skip_reason": cell.skip}
+    build = ad.build(shape, mesh)
+    meta = build.meta
+    cost = extrapolate(ad, shape, mesh, meta)
+    chips = int(np.prod(list(mesh.shape.values())))
+    hw = TPU_V5E
+    compute_s = cost["flops"] / hw.peak_flops_bf16
+    memory_s = cost["bytes"] / hw.hbm_bw
+    coll_s = cost["coll"] / hw.ici_bw_per_link
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    step_lb = max(terms.values())
+    mf = model_flops(meta)
+    mf_dev = mf / chips
+    rec = {
+        "arch": arch, "shape": shape, "kind": meta["kind"],
+        "status": "ok", "chips": chips,
+        "terms": terms, "bottleneck": bottleneck,
+        "step_time_lower_bound_s": step_lb,
+        "model_flops_total": mf,
+        "hlo_flops_per_device": cost["flops"],
+        "hlo_bytes_per_device": cost["bytes"],
+        "collective_bytes_per_device": cost["coll"],
+        "coll_by_op": cost["coll_by_op"],
+        "useful_flops_ratio": mf_dev / cost["flops"] if cost["flops"] else 0,
+        "roofline_fraction": (mf_dev / (hw.peak_flops_bf16 * step_lb)
+                              if step_lb else 0.0),
+        "peak_gib": cost["peak_gib"],
+        "extrapolated": cost.get("extrapolated", "direct"),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+    archs = [args.arch] if args.arch else cfgbase.list_archs()
+    rows = []
+    for arch in archs:
+        ad = cfgbase.get(arch)
+        for cell in ad.cells:
+            if args.shape and cell.shape != args.shape:
+                continue
+            out = RESULTS / f"{arch}__{cell.shape}.json"
+            if out.exists() and not args.force:
+                rec = json.loads(out.read_text())
+            else:
+                print(f"[roofline] {arch} {cell.shape} ...", flush=True)
+                try:
+                    rec = analyze(arch, cell.shape, mesh)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": cell.shape,
+                           "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                out.write_text(json.dumps(rec, indent=2))
+            rows.append(rec)
+            if rec["status"] == "ok":
+                t = rec["terms"]
+                print(f"  {arch:22s} {cell.shape:16s} "
+                      f"comp={t['compute_s']*1e3:8.2f}ms "
+                      f"mem={t['memory_s']*1e3:8.2f}ms "
+                      f"coll={t['collective_s']*1e3:8.2f}ms "
+                      f"-> {rec['bottleneck'][:-2]:10s} "
+                      f"roofline={rec['roofline_fraction']*100:5.1f}%",
+                      flush=True)
+            elif rec["status"] == "skipped":
+                print(f"  {arch:22s} {cell.shape:16s} skipped")
+            else:
+                print(f"  {arch:22s} {cell.shape:16s} ERROR "
+                      f"{rec['error']}")
+    n_err = sum(r["status"] == "error" for r in rows)
+    print(f"\nroofline cells: {len(rows)}, errors: {n_err}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,46 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--section ops|comm|scaling|split]
+
+Prints ``name,us_per_call_or_value,derived`` CSV lines per section.  The
+roofline (section Roofline of EXPERIMENTS.md) and the multi-pod dry-run have
+their own entry points (benchmarks.roofline, repro.launch.dryrun) because
+they need the 512-device flag before jax initializes.
+"""
+
+import argparse
+import sys
+import traceback
+
+
+SECTIONS = ("ops", "comm", "scaling", "split")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", choices=SECTIONS, default=None)
+    args = ap.parse_args()
+    sections = [args.section] if args.section else list(SECTIONS)
+    failed = []
+    for sec in sections:
+        print(f"# --- {sec} ---")
+        try:
+            if sec == "ops":
+                from benchmarks import bench_ops as m
+            elif sec == "comm":
+                from benchmarks import bench_comm_model as m
+            elif sec == "scaling":
+                from benchmarks import bench_scaling as m
+            else:
+                from benchmarks import bench_split_sgd as m
+            m.main()
+        except Exception:  # noqa: BLE001
+            failed.append(sec)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED sections: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

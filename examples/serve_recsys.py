@@ -1,0 +1,69 @@
+"""Serving scenario: DIN online scoring with dynamic batching (serve_p99)
+plus a retrieval pass (retrieval_cand) with a distributed top-k merge.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_recsys.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hybrid as H
+from repro.data.synthetic import hybrid_stream
+from repro.launch.mesh import make_mesh
+from repro.models import recsys as R
+from repro.serve import BatchingServer
+
+
+def main():
+    n = len(jax.devices())
+    mesh = make_mesh((max(1, n // 4), min(4, n)), ("data", "model"))
+    BATCH = 64
+    mdef = R.make_din(50_000, (1000,) * 4, batch=BATCH)
+    state, layout = H.init_state(jax.random.PRNGKey(0), mdef, mesh)
+    score, _, _, _ = H.make_score_step(mdef, mesh, batch=BATCH)
+    gen = hybrid_stream(0, mdef, alpha=0.7)
+
+    def pad_batch(reqs):
+        base = next(gen)
+        for i, r in enumerate(reqs):
+            base["idx"][i] = r["idx"]
+        return {k: jnp.asarray(v) for k, v in base.items()}
+
+    server = BatchingServer(lambda b: score(state, b), BATCH, pad_batch)
+    # warmup compile
+    list(server.drain())
+    rng = np.random.default_rng(1)
+    template = next(gen)
+    for _ in range(400):
+        server.submit({"idx": template["idx"][rng.integers(0, BATCH)]})
+        if rng.random() < 0.3:
+            for _ in server.drain():
+                pass
+    for _ in server.drain():
+        pass
+    print("online scoring latency:", server.percentiles())
+
+    # ---- retrieval: one query vs sharded candidate index + global top-k ---
+    ns = int(np.prod(list(mesh.shape.values())))
+    n_cand = 4096
+    retr, arg_structs, arg_shardings, _ = H.make_retrieval_step(
+        mdef, mesh, n_cand, target_slot=100, topk=16)
+    batch1 = {k: jnp.asarray(v[:1]) for k, v in next(gen).items()}
+    cand = jnp.asarray(
+        np.random.default_rng(2).standard_normal((n_cand, mdef.spec.dim)),
+        jnp.bfloat16)
+    vals, ids = retr(state, batch1, cand)
+    print(f"retrieval top-16 of {n_cand} candidates: "
+          f"ids {np.asarray(ids)[:5]}... scores {np.asarray(vals)[:3]}")
+    assert len(set(np.asarray(ids).tolist())) == 16
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Reproduces the paper's Fig. 16 claim: Split-SGD-BF16 trains to the same
+loss as fp32 SGD, while bf16-weights-WITHOUT-the-lo-bits (the naive
+mixed-precision baseline) degrades.
+
+    PYTHONPATH=src python examples/split_sgd_convergence.py
+
+The paper also reports that 8 LSBs are not enough; we emulate that by
+zeroing the low byte of ``lo`` each step (keeping 8 extra mantissa bits).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dlrm import DLRMConfig, forward_local, bce_with_logits, \
+    init_dense_params
+from repro.core.embedding import bag_lookup, globalize
+from repro.data.synthetic import dlrm_stream
+from repro.optim import split_sgd as S
+
+
+def run(mode: str, steps: int = 200, lr: float = 0.05) -> list:
+    cfg = DLRMConfig(name="fig16", num_dense=32, bottom=(64, 16),
+                     top=(64, 32), table_rows=(2000,) * 4, emb_dim=16,
+                     pooling=4, batch=512, lr=lr)
+    key = jax.random.PRNGKey(0)
+    ke, kd = jax.random.split(key)
+    W = jax.random.uniform(ke, (cfg.spec.total_rows, cfg.emb_dim),
+                           jnp.float32, -0.02, 0.02)
+    dense = init_dense_params(kd, cfg)
+    params = {"emb": W, "dense": dense}
+
+    if mode == "fp32":
+        state = params
+    elif mode in ("split", "split8"):
+        state = S.init(params)
+    else:  # bf16: no master bits at all
+        state = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+
+    def loss_fn(fwd_params, batch):
+        g = globalize(cfg.spec, batch["idx"])
+        emb_out = bag_lookup(fwd_params["emb"], g)
+        logits = forward_local(fwd_params["dense"], emb_out,
+                               batch["dense_x"].astype(jnp.bfloat16))
+        return bce_with_logits(logits, batch["labels"]).mean()
+
+    @jax.jit
+    def step(state, batch):
+        if mode == "fp32":
+            loss, g = jax.value_and_grad(loss_fn)(state, batch)
+            return jax.tree.map(lambda p, gg: p - lr * gg, state, g), loss
+        if mode == "bf16":
+            loss, g = jax.value_and_grad(loss_fn)(state, batch)
+            return jax.tree.map(
+                lambda p, gg: (p.astype(jnp.float32)
+                               - lr * gg.astype(jnp.float32)
+                               ).astype(jnp.bfloat16), state, g), loss
+        loss, g = jax.value_and_grad(loss_fn)(state.params.hi, batch)
+        new = S.apply_updates(state, g, lr)
+        if mode == "split8":   # keep only 8 extra mantissa bits
+            new = S.SplitSGDState(
+                S.SplitParams(new.params.hi, jax.tree.map(
+                    lambda l: l & jnp.uint16(0xFF00), new.params.lo)),
+                new.momentum)
+        return new, loss
+
+    stream = dlrm_stream(7, cfg)
+    losses = []
+    for i, b in zip(range(steps), stream):
+        # learnable teacher: label depends on a sparse id parity AND a dense
+        # feature — both the embedding and MLP paths must train to fit it
+        y = ((b["idx"][:, 0, 0] % 2).astype(np.float32)
+             + (b["dense_x"][:, 0] > 0).astype(np.float32)) >= 1.5
+        b["labels"] = y.astype(np.float32)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        state, loss = step(state, batch)
+        losses.append(float(loss))
+    return losses
+
+
+def main():
+    out = {}
+    for mode in ("fp32", "split", "split8", "bf16"):
+        losses = run(mode)
+        out[mode] = np.mean(losses[-20:])
+        print(f"{mode:7s}: final-20 mean loss {out[mode]:.5f}")
+    gap_split = abs(out["split"] - out["fp32"])
+    gap_bf16 = abs(out["bf16"] - out["fp32"])
+    print(f"\nsplit-vs-fp32 gap {gap_split:.5f}  |  "
+          f"bf16-vs-fp32 gap {gap_bf16:.5f}")
+    assert gap_split < 5e-3, "Split-SGD should match fp32 (paper Fig. 16)"
+    print("paper claim holds: Split-SGD-BF16 ~ fp32; naive bf16 drifts")
+
+
+if __name__ == "__main__":
+    main()

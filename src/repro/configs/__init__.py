@@ -1,0 +1,1 @@
+from repro.configs.base import get, list_archs  # noqa: F401

@@ -1,0 +1,159 @@
+"""Config/registry plumbing: each architecture module registers an ArchDef
+exposing (arch x shape) cells that the dry-run lowers and the roofline
+analyzes.  ``build(shape, mesh, **overrides)`` returns a CellBuild whose
+``fn.lower(*args)`` must compile — that IS the multi-pod dry-run contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CellBuild:
+    fn: Any                  # jitted callable (has .lower)
+    args: tuple              # ShapeDtypeStruct pytrees
+    meta: dict               # roofline metadata (tokens, params, kind, ...)
+
+
+@dataclasses.dataclass
+class Cell:
+    shape: str
+    kind: str                # train|prefill|decode|score|retrieval
+    skip: Optional[str] = None   # reason, if this cell is skipped
+
+
+@dataclasses.dataclass
+class ArchDef:
+    name: str
+    family: str              # lm|gnn|recsys|dlrm
+    cells: list
+    build: Callable          # (shape, mesh, **overrides) -> CellBuild
+    # overrides supported for roofline extrapolation:
+    #   lm/gnn: n_layers=...   recsys/dlrm: batch=...
+    notes: str = ""
+
+
+_REGISTRY: dict[str, ArchDef] = {}
+
+
+def register(arch: ArchDef) -> ArchDef:
+    _REGISTRY[arch.name] = arch
+    return arch
+
+
+def get(name: str) -> ArchDef:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    if _REGISTRY:
+        return
+    import repro.configs.qwen3_moe_30b_a3b      # noqa: F401
+    import repro.configs.deepseek_v2_236b       # noqa: F401
+    import repro.configs.internlm2_1_8b         # noqa: F401
+    import repro.configs.gemma2_27b             # noqa: F401
+    import repro.configs.phi3_medium_14b        # noqa: F401
+    import repro.configs.egnn_arch              # noqa: F401
+    import repro.configs.fm_arch                # noqa: F401
+    import repro.configs.bst_arch               # noqa: F401
+    import repro.configs.sasrec_arch            # noqa: F401
+    import repro.configs.din_arch               # noqa: F401
+    import repro.configs.dlrm_paper             # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# LM family shared shapes/builder
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k":    dict(kind="train",   L=4096,   B=256),
+    "prefill_32k": dict(kind="prefill", L=32768,  B=32),
+    "decode_32k":  dict(kind="decode",  L=32768,  B=128),
+    "long_500k":   dict(kind="decode",  L=524288, B=1),
+}
+
+
+def lm_archdef(name: str, cfg_fn: Callable, sub_quadratic: bool,
+               momentum: bool = True, notes: str = "",
+               pure_dp: bool = False) -> ArchDef:
+    import dataclasses as dc
+
+    import jax
+
+    from repro.models import lm_steps
+
+    skip_long = (None if sub_quadratic else
+                 "pure full-attention arch: long_500k requires sub-quadratic "
+                 "attention (DESIGN.md section 5)")
+    cells = [Cell("train_4k", "train"), Cell("prefill_32k", "prefill"),
+             Cell("decode_32k", "decode"),
+             Cell("long_500k", "decode", skip=skip_long)]
+
+    def build(shape: str, mesh, n_layers: int | None = None,
+              batch: int | None = None, cost_mode: bool = False) -> CellBuild:
+        sh = LM_SHAPES[shape]
+        bdp = tuple(mesh.axis_names)[:-1]
+        cfg = cfg_fn()
+        if n_layers is not None:
+            cfg = dc.replace(cfg, n_layers=n_layers)
+        cfg = dc.replace(cfg, dp_axes=bdp, tp_size=mesh.shape["model"])
+        # pure-DP mapping (HC1): small models treat BOTH mesh axes as data
+        # parallel when the batch covers the mesh — kills the TP activation
+        # allreduce entirely (train shapes only; decode/prefill keep TP for
+        # the KV-cache placement)
+        import numpy as _np0
+        all_ax = tuple(mesh.axis_names)
+        if (pure_dp and sh["kind"] == "train"
+                and (batch or sh["B"]) % int(_np0.prod(
+                    [mesh.shape[a] for a in all_ax])) == 0):
+            cfg = dc.replace(cfg, dp_axes=all_ax, tp_size=1,
+                             seq_shard=False)
+            bdp = all_ax
+        if cost_mode:
+            # fully-unrolled reduced-depth cost build: inner scans
+            # neutralized so cost_analysis counts everything exactly once
+            # attention q-chunk scan stays (it is UNROLLED in cost mode,
+            # so the windowed-KV slicing of local layers is costed)
+            cfg = dc.replace(cfg, cost_mode=True, microbatch=1,
+                             prefill_microbatch=1, loss_chunk=sh["L"])
+        B = batch or sh["B"]
+        L = sh["L"]
+        # each microbatch must still shard over the DP axes; wider meshes
+        # need proportionally fewer accumulation steps for the same
+        # per-device footprint
+        import numpy as _np
+        ndp = int(_np.prod([mesh.shape[a] for a in bdp]))
+        if cfg.microbatch > 1 and sh["kind"] == "train":
+            mb = min(cfg.microbatch, max(1, B // ndp))
+            while mb > 1 and (B % mb or (B // mb) % ndp):
+                mb -= 1
+            cfg = dc.replace(cfg, microbatch=mb)
+        meta = dict(arch=name, shape=shape, kind=sh["kind"], family="lm",
+                    tokens=B * L, batch=B, seq=L,
+                    params=cfg.param_count(),
+                    active_params=cfg.active_param_count(),
+                    n_layers=cfg.n_layers,
+                    scan_unit=2 if cfg.local_global else 1,
+                    scan_outside=cfg.first_dense_layers)
+        if sh["kind"] == "train":
+            fn, structs, _ = lm_steps.make_lm_train_step(
+                cfg, mesh, B, L, momentum=momentum)
+            return CellBuild(fn, structs, meta)
+        if sh["kind"] == "prefill":
+            fn, structs, _ = lm_steps.make_prefill_step(cfg, mesh, B, L)
+            return CellBuild(fn, structs, meta)
+        fn, structs, _ = lm_steps.make_decode_step(cfg, mesh, B, L)
+        meta["tokens"] = B   # one token per sequence per step
+        return CellBuild(fn, structs, meta)
+
+    return register(ArchDef(name, "lm", cells, build, notes=notes))

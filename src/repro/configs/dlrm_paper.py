@@ -1,0 +1,62 @@
+"""The paper's own three DLRM configs (Tab. I), as first-class archs.
+
+Each gets TWO train cells: row mode (beyond-paper production placement) and
+table mode (the paper's table-wise hybrid parallelism) — the A/B the perf
+log builds on.  Batch sizes are the paper's strong-scaling global
+minibatches (GN).
+"""
+
+from repro.configs.base import ArchDef, Cell, CellBuild, register
+from repro.core.dlrm import DLRMConfig, make_train_step, batch_struct, \
+    state_struct
+from repro.configs.fm_arch import CRITEO_TB
+
+
+def dlrm_small(mode="row", batch=8192):
+    return DLRMConfig(
+        name="dlrm-small", num_dense=512, bottom=(512, 512, 64),
+        top=(1024, 1024, 1024, 1024), table_rows=(1_000_000,) * 8,
+        emb_dim=64, pooling=50, batch=batch, emb_mode=mode)
+
+
+def dlrm_large(mode="row", batch=16384):
+    return DLRMConfig(
+        name="dlrm-large", num_dense=2048,
+        bottom=(2048,) * 7 + (256,), top=(4096,) * 16,
+        table_rows=(6_000_000,) * 64, emb_dim=256, pooling=100,
+        batch=batch, emb_mode=mode)
+
+
+def dlrm_mlperf(mode="row", batch=16384):
+    return DLRMConfig(
+        name="dlrm-mlperf", num_dense=13, bottom=(512, 256, 128),
+        top=(512, 512, 256), table_rows=CRITEO_TB, emb_dim=128,
+        pooling=1, batch=batch, emb_mode=mode)
+
+
+def _archdef(name, cfg_fn, default_batch):
+    cells = [Cell("train", "train"), Cell("train_tablewise", "train")]
+
+    def build(shape: str, mesh, batch: int | None = None,
+              n_layers: int | None = None,
+              cost_mode: bool = False) -> CellBuild:
+        mode = "table" if shape == "train_tablewise" else "row"
+        cfg = cfg_fn(mode=mode, batch=batch or default_batch)
+        fn, shardings, bspecs, layout = make_train_step(cfg, mesh)
+        sstructs, _, _, _ = state_struct(cfg, mesh)
+        bstructs, _ = batch_struct(cfg, mesh, layout)
+        meta = dict(arch=name, shape=shape, kind="train", family="dlrm",
+                    batch=cfg.batch, slots=len(cfg.table_rows),
+                    pooling=cfg.pooling, emb_dim=cfg.emb_dim,
+                    emb_rows=cfg.spec.total_rows,
+                    bottom=cfg.bottom_sizes, top=cfg.top_sizes,
+                    scan_unit=1, scan_outside=0, n_layers=1)
+        return CellBuild(fn, (sstructs, bstructs), meta)
+
+    return register(ArchDef(name, "dlrm", cells, build,
+                            notes="paper Tab. I config"))
+
+
+ARCH_SMALL = _archdef("dlrm-small", dlrm_small, 8192)
+ARCH_LARGE = _archdef("dlrm-large", dlrm_large, 16384)
+ARCH_MLPERF = _archdef("dlrm-mlperf", dlrm_mlperf, 16384)

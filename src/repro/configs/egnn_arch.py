@@ -1,0 +1,68 @@
+"""egnn [arXiv:2102.09844]: 4 layers, hidden 64, E(n)-equivariant.
+
+Four shape cells:
+    full_graph_sm   cora-like      N=2708      E=10556      d_feat=1433
+    minibatch_lg    reddit-like    fanout 15-10, 1024 target nodes
+    ogb_products    full-batch     N=2449029   E=61859140   d_feat=100
+    molecule        128 graphs x (30 nodes, 64 edges), graph-level target
+
+Citation/product graphs carry synthesized 3D coordinates (EGNN needs
+geometry; noted in DESIGN.md).
+"""
+
+import dataclasses as dc
+
+from repro.configs.base import ArchDef, Cell, CellBuild, register
+from repro.models.egnn import EGNNConfig
+
+
+SHAPES = {
+    "full_graph_sm": dict(kind="train", n_nodes=2708, n_edges=10556,
+                          d_feat=1433, n_classes=7),
+    "minibatch_lg": dict(kind="train", n_graphs=1024, fanout=(15, 10),
+                         d_feat=602, n_classes=41,
+                         n_pad=192, e_pad=192),
+    "ogb_products": dict(kind="train", n_nodes=2449029, n_edges=61859140,
+                         d_feat=100, n_classes=47),
+    "molecule": dict(kind="train", n_graphs=128, nodes_per=30, edges_per=64,
+                     d_feat=11, n_classes=1),
+}
+
+
+def build(shape: str, mesh, n_layers: int | None = None,
+          batch: int | None = None, cost_mode: bool = False) -> CellBuild:
+    from repro.models import egnn_steps
+
+    sh = SHAPES[shape]
+    cfg = EGNNConfig("egnn", n_layers=n_layers or 4, d_hidden=64,
+                     d_feat=sh["d_feat"], n_classes=sh["n_classes"],
+                     graph_level=(shape == "molecule"))
+    meta = dict(arch="egnn", shape=shape, kind="train", family="gnn",
+                n_layers=cfg.n_layers, scan_unit=1, scan_outside=0)
+    if shape == "minibatch_lg":
+        g = batch or sh["n_graphs"]
+        fn, structs, _ = egnn_steps.make_minibatch_train_step(
+            cfg, mesh, g, sh["n_pad"], sh["e_pad"], unroll=cost_mode)
+        meta.update(n_edges=g * sh["e_pad"], n_nodes=g * sh["n_pad"],
+                    batch=g)
+        return CellBuild(fn, structs, meta)
+    if shape == "molecule":
+        g = batch or sh["n_graphs"]
+        n_nodes = g * sh["nodes_per"]
+        n_edges = g * sh["edges_per"]
+        fn, structs, _ = egnn_steps.make_fullgraph_train_step(
+            cfg, mesh, n_nodes, n_edges, graph_level_graphs=g,
+            unroll=cost_mode)
+        meta.update(n_edges=n_edges, n_nodes=n_nodes, batch=g)
+        return CellBuild(fn, structs, meta)
+    fn, structs, _ = egnn_steps.make_fullgraph_train_step(
+        cfg, mesh, sh["n_nodes"], sh["n_edges"], unroll=cost_mode)
+    meta.update(n_edges=sh["n_edges"], n_nodes=sh["n_nodes"], batch=1)
+    return CellBuild(fn, structs, meta)
+
+
+ARCH = register(ArchDef(
+    "egnn", "gnn",
+    [Cell(s, "train") for s in SHAPES], build,
+    notes="edge-sharded message passing; segment_sum scatter; "
+          "minibatch_lg uses the fanout neighbor sampler in repro/data"))

@@ -1,0 +1,20 @@
+"""fm [Rendle ICDM'10]: 39 sparse fields, embed_dim 10, 2-way FM via the
+O(nk) sum-square trick.  Tables: the 26 Criteo-TB categorical sizes + 13
+bucketized-dense fields of 1000 rows (criteo has 13 numeric features)."""
+
+from repro.configs.recsys_common import recsys_archdef
+from repro.models.recsys import make_fm
+
+CRITEO_TB = (39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63,
+             38532951, 2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14,
+             39979771, 25641295, 39664984, 585935, 12972, 108, 36)
+TABLES = CRITEO_TB + (1000,) * 13          # 39 fields
+
+
+def make_mdef(batch):
+    return make_fm(TABLES, batch=batch)
+
+
+ARCH = recsys_archdef("fm", make_mdef, target_slot=0,
+                      notes="unified E=11 rows: dims 0..9 factor vector, "
+                            "dim 10 linear weight")

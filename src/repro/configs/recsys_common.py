@@ -1,0 +1,54 @@
+"""Shared builder for the four recsys ArchDefs (paper-pattern hybrid
+parallel)."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchDef, Cell, CellBuild, register
+
+RECSYS_SHAPES = {
+    "train_batch":    dict(kind="train", batch=65536),
+    "serve_p99":      dict(kind="score", batch=512),
+    "serve_bulk":     dict(kind="score", batch=262144),
+    # 2^20 candidates: divisible by the 512-device mesh (brief says 1e6;
+    # padded up, noted in EXPERIMENTS.md)
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1 << 20),
+}
+
+
+def recsys_archdef(name: str, make_mdef, target_slot: int,
+                   notes: str = "") -> ArchDef:
+    from repro.core import hybrid
+
+    cells = [Cell(s, RECSYS_SHAPES[s]["kind"]) for s in RECSYS_SHAPES]
+
+    def build(shape: str, mesh, batch: int | None = None,
+              n_layers: int | None = None,
+              cost_mode: bool = False) -> CellBuild:
+        sh = RECSYS_SHAPES[shape]
+        B = batch or sh["batch"]
+        mdef = make_mdef(B)
+        layout_slots = (len(mdef.slot_to_table) if mdef.slot_to_table
+                        else mdef.spec.num_tables)
+        meta = dict(arch=name, shape=shape, kind=sh["kind"], family="recsys",
+                    batch=B, slots=layout_slots, pooling=mdef.pooling,
+                    emb_dim=mdef.spec.dim,
+                    emb_rows=mdef.spec.total_rows,
+                    scan_unit=1, scan_outside=0, n_layers=1)
+        if sh["kind"] == "train":
+            fn, shardings, bspecs, layout = hybrid.make_train_step(mdef, mesh)
+            bstructs, _ = hybrid.batch_struct(mdef, mesh, layout)
+            sstructs, _, _, _ = hybrid.state_struct(mdef, mesh)
+            return CellBuild(fn, (sstructs, bstructs), meta)
+        if sh["kind"] == "score":
+            fn, shardings, bspecs, layout = hybrid.make_score_step(
+                mdef, mesh, batch=B)
+            bstructs, _ = hybrid.batch_struct(mdef, mesh, layout, batch=B)
+            sstructs, _, _, _ = hybrid.state_struct(mdef, mesh)
+            return CellBuild(fn, (sstructs, bstructs), meta)
+        nc = sh["n_candidates"]
+        meta["n_candidates"] = nc
+        fn, arg_structs, _, layout = hybrid.make_retrieval_step(
+            mdef, mesh, nc, target_slot)
+        return CellBuild(fn, arg_structs, meta)
+
+    return register(ArchDef(name, "recsys", cells, build, notes=notes))

@@ -1,0 +1,15 @@
+"""sasrec [arXiv:1808.09781]: embed_dim=50, 2 blocks, 1 head, seq_len=50.
+Item vocab 4M shared across seq/pos/neg slots."""
+
+from repro.configs.recsys_common import recsys_archdef
+from repro.models.recsys import make_sasrec
+
+ITEM_VOCAB = 4_000_000
+
+
+def make_mdef(batch):
+    return make_sasrec(ITEM_VOCAB, batch=batch)
+
+
+# slot 50 = first "positive" slot doubles as the scoring target at serve time
+ARCH = recsys_archdef("sasrec", make_mdef, target_slot=50)

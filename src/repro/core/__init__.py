@@ -1,0 +1,4 @@
+# The paper's primary contribution: the unified embedding engine (C1), the
+# hybrid-parallel embedding placement + all-to-all layout switch (C3), the
+# dot interaction, and the DLRM model assembled from them.
+from repro.core import embedding, interaction, sharded_embedding  # noqa: F401

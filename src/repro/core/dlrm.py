@@ -1,0 +1,292 @@
+"""DLRM assembled from the paper's components, with the hybrid-parallel
+train step (contributions C1+C3+C4+C5 composed).
+
+One ``shard_map`` over the full mesh contains the whole step, so every
+collective the paper discusses is explicit in the lowered HLO:
+
+    embedding bag fwd        -> psum_scatter (row mode)  |  all_to_all (table)
+    dense fwd/bwd            -> local compute (data-parallel over ALL axes)
+    embedding fused update   -> all_gather(dY) + owner-masked scatter (C1/Alg.4)
+    dense optimizer          -> bucketed reduce-scatter + all-gather (C4)
+                                with Split-SGD-BF16 on the shard (C5)
+
+The roofline harness reads those collectives straight out of the compiled
+module; EXPERIMENTS.md's comm-volume table checks them against the paper's
+Eq. 1 (allreduce) and Eq. 2 (alltoall).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.embedding import EmbeddingSpec
+from repro.core import sharded_embedding as se
+from repro.core.interaction import dot_interaction, interaction_output_dim
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.optim import data_parallel as dp
+from repro.optim.split_sgd import split_fp32
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str
+    num_dense: int                  # dense-feature width (bottom MLP input)
+    bottom: tuple[int, ...]         # bottom MLP hidden sizes; last == emb dim
+    top: tuple[int, ...]            # top MLP hidden sizes; final 1 appended
+    table_rows: tuple[int, ...]     # M_i per table
+    emb_dim: int                    # E
+    pooling: int                    # P look-ups per table (paper's P)
+    batch: int = 2048               # global minibatch
+    emb_mode: str = "row"           # 'row' | 'table'  (C3 placement)
+    split_sgd: bool = True          # C5 on/off
+    compress_grads: bool = False    # bf16 wire + error feedback
+    num_buckets: int = 4            # C4 bucketing
+    lr: float = 0.1
+    mlp_impl: str = "xla"           # 'xla' | 'pallas'
+    # 'replicated' reproduces the paper's data loader (every rank reads the
+    # full global minibatch — its own noted weak-scaling flaw); 'sharded'
+    # feeds batch-sharded indices and all-gathers them over ICI instead,
+    # removing the host-side input replication (row mode only).
+    idx_input: str = "replicated"
+
+    @property
+    def spec(self) -> EmbeddingSpec:
+        return EmbeddingSpec(self.table_rows, self.emb_dim)
+
+    @property
+    def bottom_sizes(self) -> list[int]:
+        return [self.num_dense, *self.bottom]
+
+    @property
+    def top_sizes(self) -> list[int]:
+        f = len(self.table_rows) + 1
+        d_in = interaction_output_dim(f, self.emb_dim, "dot")
+        return [d_in, *self.top, 1]
+
+
+def init_dense_params(key: jax.Array, cfg: DLRMConfig) -> dict:
+    kb, kt = jax.random.split(key)
+    return {"bot": init_mlp(kb, cfg.bottom_sizes),
+            "top": init_mlp(kt, cfg.top_sizes)}
+
+
+def forward_local(dense_hi: dict, emb_out: jax.Array, dense_x: jax.Array,
+                  impl: str = "xla") -> jax.Array:
+    """Per-device forward on the batch-sharded slice (fully data-parallel)."""
+    bot = mlp_forward(dense_hi["bot"], dense_x, final_activation=True,
+                      impl=impl)                       # [b, E]
+    z = dot_interaction(bot, emb_out)                  # [b, E + F(F-1)/2]
+    logits = mlp_forward(dense_hi["top"], z.astype(jnp.bfloat16), impl=impl)
+    return logits[:, 0]
+
+
+def bce_with_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    x, y = logits.astype(jnp.float32), labels.astype(jnp.float32)
+    return jnp.maximum(x, 0) - x * y + jnp.log1p(jnp.exp(-jnp.abs(x)))
+
+
+# ---------------------------------------------------------------------------
+# Hybrid-parallel step factory
+# ---------------------------------------------------------------------------
+
+def mesh_axes(mesh) -> tuple[tuple[str, ...], str, tuple[str, ...]]:
+    """(all_axes, model_axis, batch_axes).  The last mesh axis is 'model'."""
+    names = tuple(mesh.axis_names)
+    return names, names[-1], names[:-1]
+
+
+def emb_axes_for(cfg: DLRMConfig, mesh):
+    """Row mode shards the row space over the FULL mesh (paper: pure
+    model-parallel embeddings over all ranks); table mode uses the model
+    axis and replicates over the rest."""
+    all_axes, model, batch_axes = mesh_axes(mesh)
+    if cfg.emb_mode == "row":
+        return all_axes, None
+    return model, (batch_axes if batch_axes else None)
+
+
+def make_layout(cfg: DLRMConfig, mesh) -> se.ShardedEmbeddingLayout:
+    axes, _ = emb_axes_for(cfg, mesh)
+    ns = int(np.prod([mesh.shape[a] for a in (axes if isinstance(axes, tuple)
+                                              else (axes,))]))
+    return se.make_layout(cfg.spec, ns, cfg.emb_mode)
+
+
+def state_struct(cfg: DLRMConfig, mesh, rngs: bool = True):
+    """(state pytree of arrays-or-structs, sharding pytree).  With
+    ``rngs=False`` only ShapeDtypeStructs are produced (dry-run)."""
+    layout = make_layout(cfg, mesh)
+    all_axes, model, batch_axes = mesh_axes(mesh)
+    emb_ax, _ = emb_axes_for(cfg, mesh)
+    ns_total = int(np.prod(list(mesh.shape.values())))
+    E = cfg.emb_dim
+
+    dense_tree = jax.eval_shape(
+        lambda: init_dense_params(jax.random.PRNGKey(0), cfg))
+    n_dense = dp.ravel_size(dense_tree)
+    padded = -(-n_dense // (ns_total * cfg.num_buckets)) * (
+        ns_total * cfg.num_buckets)
+
+    emb_rows = layout.total_rows
+    emb_spec = P(emb_ax, None)
+
+    structs = {
+        "emb": ({"hi": jax.ShapeDtypeStruct((emb_rows, E), jnp.bfloat16),
+                 "lo": jax.ShapeDtypeStruct((emb_rows, E), jnp.uint16)}
+                if cfg.split_sgd else
+                {"w": jax.ShapeDtypeStruct((emb_rows, E), jnp.float32)}),
+        "dense": {
+            "hi": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+                dense_tree),
+            "lo": jax.ShapeDtypeStruct((padded,), jnp.uint16),
+            "err": (jax.ShapeDtypeStruct((padded,), jnp.float32)
+                    if cfg.compress_grads else None),
+        },
+    }
+    specs = {
+        "emb": jax.tree.map(lambda _: emb_spec, structs["emb"]),
+        "dense": {
+            "hi": jax.tree.map(lambda _: P(), structs["dense"]["hi"]),
+            "lo": P(all_axes),
+            "err": P(all_axes) if cfg.compress_grads else None,
+        },
+    }
+    shardings = jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P) or x is None)
+    return structs, specs, shardings, layout
+
+
+def init_state(key: jax.Array, cfg: DLRMConfig, mesh) -> dict:
+    """Materialize a real initial state (small/smoke configs)."""
+    structs, specs, shardings, layout = state_struct(cfg, mesh)
+    ke, kd = jax.random.split(key)
+    ns_total = int(np.prod(list(mesh.shape.values())))
+    scale = 1.0 / np.sqrt(np.mean(cfg.table_rows))
+    W = jax.random.uniform(ke, (layout.total_rows, cfg.emb_dim),
+                           jnp.float32, -scale, scale)
+    dense = init_dense_params(kd, cfg)
+    arrays = dp.dp_global_arrays(dense, ns_total,
+                                 compress=cfg.compress_grads,
+                                 num_buckets=cfg.num_buckets)
+    if cfg.split_sgd:
+        hi, lo = split_fp32(W)
+        emb = {"hi": hi, "lo": lo}
+    else:
+        emb = {"w": W}
+    state = {"emb": emb,
+             "dense": {"hi": arrays["hi"], "lo": arrays["lo"],
+                       "err": arrays["err"]}}
+    return jax.device_put(state, shardings), layout
+
+
+def batch_struct(cfg: DLRMConfig, mesh, layout) -> tuple[dict, dict]:
+    """(ShapeDtypeStructs, PartitionSpecs) for one global batch."""
+    all_axes, model, batch_axes = mesh_axes(mesh)
+    B, S, Pq = cfg.batch, cfg.spec.num_tables, cfg.pooling
+    if cfg.emb_mode == "row":
+        idx = jax.ShapeDtypeStruct((B, S, Pq), jnp.int32)
+        idx_spec = (P(None, None, None) if cfg.idx_input == "replicated"
+                    else P(all_axes, None, None))
+    else:
+        idx = jax.ShapeDtypeStruct((B, layout.num_padded_slots, Pq),
+                                   jnp.int32)
+        idx_spec = P(batch_axes if batch_axes else None, model, None)
+    structs = {"idx": idx,
+               "dense_x": jax.ShapeDtypeStruct((B, cfg.num_dense),
+                                               jnp.bfloat16),
+               "labels": jax.ShapeDtypeStruct((B,), jnp.float32)}
+    specs = {"idx": idx_spec, "dense_x": P(all_axes, None),
+             "labels": P(all_axes)}
+    return structs, specs
+
+
+def make_train_step(cfg: DLRMConfig, mesh):
+    """Build the jitted hybrid-parallel train step.
+
+    Returns (step, state_shardings, batch_shardings, layout); call as
+    ``new_state, loss = step(state, batch)``.
+    """
+    structs, specs, shardings, layout = state_struct(cfg, mesh)
+    bstructs, bspecs = batch_struct(cfg, mesh, layout)
+    all_axes, model, batch_axes = mesh_axes(mesh)
+    emb_ax, replica_ax = emb_axes_for(cfg, mesh)
+    B = cfg.batch
+
+    def step_local(state, batch):
+        emb_store = state["emb"]
+        W_fwd = emb_store["hi"] if cfg.split_sgd else emb_store["w"]
+        idx = batch["idx"]
+        if cfg.emb_mode == "row" and cfg.idx_input == "sharded":
+            # on-chip index exchange replaces the replicated data loader
+            idx = jax.lax.all_gather(idx, emb_ax, axis=0, tiled=True)
+        emb_out = se.sharded_bag_fwd(layout, W_fwd, idx, emb_ax)  # [b,S,E]
+
+        def loss_fn(dense_hi, emb_out):
+            logits = forward_local(dense_hi, emb_out, batch["dense_x"],
+                                   cfg.mlp_impl)
+            return bce_with_logits(logits, batch["labels"]).sum() / B
+
+        (loss, (g_dense, d_emb)) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))(state["dense"]["hi"], emb_out)
+
+        # --- fused sparse embedding update (C1) --------------------------
+        dY = se.gather_dY(layout, d_emb, emb_ax, replica_ax)
+        if cfg.split_sgd:
+            hi2, lo2 = se.apply_update_scan(
+                layout, (emb_store["hi"], emb_store["lo"]), idx, dY,
+                cfg.lr, emb_ax, split=True, replica_axes=replica_ax)
+            new_emb = {"hi": hi2, "lo": lo2}
+        else:
+            w2 = se.apply_update_scan(layout, emb_store["w"], idx, dY,
+                                      cfg.lr, emb_ax, split=False,
+                                      replica_axes=replica_ax)
+            new_emb = {"w": w2}
+
+        # --- dense RS+AG split-SGD (C4+C5) -------------------------------
+        st = dp.DPState(hi=state["dense"]["hi"], lo_shard=state["dense"]["lo"],
+                        mom_shard=None, err_shard=state["dense"]["err"])
+        st2 = dp.rs_ag_split_sgd(st, g_dense, cfg.lr, all_axes,
+                                 compress=cfg.compress_grads,
+                                 num_buckets=cfg.num_buckets, mean=False)
+        new_state = {"emb": new_emb,
+                     "dense": {"hi": st2.hi, "lo": st2.lo_shard,
+                               "err": st2.err_shard}}
+        return new_state, jax.lax.psum(loss, all_axes)
+
+    step = jax.shard_map(step_local, mesh=mesh,
+                         in_specs=(specs, bspecs),
+                         out_specs=(specs, P()),
+                         check_vma=False)
+    step = jax.jit(step, donate_argnums=(0,))
+    return step, shardings, bspecs, layout
+
+
+def make_eval_step(cfg: DLRMConfig, mesh):
+    """Forward-only scoring step (serving); returns per-sample sigmoid."""
+    structs, specs, shardings, layout = state_struct(cfg, mesh)
+    bstructs, bspecs = batch_struct(cfg, mesh, layout)
+    all_axes, model, batch_axes = mesh_axes(mesh)
+    emb_ax, _ = emb_axes_for(cfg, mesh)
+
+    def eval_local(state, batch):
+        W_fwd = state["emb"]["hi"] if cfg.split_sgd else state["emb"]["w"]
+        idx = batch["idx"]
+        if cfg.emb_mode == "row" and cfg.idx_input == "sharded":
+            idx = jax.lax.all_gather(idx, emb_ax, axis=0, tiled=True)
+        emb_out = se.sharded_bag_fwd(layout, W_fwd, idx, emb_ax)
+        logits = forward_local(state["dense"]["hi"], emb_out,
+                               batch["dense_x"], cfg.mlp_impl)
+        return jax.nn.sigmoid(logits)
+
+    ev = jax.shard_map(eval_local, mesh=mesh, in_specs=(specs, bspecs),
+                       out_specs=P(all_axes), check_vma=False)
+    return jax.jit(ev), shardings, bspecs, layout

@@ -1,0 +1,193 @@
+"""Unified multi-table embedding engine (paper contribution C1).
+
+All S embedding tables of a model are concatenated into ONE row space
+``W in R^{M_total x E}`` with per-table row offsets.  This is what makes the
+paper's race-free update (Alg. 4: partition the row space, each owner applies
+only its own rows) a *sharding rule* instead of a threading trick on TPU, and
+it lets heterogeneous table sizes (MLPerf: 3 .. 40M rows) bin-pack cleanly
+onto a model-parallel axis.
+
+Layout conventions
+------------------
+* ``indices``: int32 ``[B, S, P]`` — P lookups ("multi-hot") per table per
+  sample (the paper's fixed pooling factor P).  Ragged bags are supported via
+  ``bag_lookup_ragged``.
+* ``global rows``: ``g = indices + row_offset[table]`` indexes the unified
+  space.
+* Lookups accumulate in fp32 (long-reduction) regardless of storage dtype.
+
+JAX has no native EmbeddingBag — it is built here from ``jnp.take`` +
+``jax.ops.segment_sum`` per the system brief.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingSpec:
+    """Static description of a unified multi-table embedding space."""
+
+    table_rows: tuple[int, ...]  # M_i per table (original order)
+    dim: int                     # E
+    row_pad: int = 8             # pad each table's rows to this multiple
+
+    @property
+    def num_tables(self) -> int:
+        return len(self.table_rows)
+
+    @property
+    def padded_rows(self) -> np.ndarray:
+        return np.array([_round_up(m, self.row_pad) for m in self.table_rows],
+                        dtype=np.int64)
+
+    @property
+    def row_offsets(self) -> np.ndarray:
+        """Start row of each table in the unified space (original order)."""
+        return np.concatenate([[0], np.cumsum(self.padded_rows)[:-1]]).astype(np.int64)
+
+    @property
+    def total_rows(self) -> int:
+        return int(self.padded_rows.sum())
+
+    def bytes(self, bytes_per_elem: int = 4) -> int:
+        return self.total_rows * self.dim * bytes_per_elem
+
+    # ---- sharding helpers -------------------------------------------------
+    def rows_per_shard(self, num_shards: int) -> int:
+        return _round_up(self.total_rows, num_shards * self.row_pad) // num_shards
+
+    def binpack_tables(self, num_bins: int) -> list[list[int]]:
+        """Greedy bin-pack tables by row count (paper's table-wise placement).
+
+        Returns ``bins[b] = [table ids]`` balanced by rows.  Used by the
+        ``table`` sharding mode of :mod:`repro.core.sharded_embedding`.
+        """
+        order = np.argsort(-self.padded_rows)  # largest first
+        bins: list[list[int]] = [[] for _ in range(num_bins)]
+        loads = np.zeros(num_bins, dtype=np.int64)
+        for t in order:
+            b = int(np.argmin(loads))
+            bins[b].append(int(t))
+            loads[b] += int(self.padded_rows[t])
+        return bins
+
+
+def init_embedding(key: jax.Array, spec: EmbeddingSpec,
+                   dtype=jnp.float32, scale: float | None = None) -> jax.Array:
+    """Initialize the unified table.  DLRM uses U(-1/sqrt(M), 1/sqrt(M)) per
+    table; we use a single scale of the mean table size for simplicity."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(max(1.0, float(np.mean(self_rows(spec)))))
+    return jax.random.uniform(key, (spec.total_rows, spec.dim), dtype=jnp.float32,
+                              minval=-scale, maxval=scale).astype(dtype)
+
+
+def self_rows(spec: EmbeddingSpec) -> np.ndarray:
+    return np.asarray(spec.table_rows, dtype=np.float64)
+
+
+def globalize(spec: EmbeddingSpec, indices: jax.Array) -> jax.Array:
+    """Map per-table indices ``[B, S, P]`` to unified row ids."""
+    off = jnp.asarray(spec.row_offsets, dtype=indices.dtype)
+    return indices + off[None, :, None]
+
+
+# ---------------------------------------------------------------------------
+# Forward bags
+# ---------------------------------------------------------------------------
+
+def bag_lookup(W: jax.Array, g: jax.Array,
+               weights: jax.Array | None = None) -> jax.Array:
+    """EmbeddingBag-sum forward: ``Y[b,s] = sum_p W[g[b,s,p]]`` (paper Alg. 1).
+
+    ``W``: [M, E] (any float dtype), ``g``: [B, S, P] unified row ids.
+    Returns fp32 ``[B, S, E]``.
+    """
+    rows = jnp.take(W, g, axis=0).astype(jnp.float32)  # [B, S, P, E]
+    if weights is not None:
+        rows = rows * weights[..., None].astype(jnp.float32)
+    return rows.sum(axis=2)
+
+
+def bag_lookup_ragged(W: jax.Array, flat_idx: jax.Array, segment_ids: jax.Array,
+                      num_bags: int) -> jax.Array:
+    """Ragged EmbeddingBag: ``Y[n] = sum_{i: seg[i]==n} W[flat_idx[i]]``."""
+    rows = jnp.take(W, flat_idx, axis=0).astype(jnp.float32)
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+
+
+def lookup(W: jax.Array, idx: jax.Array) -> jax.Array:
+    """Plain (non-bagged) lookup, e.g. item sequences: idx [...,] -> [..., E]."""
+    return jnp.take(W, idx, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Fused backward + update (paper contribution C1, the 1.6x standalone win).
+#
+# We never materialize a dense dW [M_total, E].  The cotangent of the bag
+# output dY [B, S, E] is scattered directly into the weight as an SGD step:
+#     W[g[b,s,p]] -= lr * dY[b,s]
+# Duplicate indices accumulate (scatter-add), which is exactly Alg. 3 with the
+# atomicity supplied by XLA's deterministic scatter instead of RTM/atomics.
+# ---------------------------------------------------------------------------
+
+def bag_update(W: jax.Array, g: jax.Array, dY: jax.Array, lr,
+               weights: jax.Array | None = None) -> jax.Array:
+    """Apply the fused sparse SGD step for a bag lookup.
+
+    ``W``: [M, E]; ``g``: [B, S, P]; ``dY``: [B, S, E] cotangent of the bag
+    output.  Returns the updated W (pure-functional scatter-add).
+    """
+    B, S, P = g.shape
+    E = W.shape[1]
+    upd = jnp.broadcast_to(dY[:, :, None, :], (B, S, P, E))
+    if weights is not None:
+        upd = upd * weights[..., None]
+    upd = (-lr * upd.astype(jnp.float32)).reshape(-1, E).astype(W.dtype)
+    return W.at[g.reshape(-1)].add(upd)
+
+
+def bag_grad_rows(g: jax.Array, dY: jax.Array, num_rows: int) -> jax.Array:
+    """Dense gradient (reference / benchmark only): the thing the paper
+    avoids.  Materializes dW [num_rows, E] via segment_sum."""
+    B, S, P = g.shape
+    E = dY.shape[-1]
+    upd = jnp.broadcast_to(dY[:, :, None, :], (B, S, P, E)).reshape(-1, E)
+    return jax.ops.segment_sum(upd.astype(jnp.float32), g.reshape(-1),
+                               num_segments=num_rows)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable bag: gradient flows to the *gathered rows* intermediate, so
+# jax.grad gives a [B,S,P,E] cotangent that the sparse optimizer consumes —
+# never a dense [M,E] one.  Used when the bag output feeds a larger graph.
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def bag_from_rows(rows: jax.Array) -> jax.Array:
+    return rows.astype(jnp.float32).sum(axis=2)
+
+
+def _bag_from_rows_fwd(rows):
+    return bag_from_rows(rows), (rows.shape, rows.dtype)
+
+
+def _bag_from_rows_bwd(res, dY):
+    shape, dtype = res
+    B, S, P, E = shape
+    return (jnp.broadcast_to(dY[:, :, None, :], (B, S, P, E)).astype(dtype),)
+
+
+bag_from_rows.defvjp(_bag_from_rows_fwd, _bag_from_rows_bwd)

@@ -1,0 +1,264 @@
+"""Generic hybrid-parallel (C3) train/eval step factory.
+
+The DLRM step in repro/core/dlrm.py is the paper's exact topology; every
+other recsys architecture (FM, BST, SASRec, DIN) shares the same skeleton —
+model-parallel unified embedding + data-parallel dense net + all-to-all /
+reduce-scatter layout switch + fused sparse update + RS+AG dense optimizer —
+and only differs in the dense function and loss.  This factory hosts that
+skeleton once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.embedding import EmbeddingSpec
+from repro.core import sharded_embedding as se
+from repro.optim import data_parallel as dp
+from repro.optim.split_sgd import split_fp32
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridDef:
+    """What a hybrid-parallel recsys model must provide."""
+    name: str
+    spec: EmbeddingSpec
+    pooling: int                   # P (max lookups per slot)
+    batch: int                     # global batch
+    init_dense: Callable[[jax.Array], Any]
+    # dense_loss(dense_hi, emb_out [b,S,E] fp32, batch) -> per-shard SUM loss
+    dense_loss: Callable[[Any, jax.Array, dict], jax.Array]
+    # dense_score(dense_hi, emb_out, batch) -> [b] scores
+    dense_score: Callable[[Any, jax.Array, dict], jax.Array]
+    # extra batch fields: name -> (shape-after-B, dtype); all batch-sharded
+    extras: dict = dataclasses.field(default_factory=dict)
+    # slot -> table map (sequence models share one item table across slots)
+    slot_to_table: Optional[tuple] = None
+    emb_mode: str = "row"
+    split_sgd: bool = True
+    compress_grads: bool = False
+    num_buckets: int = 4
+    lr: float = 0.01
+    emb_lr: float = 0.01
+    idx_input: str = "replicated"   # 'sharded': on-chip index exchange
+
+
+def _mesh_axes(mesh):
+    names = tuple(mesh.axis_names)
+    return names, names[-1], names[:-1]
+
+
+def _emb_axes(mdef, mesh):
+    all_axes, model, batch_axes = _mesh_axes(mesh)
+    if mdef.emb_mode == "row":
+        return all_axes, None
+    return model, (batch_axes if batch_axes else None)
+
+
+def make_layout(mdef: HybridDef, mesh) -> se.ShardedEmbeddingLayout:
+    axes, _ = _emb_axes(mdef, mesh)
+    ns = int(np.prod([mesh.shape[a] for a in (axes if isinstance(axes, tuple)
+                                              else (axes,))]))
+    return se.make_layout(mdef.spec, ns, mdef.emb_mode,
+                          slot_to_table=mdef.slot_to_table)
+
+
+def state_struct(mdef: HybridDef, mesh):
+    layout = make_layout(mdef, mesh)
+    all_axes, model, batch_axes = _mesh_axes(mesh)
+    emb_ax, _ = _emb_axes(mdef, mesh)
+    ns_total = int(np.prod(list(mesh.shape.values())))
+    E = mdef.spec.dim
+    dense_tree = jax.eval_shape(lambda: mdef.init_dense(jax.random.PRNGKey(0)))
+    n_dense = dp.ravel_size(dense_tree)
+    padded = -(-n_dense // (ns_total * mdef.num_buckets)) * (
+        ns_total * mdef.num_buckets)
+    rows = layout.total_rows
+    structs = {
+        "emb": ({"hi": jax.ShapeDtypeStruct((rows, E), jnp.bfloat16),
+                 "lo": jax.ShapeDtypeStruct((rows, E), jnp.uint16)}
+                if mdef.split_sgd else
+                {"w": jax.ShapeDtypeStruct((rows, E), jnp.float32)}),
+        "dense": {
+            "hi": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+                dense_tree),
+            "lo": jax.ShapeDtypeStruct((padded,), jnp.uint16),
+            "err": (jax.ShapeDtypeStruct((padded,), jnp.float32)
+                    if mdef.compress_grads else None),
+        },
+    }
+    specs = {
+        "emb": jax.tree.map(lambda _: P(emb_ax, None), structs["emb"]),
+        "dense": {
+            "hi": jax.tree.map(lambda _: P(), structs["dense"]["hi"]),
+            "lo": P(all_axes),
+            "err": P(all_axes) if mdef.compress_grads else None,
+        },
+    }
+    shardings = jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P) or x is None)
+    return structs, specs, shardings, layout
+
+
+def batch_struct(mdef: HybridDef, mesh, layout, batch: int | None = None):
+    all_axes, model, batch_axes = _mesh_axes(mesh)
+    B = batch or mdef.batch
+    S, Pq = layout.num_orig_slots, mdef.pooling
+    if mdef.emb_mode == "row":
+        idx = jax.ShapeDtypeStruct((B, S, Pq), jnp.int32)
+        idx_spec = (P(None, None, None) if mdef.idx_input == "replicated"
+                    else P(all_axes, None, None))
+    else:
+        idx = jax.ShapeDtypeStruct((B, layout.num_padded_slots, Pq),
+                                   jnp.int32)
+        idx_spec = P(batch_axes if batch_axes else None, model, None)
+    structs = {"idx": idx}
+    specs = {"idx": idx_spec}
+    for name, (shape, dtype) in mdef.extras.items():
+        structs[name] = jax.ShapeDtypeStruct((B, *shape), dtype)
+        specs[name] = P(all_axes, *([None] * len(shape)))
+    return structs, specs
+
+
+def init_state(key, mdef: HybridDef, mesh):
+    structs, specs, shardings, layout = state_struct(mdef, mesh)
+    ke, kd = jax.random.split(key)
+    ns_total = int(np.prod(list(mesh.shape.values())))
+    scale = 1.0 / np.sqrt(np.mean(mdef.spec.table_rows))
+    W = jax.random.uniform(ke, (layout.total_rows, mdef.spec.dim),
+                           jnp.float32, -scale, scale)
+    dense = mdef.init_dense(kd)
+    arrays = dp.dp_global_arrays(dense, ns_total,
+                                 compress=mdef.compress_grads,
+                                 num_buckets=mdef.num_buckets)
+    emb = ({"hi": split_fp32(W)[0], "lo": split_fp32(W)[1]}
+           if mdef.split_sgd else {"w": W})
+    state = {"emb": emb, "dense": {"hi": arrays["hi"], "lo": arrays["lo"],
+                                   "err": arrays["err"]}}
+    return jax.device_put(state, shardings), layout
+
+
+def make_train_step(mdef: HybridDef, mesh):
+    structs, specs, shardings, layout = state_struct(mdef, mesh)
+    bstructs, bspecs = batch_struct(mdef, mesh, layout)
+    all_axes, model, batch_axes = _mesh_axes(mesh)
+    emb_ax, replica_ax = _emb_axes(mdef, mesh)
+    B = mdef.batch
+
+    def step_local(state, batch):
+        emb_store = state["emb"]
+        W_fwd = emb_store["hi"] if mdef.split_sgd else emb_store["w"]
+        idx = batch["idx"]
+        if mdef.emb_mode == "row" and mdef.idx_input == "sharded":
+            idx = jax.lax.all_gather(idx, emb_ax, axis=0, tiled=True)
+        emb_out = se.sharded_bag_fwd(layout, W_fwd, idx, emb_ax)
+
+        def loss_fn(dense_hi, emb_out):
+            return mdef.dense_loss(dense_hi, emb_out, batch) / B
+
+        (loss, (g_dense, d_emb)) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))(state["dense"]["hi"], emb_out)
+
+        dY = se.gather_dY(layout, d_emb, emb_ax, replica_ax)
+        if mdef.split_sgd:
+            hi2, lo2 = se.apply_update_scan(
+                layout, (emb_store["hi"], emb_store["lo"]), idx, dY,
+                mdef.emb_lr, emb_ax, split=True, replica_axes=replica_ax)
+            new_emb = {"hi": hi2, "lo": lo2}
+        else:
+            w2 = se.apply_update_scan(layout, emb_store["w"], idx, dY,
+                                      mdef.emb_lr, emb_ax, split=False,
+                                      replica_axes=replica_ax)
+            new_emb = {"w": w2}
+
+        st = dp.DPState(hi=state["dense"]["hi"], lo_shard=state["dense"]["lo"],
+                        mom_shard=None, err_shard=state["dense"]["err"])
+        st2 = dp.rs_ag_split_sgd(st, g_dense, mdef.lr, all_axes,
+                                 compress=mdef.compress_grads,
+                                 num_buckets=mdef.num_buckets, mean=False)
+        new_state = {"emb": new_emb,
+                     "dense": {"hi": st2.hi, "lo": st2.lo_shard,
+                               "err": st2.err_shard}}
+        return new_state, jax.lax.psum(loss, all_axes)
+
+    step = jax.shard_map(step_local, mesh=mesh, in_specs=(specs, bspecs),
+                         out_specs=(specs, P()), check_vma=False)
+    return jax.jit(step, donate_argnums=(0,)), shardings, bspecs, layout
+
+
+def make_score_step(mdef: HybridDef, mesh, batch: int | None = None):
+    """Forward-only scoring (serve_p99 / serve_bulk shapes)."""
+    structs, specs, shardings, layout = state_struct(mdef, mesh)
+    bstructs, bspecs = batch_struct(mdef, mesh, layout, batch)
+    all_axes, model, batch_axes = _mesh_axes(mesh)
+    emb_ax, _ = _emb_axes(mdef, mesh)
+
+    def score_local(state, batch_d):
+        W_fwd = state["emb"]["hi"] if mdef.split_sgd else state["emb"]["w"]
+        idx = batch_d["idx"]
+        if mdef.emb_mode == "row" and mdef.idx_input == "sharded":
+            idx = jax.lax.all_gather(idx, emb_ax, axis=0, tiled=True)
+        emb_out = se.sharded_bag_fwd(layout, W_fwd, idx, emb_ax)
+        return mdef.dense_score(state["dense"]["hi"], emb_out, batch_d)
+
+    sc = jax.shard_map(score_local, mesh=mesh, in_specs=(specs, bspecs),
+                       out_specs=P(all_axes), check_vma=False)
+    return jax.jit(sc), shardings, bspecs, layout
+
+
+def make_retrieval_step(mdef: HybridDef, mesh, n_candidates: int,
+                        target_slot: int, topk: int = 128):
+    """retrieval_cand shape: ONE query against ``n_candidates`` candidates.
+
+    The candidate embedding matrix [n_cand, E] enters pre-sharded over the
+    full mesh (the offline-built candidate index of a serving system); the
+    query's bag output is computed replicated (psum), the target slot is
+    substituted with each local candidate, the dense scorer runs batched
+    over the local chunk, and a distributed top-k merge produces the global
+    result.  Never a loop over candidates."""
+    structs, specs, shardings, layout = state_struct(mdef, mesh)
+    bstructs, bspecs = batch_struct(mdef, mesh, layout, batch=1)
+    bspecs = jax.tree.map(lambda s: P(*([None] * len(s))), bspecs,
+                          is_leaf=lambda x: isinstance(x, P))  # B=1: replicate
+    all_axes, model, batch_axes = _mesh_axes(mesh)
+    emb_ax, _ = _emb_axes(mdef, mesh)
+    assert mdef.emb_mode == "row", "retrieval step requires row mode"
+    ns = int(np.prod(list(mesh.shape.values())))
+    per = n_candidates // ns
+    E = mdef.spec.dim
+
+    def local(state, batch, cand):
+        W_fwd = state["emb"]["hi"] if mdef.split_sgd else state["emb"]["w"]
+        emb = se.row_bag_fwd_replicated(layout, W_fwd, batch["idx"], emb_ax)
+        emb_c = jnp.broadcast_to(emb, (per,) + emb.shape[1:])
+        emb_c = emb_c.at[:, target_slot].set(cand.astype(jnp.float32))
+        batch_c = {k: (jnp.broadcast_to(v, (per,) + v.shape[1:])
+                       if hasattr(v, "shape") and v.shape[:1] == (1,) else v)
+                   for k, v in batch.items()}
+        scores = mdef.dense_score(state["dense"]["hi"], emb_c, batch_c)
+        v, i = jax.lax.top_k(scores, min(topk, per))
+        i = i + jax.lax.axis_index(all_axes) * per
+        vg = jax.lax.all_gather(v, all_axes, axis=0, tiled=True)
+        ig = jax.lax.all_gather(i, all_axes, axis=0, tiled=True)
+        vv, pos = jax.lax.top_k(vg, topk)
+        return vv, jnp.take(ig, pos)
+
+    cand_struct = jax.ShapeDtypeStruct((n_candidates, E), jnp.bfloat16)
+    cand_spec = P(all_axes, None)
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(specs, bspecs, cand_spec),
+                       out_specs=(P(), P()), check_vma=False)
+    arg_structs = (structs, bstructs, cand_struct)
+    arg_shardings = (shardings,
+                     jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
+                                  is_leaf=lambda x: isinstance(x, P)),
+                     NamedSharding(mesh, cand_spec))
+    return jax.jit(fn), arg_structs, arg_shardings, layout

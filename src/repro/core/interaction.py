@@ -1,0 +1,51 @@
+"""DLRM feature-interaction ops (paper Sect. II: "self dot product ...
+translates to a batched matrix-matrix multiplication as a key kernel")."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tril_indices(F: int, offset: int = -1) -> tuple[np.ndarray, np.ndarray]:
+    """Static lower-triangle (i>j) index pair for the self-dot output."""
+    return np.tril_indices(F, offset)
+
+
+def dot_interaction(dense: jax.Array, emb: jax.Array,
+                    self_interaction: bool = False) -> jax.Array:
+    """DLRM dot interaction.
+
+    ``dense``: [B, E] bottom-MLP output; ``emb``: [B, S, E] bag outputs.
+    Concatenates into Z [B, F=S+1, E], computes Z Z^T and keeps the strict
+    lower triangle, then concatenates the dense vector back:
+    output [B, E + F(F-1)/2].
+    """
+    B, S, E = emb.shape
+    Z = jnp.concatenate([dense[:, None, :], emb], axis=1)  # [B, F, E]
+    F = S + 1
+    ZZt = jnp.einsum("bfe,bge->bfg", Z, Z,
+                     preferred_element_type=jnp.float32)  # [B, F, F]
+    li, lj = tril_indices(F, 0 if self_interaction else -1)
+    flat = ZZt.reshape(B, F * F)
+    pairs = jnp.take(flat, jnp.asarray(li * F + lj), axis=1)
+    return jnp.concatenate([dense.astype(jnp.float32), pairs], axis=1)
+
+
+def concat_interaction(dense: jax.Array, emb: jax.Array) -> jax.Array:
+    """The simple 'Concat' interaction variant from the paper."""
+    B, S, E = emb.shape
+    return jnp.concatenate(
+        [dense.astype(jnp.float32), emb.reshape(B, S * E).astype(jnp.float32)],
+        axis=1)
+
+
+def interaction_output_dim(num_features: int, dim: int,
+                           kind: str = "dot", self_interaction: bool = False) -> int:
+    """Static output width of the interaction (F = S+1 incl. bottom MLP)."""
+    F = num_features
+    if kind == "concat":
+        return F * dim
+    pairs = F * (F + 1) // 2 if self_interaction else F * (F - 1) // 2
+    return dim + pairs

@@ -1,0 +1,442 @@
+"""Hybrid-parallel embedding (paper contribution C3) as shard_map-inner ops.
+
+The model side addresses the embedding through SLOTS: the index array is
+``[B, S_slots, P]`` and each slot maps to a table via ``slot_to_table``
+(identity by default).  Slot sharing is how sequence models reuse one item
+table across positions (BST/SASRec/DIN) — updates from all slots of a table
+accumulate into the same rows.
+
+Two model-parallel placements over the unified row space of
+:class:`repro.core.embedding.EmbeddingSpec`:
+
+``table`` (paper-faithful)
+    Tables are greedy-bin-packed onto the ``model`` axis (paper IV-B: "we
+    simply distribute tables across available ranks").  Each shard computes
+    full-batch bags for its own slots, then ONE fused
+    ``jax.lax.all_to_all`` switches model->data parallel layout before the
+    interaction — the end state of the paper's ScatterList -> Fused Scatter ->
+    Alltoall hillclimb.  Max model-parallel width = number of tables
+    (paper Tab. II "Maximum ranks to scale").
+
+``row`` (beyond-paper)
+    Every shard owns a contiguous row-range of ALL tables — the TPU-native
+    generalization of the race-free update (Alg. 4): ownership is the
+    partition.  Forward = masked local partial bags + ``psum_scatter`` (the
+    all-to-all and the bag reduction fuse into one reduce-scatter); width is
+    unbounded by the table count, which is what 1000+ node meshes need.
+
+Both modes expose:
+    fwd:     idx (+ local weight shard) -> [B_mp, S, E] batch-sharded output
+    update:  dY [B_mp, S, E] -> new local weight shard (fused bwd+optimizer,
+             contribution C1 — no dense dW is ever materialized)
+
+All functions are designed to run INSIDE ``jax.shard_map``; ``axis_name`` is
+the model axis (possibly a tuple of axes).  ``B`` below is the per-data-shard
+batch; the fwd output is further batch-split over the model axis
+(B_mp = B / num_shards), so the dense net downstream is data-parallel over
+every mesh axis, exactly like the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import EmbeddingSpec, _round_up
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedEmbeddingLayout:
+    """Static placement of a unified embedding space over ``num_shards``."""
+
+    spec: EmbeddingSpec
+    num_shards: int
+    mode: str                      # "row" | "table"
+    rows_per_shard: int
+    slot_to_table: np.ndarray      # [S_slots] table id per model slot
+    # row mode: global row offset per SLOT:
+    row_offsets: Optional[np.ndarray] = None
+    # table mode:
+    slots_per_shard: int = 0
+    # padded (bin-major) slot order; -1 for dummy:
+    padded_slots: Optional[np.ndarray] = None   # [num_shards*slots_per_shard]
+    # row offset (relative to shard start) per padded position:
+    slot_local_offsets: Optional[np.ndarray] = None
+    # original slot -> padded position:
+    slot_position: Optional[np.ndarray] = None
+
+    @property
+    def total_rows(self) -> int:
+        return self.num_shards * self.rows_per_shard
+
+    @property
+    def num_orig_slots(self) -> int:
+        return len(self.slot_to_table)
+
+    @property
+    def num_padded_slots(self) -> int:
+        return self.num_shards * self.slots_per_shard
+
+
+def make_layout(spec: EmbeddingSpec, num_shards: int, mode: str = "row",
+                slot_to_table=None) -> ShardedEmbeddingLayout:
+    s2t = (np.arange(spec.num_tables, dtype=np.int64)
+           if slot_to_table is None
+           else np.asarray(slot_to_table, dtype=np.int64))
+    if mode == "row":
+        rows = _round_up(spec.total_rows,
+                         num_shards * spec.row_pad) // num_shards
+        return ShardedEmbeddingLayout(
+            spec=spec, num_shards=num_shards, mode="row",
+            rows_per_shard=rows, slot_to_table=s2t,
+            row_offsets=spec.row_offsets[s2t])
+    if mode != "table":
+        raise ValueError(f"unknown mode {mode!r}")
+    bins = spec.binpack_tables(num_shards)   # tables -> bins (may be empty)
+    padded = spec.padded_rows
+    # bin-local row offset per table
+    table_bin = np.zeros(spec.num_tables, np.int64)
+    table_off = np.zeros(spec.num_tables, np.int64)
+    max_bin_rows = 0
+    for b, tables in enumerate(bins):
+        off = 0
+        for t in tables:
+            table_bin[t] = b
+            table_off[t] = off
+            off += int(padded[t])
+        max_bin_rows = max(max_bin_rows, off)
+    # +row_pad spare guarantees a scratch row for dummy slots on every shard.
+    rows_per_shard = _round_up(max_bin_rows + spec.row_pad, spec.row_pad)
+    # group SLOTS by their table's bin
+    slots_by_bin: list[list[int]] = [[] for _ in range(num_shards)]
+    for s, t in enumerate(s2t):
+        slots_by_bin[table_bin[t]].append(s)
+    slots_per_shard = max(1, max(len(g) for g in slots_by_bin))
+    n_pad = num_shards * slots_per_shard
+    padded_slots = np.full(n_pad, -1, np.int64)
+    local_off = np.full(n_pad, rows_per_shard - 1, np.int64)  # dummies
+    slot_position = np.zeros(len(s2t), np.int64)
+    for b, group in enumerate(slots_by_bin):
+        for j, s in enumerate(group):
+            p = b * slots_per_shard + j
+            padded_slots[p] = s
+            local_off[p] = table_off[s2t[s]]
+            slot_position[s] = p
+    return ShardedEmbeddingLayout(
+        spec=spec, num_shards=num_shards, mode="table",
+        rows_per_shard=rows_per_shard, slot_to_table=s2t,
+        slots_per_shard=slots_per_shard, padded_slots=padded_slots,
+        slot_local_offsets=local_off, slot_position=slot_position)
+
+
+def permute_indices(layout: ShardedEmbeddingLayout, idx: jax.Array
+                    ) -> jax.Array:
+    """[B, S, P] original-slot indices -> [B, num_padded_slots, P] padded
+    order (table mode).  Dummy slots read index 0 (the scratch row)."""
+    assert layout.mode == "table"
+    src = np.where(layout.padded_slots >= 0, layout.padded_slots, 0)
+    out = jnp.take(idx, jnp.asarray(src), axis=1)
+    dummy = jnp.asarray((layout.padded_slots < 0))[None, :, None]
+    return jnp.where(dummy, 0, out)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _partial_bag_masked(W_local: jax.Array, local_rows: jax.Array,
+                        valid: jax.Array) -> jax.Array:
+    rows = jnp.take(W_local, jnp.clip(local_rows, 0, W_local.shape[0] - 1),
+                    axis=0).astype(jnp.float32)
+    rows = jnp.where(valid[..., None], rows, 0.0)
+    return rows.sum(axis=2)  # [B, S, E] fp32
+
+
+def _batch_chunks(B: int, S: int, P: int, E: int,
+                  budget_bytes: int | None = None) -> int:
+    """Pick a batch-chunk count so the transient [chunk,S,P,E] fp32 gather
+    stays under ``budget_bytes`` (paper configs reach P=100: the unchunked
+    expansion would be tens of GB).  REPRO_EMB_CHUNK_BUDGET overrides (the
+    roofline cost builds disable chunking so cost_analysis sees one body)."""
+    import os as _os
+    if budget_bytes is None:
+        budget_bytes = int(_os.environ.get("REPRO_EMB_CHUNK_BUDGET",
+                                           128 * 2**20))
+    per_row = S * P * E * 4
+    chunk = max(1, budget_bytes // max(per_row, 1))
+    if chunk >= B:
+        return 1
+    n = (B + chunk - 1) // chunk
+    while B % n:  # need uniform chunks for lax.scan
+        n += 1
+    return n
+
+
+def row_sharded_bag_fwd(layout: ShardedEmbeddingLayout, W_local: jax.Array,
+                        idx: jax.Array, axis_name) -> jax.Array:
+    """Row mode forward.  ``axis_name`` may be a TUPLE of mesh axes — the
+    production config shards the row space over the FULL mesh (the paper's
+    pure model-parallel embedding, scaled past the table count).  ``idx``
+    [B, S, P] is replicated over ``axis_name``; output is
+    [B/num_shards, S, E] (reduce-scatter over the batch dim).
+
+    The gather+bag is scanned over batch chunks so the [chunk,S,P,E]
+    transient stays bounded for large pooling factors."""
+    g = idx + jnp.asarray(layout.row_offsets, idx.dtype)[None, :, None]
+    start = jax.lax.axis_index(axis_name) * layout.rows_per_shard
+    local = g - start
+    B, S, P = idx.shape
+    E = W_local.shape[1]
+    n = _batch_chunks(B, S, P, E)
+    if n == 1:
+        valid = (local >= 0) & (local < layout.rows_per_shard)
+        part = _partial_bag_masked(W_local, local, valid)
+    else:
+        def body(_, loc_c):
+            valid = (loc_c >= 0) & (loc_c < layout.rows_per_shard)
+            return None, _partial_bag_masked(W_local, loc_c, valid)
+        _, part = jax.lax.scan(body, None,
+                               local.reshape(n, B // n, S, P))
+        part = part.reshape(B, S, E)
+    # bf16 wire (HC3): the reduce-scatter is the dominant collective of the
+    # hybrid step and the bag output feeds a bf16 dense net anyway.
+    part = part.astype(jnp.bfloat16)
+    return jax.lax.psum_scatter(part, axis_name, scatter_dimension=0,
+                                tiled=True).astype(jnp.float32)
+
+
+def table_sharded_bag_fwd(layout: ShardedEmbeddingLayout, W_local: jax.Array,
+                          idx_slots_local: jax.Array, axis_name
+                          ) -> jax.Array:
+    """Table mode forward.  ``idx_slots_local`` [B, slots_per_shard, P] is
+    the padded-slot index array already sharded over the model axis.  Output
+    is [B/num_shards, S_orig, E] in ORIGINAL slot order."""
+    K = layout.slots_per_shard
+    shard = jax.lax.axis_index(axis_name)
+    off_all = jnp.asarray(layout.slot_local_offsets).reshape(
+        layout.num_shards, K)
+    local = idx_slots_local + jax.lax.dynamic_index_in_dim(
+        off_all, shard, axis=0, keepdims=False)[None, :, None]
+    B, _, P = local.shape
+    E = W_local.shape[1]
+    n = _batch_chunks(B, K, P, E)
+
+    def bag(loc):
+        rows = jnp.take(W_local, jnp.clip(loc, 0, W_local.shape[0] - 1),
+                        axis=0).astype(jnp.float32)
+        return rows.sum(axis=2)
+
+    if n == 1:
+        part = bag(local)                        # [B, K, E] full local batch
+    else:
+        _, part = jax.lax.scan(lambda c, l: (None, bag(l)), None,
+                               local.reshape(n, B // n, K, P))
+        part = part.reshape(B, K, E)
+    out = jax.lax.all_to_all(part, axis_name, split_axis=0, concat_axis=1,
+                             tiled=True)         # [B/ns, num_padded, E]
+    # back to original slot order (drop dummy slots):
+    return jnp.take(out, jnp.asarray(layout.slot_position), axis=1)
+
+
+def sharded_bag_fwd(layout: ShardedEmbeddingLayout, W_local: jax.Array,
+                    idx_local: jax.Array, axis_name) -> jax.Array:
+    if layout.mode == "row":
+        return row_sharded_bag_fwd(layout, W_local, idx_local, axis_name)
+    return table_sharded_bag_fwd(layout, W_local, idx_local, axis_name)
+
+
+def row_bag_fwd_replicated(layout: ShardedEmbeddingLayout, W_local, idx,
+                           axis_name) -> jax.Array:
+    """Row-mode bag with a REPLICATED [B, S, E] output (psum instead of
+    reduce-scatter).  Used when B < num_shards, e.g. the retrieval step's
+    single query."""
+    local, valid = _local_rows(layout, idx, axis_name)
+    part = _partial_bag_masked(W_local, local, valid)
+    return jax.lax.psum(part, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Fused backward + update (sparse optimizer; C1)
+# ---------------------------------------------------------------------------
+
+def _local_rows(layout: ShardedEmbeddingLayout, idx_local: jax.Array,
+                axis_name) -> tuple[jax.Array, jax.Array]:
+    """(local_row [B,S,P], valid [B,S,P]) for this shard, either mode."""
+    if layout.mode == "row":
+        g = idx_local + jnp.asarray(layout.row_offsets,
+                                    idx_local.dtype)[None, :, None]
+        start = jax.lax.axis_index(axis_name) * layout.rows_per_shard
+        local = g - start
+        valid = (local >= 0) & (local < layout.rows_per_shard)
+        return local, valid
+    K = layout.slots_per_shard
+    shard = jax.lax.axis_index(axis_name)
+    off_all = jnp.asarray(layout.slot_local_offsets).reshape(
+        layout.num_shards, K)
+    local = idx_local + jax.lax.dynamic_index_in_dim(
+        off_all, shard, axis=0, keepdims=False)[None, :, None]
+    valid = jnp.ones(local.shape, bool)
+    return local, valid
+
+
+def gather_dY(layout: ShardedEmbeddingLayout, dY_mp: jax.Array, axis_name,
+              replica_axes=None) -> jax.Array:
+    """Bring the batch-model-sharded cotangent dY [B/ns, S, E] back to the
+    layout each shard scatters from: row mode all-gathers the batch over the
+    model axes; table mode inverse-all_to_alls to [B, K, E] padded-slot order
+    (plus an optional replica gather over the data axes)."""
+    if layout.mode == "row":
+        return jax.lax.all_gather(dY_mp.astype(jnp.bfloat16), axis_name,
+                                  axis=0, tiled=True).astype(jnp.float32)
+    src = np.where(layout.padded_slots >= 0, layout.padded_slots, 0)
+    dY_slots = jnp.take(dY_mp, jnp.asarray(src), axis=1)
+    dummy = jnp.asarray(layout.padded_slots < 0)[None, :, None]
+    dY_slots = jnp.where(dummy, 0.0, dY_slots)
+    dY_local = jax.lax.all_to_all(dY_slots, axis_name, split_axis=1,
+                                  concat_axis=0, tiled=True)
+    if replica_axes is not None:
+        dY_local = jax.lax.all_gather(dY_local, replica_axes, axis=0,
+                                      tiled=True)
+    return dY_local
+
+
+def apply_rows_sgd(W_local: jax.Array, tgt: jax.Array, grad: jax.Array,
+                   lr) -> jax.Array:
+    """Plain scatter-add SGD on local rows (duplicates accumulate) —
+    Alg. 3 with XLA's deterministic scatter supplying the atomicity."""
+    return W_local.at[tgt].add((-lr * grad).astype(W_local.dtype))
+
+
+def apply_update_scan(layout: ShardedEmbeddingLayout, W_local, idx_local,
+                      dY: jax.Array, lr, axis_name, split: bool = False,
+                      replica_axes=None):
+    """Fused sparse bwd+SGD, scanned over batch chunks (bounded transients;
+    paper configs reach P=100 where the naive [B,S,P,E] expansion is tens
+    of GB).
+
+    ``W_local``: [rows, E] array, or a (hi, lo) pair when ``split``.
+    ``idx_local``: [B, S_or_K, P]; ``dY``: matching [B, S_or_K, E] (already
+    passed through :func:`gather_dY`).  In table mode with replica axes the
+    index array is gathered the same way as dY."""
+    if layout.mode == "table" and replica_axes is not None:
+        idx_local = jax.lax.all_gather(idx_local, replica_axes, axis=0,
+                                       tiled=True)
+    local, valid = _local_rows(layout, idx_local, axis_name)
+    B, S, P = local.shape
+    E = dY.shape[-1]
+    n = _batch_chunks(B, S, P, E)
+    cb = B // n
+
+    def chunk_update(W, loc_c, val_c, dY_c):
+        grad = jnp.broadcast_to(dY_c[:, :, None, :],
+                                (cb, S, P, E)).astype(jnp.float32)
+        grad = jnp.where(val_c[..., None], grad, 0.0).reshape(-1, E)
+        tgt = jnp.where(val_c, loc_c, 0).reshape(-1)
+        if split:
+            hi, lo = W
+            return apply_rows_split_sgd(hi, lo, tgt, grad, lr)
+        return apply_rows_sgd(W, tgt, grad, lr)
+
+    if n == 1:
+        return chunk_update(W_local, local, valid, dY)
+
+    def body(W, inp):
+        return chunk_update(W, *inp), None
+
+    xs = (local.reshape(n, cb, S, P), valid.reshape(n, cb, S, P),
+          dY.reshape(n, cb, S, E))
+    W_out, _ = jax.lax.scan(body, W_local, xs)
+    return W_out
+
+
+def row_grad_rows(layout: ShardedEmbeddingLayout, idx: jax.Array,
+                  dY_mp: jax.Array, axis_name
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Row mode (unchunked; tests / small configs): all-gather dY over the
+    model axes (mirror of the fwd reduce-scatter), mask to OWNED rows —
+    Alg. 4 as a sharding rule.  Returns (tgt [n], grad [n, E])."""
+    dY = jax.lax.all_gather(dY_mp, axis_name, axis=0, tiled=True)
+    local, valid = _local_rows(layout, idx, axis_name)
+    B, S, P = idx.shape
+    E = dY.shape[-1]
+    grad = jnp.broadcast_to(dY[:, :, None, :], (B, S, P, E)
+                            ).astype(jnp.float32)
+    grad = jnp.where(valid[..., None], grad, 0.0)
+    tgt = jnp.where(valid, local, 0).reshape(-1)
+    return tgt, grad.reshape(-1, E)
+
+
+def table_grad_rows(layout: ShardedEmbeddingLayout, idx_slots_local,
+                    dY_mp: jax.Array, axis_name
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Table mode (unchunked; tests / small configs)."""
+    dY_local = gather_dY(layout, dY_mp, axis_name)
+    local, valid = _local_rows(layout, idx_slots_local, axis_name)
+    B, K, P = local.shape
+    E = dY_local.shape[-1]
+    grad = jnp.broadcast_to(dY_local[:, :, None, :], (B, K, P, E))
+    tgt = jnp.clip(local, 0, layout.rows_per_shard - 1).reshape(-1)
+    return tgt, grad.astype(jnp.float32).reshape(-1, E)
+
+
+def grad_rows(layout: ShardedEmbeddingLayout, idx_local: jax.Array,
+              dY_mp: jax.Array, axis_name) -> tuple[jax.Array, jax.Array]:
+    if layout.mode == "row":
+        return row_grad_rows(layout, idx_local, dY_mp, axis_name)
+    return table_grad_rows(layout, idx_local, dY_mp, axis_name)
+
+
+def replicate_grad_rows(tgt: jax.Array, grad: jax.Array, replica_axes
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Table mode on a 2D+ mesh replicates each table shard over the data
+    axes; every replica must apply the updates of ALL replicas to stay
+    consistent.  All-gathers the sparse (tgt, grad) row lists over
+    ``replica_axes`` — the paper-noted cost of table-wise placement on wide
+    meshes (row mode avoids it entirely)."""
+    tgt_all = jax.lax.all_gather(tgt, replica_axes, axis=0, tiled=True)
+    grad_all = jax.lax.all_gather(grad, replica_axes, axis=0, tiled=True)
+    return tgt_all, grad_all
+
+
+# ---------------------------------------------------------------------------
+# Split-SGD-BF16 sparse row update (contribution C5 on the sparse path).
+# Gather-modify-scatter needs duplicate indices PRE-REDUCED (unlike
+# scatter-add); we dedup with a sort + run-length segment-sum, then apply an
+# exact fp32 update on the touched rows only.
+# ---------------------------------------------------------------------------
+
+def dedup_rows(tgt: jax.Array, upd: jax.Array, num_rows: int
+               ) -> tuple[jax.Array, jax.Array]:
+    """Sum duplicate targets.  Returns (rep [n], summed [n, E]); positions
+    for empty run segments get rep == num_rows (out of bounds -> the
+    subsequent scatter DROPS them, JAX's default OOB-scatter mode)."""
+    order = jnp.argsort(tgt)
+    sg = jnp.take(tgt, order)
+    su = jnp.take(upd, order, axis=0)
+    newseg = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              (sg[1:] != sg[:-1]).astype(jnp.int32)])
+    uid = jnp.cumsum(newseg)
+    n = tgt.shape[0]
+    summed = jax.ops.segment_sum(su, uid, num_segments=n)
+    rep = jnp.full((n,), num_rows, dtype=sg.dtype).at[uid].min(sg)
+    return rep, summed
+
+
+def apply_rows_split_sgd(hi: jax.Array, lo: jax.Array, tgt: jax.Array,
+                         grad: jax.Array, lr) -> tuple[jax.Array, jax.Array]:
+    """Exact-fp32 sparse SGD on split-bf16 storage (see
+    repro.optim.split_sgd).  ``tgt`` may contain duplicates."""
+    from repro.optim.split_sgd import combine_split, split_fp32
+    rep, summed = dedup_rows(tgt, grad, hi.shape[0])
+    safe = jnp.minimum(rep, hi.shape[0] - 1)   # gather side must be in-bounds
+    h = jnp.take(hi, safe, axis=0)
+    l = jnp.take(lo, safe, axis=0)
+    w32 = combine_split(h, l)
+    w32 = w32 - lr * summed
+    nh, nl = split_fp32(w32)
+    # rep == num_rows rows (empty segments) are dropped by the scatter.
+    return hi.at[rep].set(nh), lo.at[rep].set(nl)

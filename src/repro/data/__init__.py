@@ -1,0 +1,1 @@
+from repro.data import graph, synthetic  # noqa: F401

@@ -1,0 +1,117 @@
+"""Graph generation + a REAL fanout neighbor sampler (minibatch_lg needs
+one, per the brief).  All host-side numpy, seeded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    indptr: np.ndarray     # [N+1]
+    indices: np.ndarray    # [E] neighbor ids
+    n_nodes: int
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.indices)
+
+
+def random_powerlaw_graph(n_nodes: int, n_edges: int, seed: int = 0,
+                          alpha: float = 1.1) -> CSRGraph:
+    """Degree-skewed random graph in CSR (preferential-attachment-ish:
+    endpoints drawn from a zipf over node ids)."""
+    rng = np.random.default_rng(seed)
+    u = rng.random(n_edges)
+    src = np.minimum((u ** (-1.0 / alpha) - 1.0).astype(np.int64),
+                     n_nodes - 1)
+    dst = rng.integers(0, n_nodes, n_edges)
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSRGraph(indptr, dst.astype(np.int32), n_nodes)
+
+
+def random_edge_list(n_nodes: int, n_edges: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, n_nodes, n_edges).astype(np.int32),
+            rng.integers(0, n_nodes, n_edges).astype(np.int32))
+
+
+@dataclasses.dataclass
+class NeighborSampler:
+    """Uniform fanout sampler (GraphSAGE-style).  For each target node,
+    samples fanout[0] neighbors, then fanout[1] neighbors of each, and emits
+    a PADDED local subgraph: node 0 is the target, edges point child->parent
+    (message direction), masked beyond the real count."""
+
+    graph: CSRGraph
+    fanout: tuple = (15, 10)
+    n_pad: int = 192
+    e_pad: int = 192
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def _sample_neighbors(self, node: int, k: int) -> np.ndarray:
+        lo, hi = self.graph.indptr[node], self.graph.indptr[node + 1]
+        deg = hi - lo
+        if deg == 0:
+            return np.empty(0, np.int64)
+        pick = self._rng.integers(0, deg, min(k, deg))
+        return self.graph.indices[lo + pick].astype(np.int64)
+
+    def sample(self, target: int) -> dict:
+        nodes = [int(target)]
+        local = {int(target): 0}
+        src, dst = [], []
+        frontier = [(int(target), 0)]
+        for depth, k in enumerate(self.fanout):
+            nxt = []
+            for parent, ploc in frontier:
+                for nb in self._sample_neighbors(parent, k):
+                    nb = int(nb)
+                    if nb not in local:
+                        if len(nodes) >= self.n_pad:
+                            continue
+                        local[nb] = len(nodes)
+                        nodes.append(nb)
+                    if len(src) < self.e_pad:
+                        src.append(local[nb])
+                        dst.append(ploc)
+                        nxt.append((nb, local[nb]))
+            frontier = nxt
+        n, e = len(nodes), len(src)
+        out = {
+            "nodes": np.pad(np.asarray(nodes, np.int64), (0, self.n_pad - n)),
+            "n_real": n,
+            "src": np.pad(np.asarray(src, np.int32), (0, self.e_pad - e)),
+            "dst": np.pad(np.asarray(dst, np.int32), (0, self.e_pad - e)),
+            "edge_mask": np.pad(np.ones(e, np.float32),
+                                (0, self.e_pad - e)),
+        }
+        return out
+
+    def sample_batch(self, targets: np.ndarray, feats: np.ndarray,
+                     labels: np.ndarray, coord_dim: int = 3) -> dict:
+        """Batched padded subgraphs + gathered features for
+        egnn_steps.make_minibatch_train_step."""
+        subs = [self.sample(int(t)) for t in targets]
+        G = len(subs)
+        batch = {
+            "feats": np.stack([feats[s["nodes"]] for s in subs]
+                              ).astype(np.float32),
+            "coords": self._rng.standard_normal(
+                (G, self.n_pad, coord_dim)).astype(np.float32),
+            "src": np.stack([s["src"] for s in subs]),
+            "dst": np.stack([s["dst"] for s in subs]),
+            "edge_mask": np.stack([s["edge_mask"] for s in subs]),
+            "labels": labels[targets].astype(np.int32),
+        }
+        return batch

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: EmbeddingBag-sum forward (paper Alg. 1, contribution C1).
+
+The hot loop of DLRM.  On CPU the paper streams consecutive cache lines per
+row and parallelizes over bags; the TPU-native structure is a
+``PrefetchScalarGridSpec``: the index array is scalar-prefetched so the
+pipeline can issue the HBM->VMEM row DMA for lookup (n, p+1) while row
+(n, p) is being accumulated in VMEM.  The bag dimension is the outer grid
+axis (= the paper's ``#pragma omp parallel for`` over N), the pooling
+dimension the inner one, and the row accumulation is fp32.
+
+This kernel should run at HBM-bandwidth roofline — the GUPS-like
+expectation the paper states in Sect. II.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, w_ref, o_ref, *, pooling: int, bags_per_block: int):
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += w_ref[...].astype(jnp.float32)
+
+
+def embedding_bag_pallas(W: jax.Array, idx: jax.Array,
+                         interpret: bool = False) -> jax.Array:
+    """W [M, E], idx [N, P] int32 -> [N, E] fp32 bag sums.
+
+    E must be lane-aligned (multiple of 128) for the TPU target; the ops.py
+    wrapper pads smaller embedding dims.
+    """
+    M, E = W.shape
+    N, P = idx.shape
+    grid = (N, P)
+    return pl.pallas_call(
+        functools.partial(_kernel, pooling=P, bags_per_block=1),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # one embedding row per step, chosen by the prefetched index
+                pl.BlockSpec((1, E), lambda n, p, idx_ref: (idx_ref[n, p], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, E), lambda n, p, idx_ref: (n, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, E), jnp.float32),
+        interpret=interpret,
+    )(idx, W)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: causal flash attention (online softmax), with GQA,
+gemma2 logit soft-capping, and local (sliding-window) masking.
+
+Not a paper contribution per se — the LM-family assigned architectures need
+it — but it follows the same design rule as the paper's GEMM (C2): the
+softmax epilogue happens while the score tile is in VMEM, and KV blocks
+stream HBM->VMEM down the innermost grid axis.  Out-of-range KV blocks
+(causal future / beyond the local window) are skipped at grid level, which
+is what makes the gemma2 local layers sub-quadratic.
+
+Decode (Lq << Lk) uses right-aligned positions: query i has absolute
+position Lk - Lq + i.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, nk: int, lq: int, lk: int, scale: float,
+            causal: bool, softcap: float, window: int):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos0 = qi * bq + (lk - lq)          # absolute position of first query
+    kpos0 = ki * bk
+    needed = kpos0 < lk                  # key-padding block
+    if causal:
+        needed &= kpos0 <= qpos0 + bq - 1
+    if window > 0:
+        needed &= kpos0 + bk - 1 > qpos0 - window
+
+    @pl.when(needed)
+    def _body():
+        q = q_ref[0]
+        k = k_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = qpos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kpos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < lk
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, softcap: float = 0.0,
+                           window: int = 0, scale: float | None = None,
+                           bq: int = 128, bk: int = 128,
+                           lq_real: int | None = None,
+                           lk_real: int | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """q [BH, Lq, D]; k, v [BH, Lk, D] (GQA heads pre-expanded by index_map
+    in ops.py, or pass matching BH).  Lq/Lk must be multiples of bq/bk
+    (ops.py pads; ``l{q,k}_real`` are the unpadded lengths used for
+    position/padding masks)."""
+    BH, Lq, D = q.shape
+    Lk = k.shape[1]
+    bq, bk = min(bq, Lq), min(bk, Lk)
+    assert Lq % bq == 0 and Lk % bk == 0
+    nk = Lk // bk
+    grid = (BH, Lq // bq, nk)
+    kern = functools.partial(
+        _kernel, bq=bq, bk=bk, nk=nk,
+        lq=(lq_real if lq_real is not None else Lq),
+        lk=(lk_real if lk_real is not None else Lk),
+        scale=(scale if scale is not None else D ** -0.5),
+        causal=causal, softcap=softcap, window=window)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Lq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: batched self dot-product interaction (paper Sect. II:
+"a self dot product ... translates to a batched matrix-matrix multiplication
+as a key kernel").
+
+Z [B, F, E] -> Z Z^T [B, F, F], batched over B with a block of bags resident
+in VMEM; the (tiny) F x F output tile stays in registers/VMEM so the
+downstream triangle extraction fuses on top.  F is the feature count
+(S tables + 1 bottom-MLP vector), typically 9..65 — far below MXU size, so
+the win comes from batching many bags per VMEM block, not from the MXU tile
+shape itself.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(z_ref, o_ref):
+    z = z_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        z, z, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def interaction_pallas(z: jax.Array, bb: int = 8,
+                       interpret: bool = False) -> jax.Array:
+    """z [B, F, E] -> [B, F, F] fp32."""
+    B, F, E = z.shape
+    bb = min(bb, B)
+    assert B % bb == 0, (B, bb)
+    return pl.pallas_call(
+        _kernel,
+        grid=(B // bb,),
+        in_specs=[pl.BlockSpec((bb, F, E), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bb, F, F), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, F, F), jnp.float32),
+        interpret=interpret,
+    )(z)

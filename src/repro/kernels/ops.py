@@ -1,0 +1,123 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles shape padding to hardware-aligned blocks, GQA head expansion, and
+the interpret switch (``interpret=True`` executes the kernel bodies in
+Python — the validation mode on this CPU container; on TPU it compiles to
+Mosaic).  Default interpret mode follows the backend.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_mlp import fused_mlp_pallas
+from repro.kernels.interaction import interaction_pallas
+from repro.kernels.split_sgd import split_sgd_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_dim(x: jax.Array, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x, x.shape[axis]
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), x.shape[axis]
+
+
+@partial(jax.jit, static_argnames=("activation", "interpret"))
+def fused_mlp_layer(x, w, b, activation: str = "relu",
+                    interpret: bool | None = None):
+    """act(x @ w + b) with fp32 accumulation.  Pads to (8,128) multiples."""
+    interpret = _default_interpret() if interpret is None else interpret
+    xp, M = _pad_dim(x, 0, 8)
+    xp, K = _pad_dim(xp, 1, 128)
+    wp, _ = _pad_dim(w, 0, 128)
+    wp, N = _pad_dim(wp, 1, 128)
+    bp, _ = _pad_dim(b, 0, 128)
+    bm = min(256, max(8, xp.shape[0] // 8 * 8 if xp.shape[0] < 256 else 256))
+    # clamp blocks to padded dims
+    def blk(dim, pref):
+        return dim if dim < pref else pref
+    out = fused_mlp_pallas(xp, wp, bp, activation,
+                           bm=blk(xp.shape[0], 256), bn=blk(wp.shape[1], 256),
+                           bk=blk(xp.shape[1], 512), interpret=interpret)
+    return out[:M, :N]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(W, idx, interpret: bool | None = None):
+    """W [M, E], idx [N, P] -> [N, E] fp32 bag sums (lane-pads E)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    Wp, E = _pad_dim(W, 1, 128)
+    out = embedding_bag_pallas(Wp, idx, interpret=interpret)
+    return out[:, :E]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def interaction_self_dot(z, interpret: bool | None = None):
+    """z [B, F, E] -> [B, F, F] fp32 batched self-dot."""
+    interpret = _default_interpret() if interpret is None else interpret
+    zp, F = _pad_dim(z, 1, 8)       # sublane-align the F dim
+    zp, E = _pad_dim(zp, 2, 128)
+    bb = 8
+    zb, B = _pad_dim(zp, 0, bb)
+    out = interaction_pallas(zb, bb=bb, interpret=interpret)
+    return out[:B, :F, :F]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def split_sgd_update(hi, lo, g, lr, interpret: bool | None = None):
+    """Flat split-SGD step on arbitrary-shaped leaves (raveled + padded)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    shape = hi.shape
+    n = hi.size
+    hif, _ = _pad_dim(hi.reshape(-1), 0, 1024)
+    lof, _ = _pad_dim(lo.reshape(-1), 0, 1024)
+    gf, _ = _pad_dim(g.reshape(-1), 0, 1024)
+    block = min(8 * 128 * 64, hif.shape[0])
+    nh, nl = split_sgd_pallas(hif, lof, gf, lr, block=block,
+                              interpret=interpret)
+    return nh[:n].reshape(shape), nl[:n].reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("causal", "softcap", "window", "scale",
+                                   "interpret"))
+def flash_attention(q, k, v, causal: bool = True, softcap: float = 0.0,
+                    window: int = 0, scale: float | None = None,
+                    interpret: bool | None = None):
+    """q [B,H,Lq,D], k/v [B,Hkv,Lk,D] (H % Hkv == 0) -> [B,H,Lq,D].
+
+    GQA is handled by repeating KV heads (grid-level index aliasing keeps
+    HBM traffic at the Hkv level on TPU; in interpret mode it is a copy)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    B, H, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf = q.reshape(B * H, Lq, D)
+    kf = k.reshape(B * H, Lk, D)
+    vf = v.reshape(B * H, Lk, D)
+    bq = min(128, max(8, Lq))
+    bk = min(128, Lk)
+    qf, _ = _pad_dim(qf, 1, bq)
+    kf, _ = _pad_dim(kf, 1, bk)
+    vf, _ = _pad_dim(vf, 1, bk)
+    # NOTE: padded queries are garbage rows sliced off below; padded keys are
+    # masked inside the kernel via lk_real.
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, softcap=softcap, window=window,
+        scale=scale, bq=bq, bk=bk, lq_real=Lq, lk_real=Lk,
+        interpret=interpret)
+    return out[:, :Lq].reshape(B, H, Lq, D)

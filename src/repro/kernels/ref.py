@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``<name>.py`` kernel is validated against the function of the same name
+here (tests/test_kernels.py sweeps shapes/dtypes with assert_allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def embedding_bag(W: jax.Array, idx: jax.Array) -> jax.Array:
+    """Bag-sum forward: W [M, E], idx [N, P] -> [N, E] fp32 (paper Alg. 1)."""
+    return jnp.take(W, idx, axis=0).astype(jnp.float32).sum(axis=1)
+
+
+def fused_mlp_layer(x: jax.Array, w: jax.Array, b: jax.Array,
+                    activation: str = "relu") -> jax.Array:
+    """y = act(x @ w + b), fp32 accumulation (paper Alg. 5 + fused epilogue)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    y = y + b.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "sigmoid":
+        y = jax.nn.sigmoid(y)
+    elif activation != "none":
+        raise ValueError(activation)
+    return y
+
+
+def interaction_self_dot(z: jax.Array) -> jax.Array:
+    """Batched self dot: z [B, F, E] -> [B, F, F] fp32 (paper Sect. II)."""
+    return jnp.einsum("bfe,bge->bfg", z, z, preferred_element_type=jnp.float32)
+
+
+def split_sgd_update(hi: jax.Array, lo: jax.Array, g: jax.Array, lr
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Exact-fp32 SGD on split-bf16 storage (paper Sect. VII)."""
+    from repro.optim.split_sgd import combine_split, split_fp32
+    w32 = combine_split(hi, lo) - lr * g.astype(jnp.float32)
+    return split_fp32(w32)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, softcap: float = 0.0,
+                    window: int = 0, scale: float | None = None) -> jax.Array:
+    """Reference attention.  q [B,H,Lq,D], k/v [B,Hkv,Lk,D] (GQA: H % Hkv == 0).
+
+    ``softcap`` > 0 applies gemma2's logit soft-capping; ``window`` > 0
+    restricts keys to (i - window, i] (local/sliding attention).  For decode
+    (Lq < Lk) positions are right-aligned: query i sits at absolute position
+    Lk - Lq + i.
+    """
+    B, H, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    kx = jnp.repeat(k, rep, axis=1)
+    vx = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kx,
+                   preferred_element_type=jnp.float32)
+    s = s * (scale if scale is not None else D ** -0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Lq)[:, None] + (Lk - Lq)
+    kpos = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(p.dtype)
+                      ).astype(q.dtype)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: fused Split-SGD-BF16 update (paper Sect. VII, C5).
+
+One pass over (hi, lo, grad): reconstruct fp32 = (hi<<16)|lo, apply the SGD
+step, split back.  Reads 2+2+4 and writes 2+2 bytes per parameter — the
+bandwidth profile the paper's optimizer-pass analysis assumes.  Pure
+elementwise, so a 1D grid of lane-aligned VMEM blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(hi_ref, lo_ref, g_ref, lr_ref, nhi_ref, nlo_ref):
+    hb = jax.lax.bitcast_convert_type(hi_ref[...], jnp.uint16
+                                      ).astype(jnp.uint32)
+    bits = (hb << 16) | lo_ref[...].astype(jnp.uint32)
+    w32 = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    w32 = w32 - lr_ref[0] * g_ref[...].astype(jnp.float32)
+    nbits = jax.lax.bitcast_convert_type(w32, jnp.uint32)
+    nhi_ref[...] = jax.lax.bitcast_convert_type(
+        (nbits >> 16).astype(jnp.uint16), jnp.bfloat16)
+    nlo_ref[...] = (nbits & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+
+
+def split_sgd_pallas(hi: jax.Array, lo: jax.Array, g: jax.Array, lr,
+                     block: int = 8 * 128 * 64, interpret: bool = False
+                     ) -> tuple[jax.Array, jax.Array]:
+    """hi [n] bf16, lo [n] uint16, g [n] -> (hi', lo').  n % block == 0
+    (ops.py pads)."""
+    n = hi.shape[0]
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    lr_arr = jnp.full((1,), lr, jnp.float32)
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.bfloat16),
+                   jax.ShapeDtypeStruct((n,), jnp.uint16)],
+        interpret=interpret,
+    )(hi, lo, g, lr_arr)

@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture x input shape) on
+the production meshes and record memory/cost analysis + the collective
+schedule.  MUST be run as a script/module — the XLA_FLAGS line above runs
+before any other import (jax locks the device count on first init).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch egnn     # one arch
+    PYTHONPATH=src python -m repro.launch.dryrun --arch fm --shape train_batch
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod only|skip|both
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json, one file per
+cell, so interrupted runs resume for free.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import base as cfgbase
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=?\s*(\w+)?\[([0-9,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the (compiled) HLO.
+
+    Matches ops like ``%all-reduce.5 = f32[1024,256]{...} all-reduce(...)``;
+    we scan result-shape annotations on lines whose op name is a collective.
+    """
+    dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                   "u16": 2, "s16": 2, "f64": 8, "pred": 1, "u8": 1,
+                   "s8": 1, "c64": 8, "u64": 8, "s64": 8}
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    line_re = re.compile(
+        r"=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^ ]*)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)")
+    shape_re = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+    def shape_bytes(dt, dims):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        return n * dtype_bytes.get(dt, 4)
+
+    for m in line_re.finditer(hlo_text):
+        tuple_part, dt, dims, op = m.groups()
+        size = 0
+        if tuple_part is not None:
+            for sm in shape_re.finditer(tuple_part):
+                size += shape_bytes(*sm.groups())
+        else:
+            size = shape_bytes(dt, dims)
+        totals[op] = totals.get(op, 0) + size
+        counts[op] = counts.get(op, 0) + 1
+    return {"bytes_by_op": totals, "counts": counts,
+            "total_bytes": sum(totals.values())}
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str,
+             overrides=None) -> dict:
+    ad = cfgbase.get(arch)
+    cell = next(c for c in ad.cells if c.shape == shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "kind": cell.kind, "status": None}
+    if cell.skip:
+        rec.update(status="skipped", skip_reason=cell.skip)
+        return rec
+    t0 = time.time()
+    build = ad.build(shape, mesh, **(overrides or {}))
+    rec["meta"] = {k: v for k, v in build.meta.items()
+                   if isinstance(v, (int, float, str, list, tuple))}
+    with jax.set_mesh(mesh):
+        lowered = build.fn.lower(*build.args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_estimate_bytes": int(ma.argument_size_in_bytes
+                                   + ma.output_size_in_bytes
+                                   + ma.temp_size_in_bytes
+                                   - ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                   "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+    rec["collectives"] = parse_collective_bytes(compiled.as_text())
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", choices=["only", "skip", "both"],
+                    default="both")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    meshes = []
+    if args.multi_pod in ("skip", "both"):
+        meshes.append(("pod1x16x16", make_production_mesh(multi_pod=False)))
+    if args.multi_pod in ("only", "both"):
+        meshes.append(("pod2x16x16", make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else cfgbase.list_archs()
+    n_ok = n_skip = n_fail = 0
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            ad = cfgbase.get(arch)
+            for cell in ad.cells:
+                if args.shape and cell.shape != args.shape:
+                    continue
+                out = RESULTS / f"{arch}__{cell.shape}__{mesh_name}.json"
+                if out.exists():
+                    rec = json.loads(out.read_text())
+                    if rec.get("status") in ("ok", "skipped"):
+                        print(f"[cached] {arch} {cell.shape} {mesh_name}: "
+                              f"{rec['status']}")
+                        n_ok += rec["status"] == "ok"
+                        n_skip += rec["status"] == "skipped"
+                        continue
+                print(f"[run] {arch} {cell.shape} {mesh_name} ...",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, cell.shape, mesh, mesh_name)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": cell.shape,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-3000:]}
+                out.write_text(json.dumps(rec, indent=2))
+                status = rec["status"]
+                if status == "ok":
+                    n_ok += 1
+                    mem = rec["memory"]["peak_estimate_bytes"] / 2**30
+                    print(f"  ok: peak~{mem:.2f} GiB/device, "
+                          f"flops={rec['cost']['flops']:.3g}, "
+                          f"coll={rec['collectives']['total_bytes']:.3g}B, "
+                          f"compile={rec['compile_s']}s", flush=True)
+                elif status == "skipped":
+                    n_skip += 1
+                    print(f"  skipped: {rec['skip_reason']}")
+                else:
+                    n_fail += 1
+                    print(f"  ERROR: {rec['error']}", flush=True)
+    print(f"\ndry-run summary: ok={n_ok} skipped={n_skip} failed={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+IMPORTANT: functions, not module-level constants — importing this module
+never touches jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax init;
+smoke tests and benchmarks must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod ('data' x 'model'); 2 pods adds a leading 'pod'
+    axis.  Matches the dry-run requirement verbatim."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/benchmarks (e.g. (2,4) on 8 CPU devices,
+    or 1D meshes emulating the paper's 8-/64-socket systems)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,161 @@
+"""Attention implementations for the LM family.
+
+Three paths, selected by shape/backend:
+
+* ``pallas``   — the flash kernel (TPU target; tests run it interpreted).
+* ``chunked``  — pure-jnp q-chunked attention via ``lax.scan`` (per-chunk
+  row softmax, bounded [B,H,bq,Lk] transient).  The dry-run/XLA path for
+  training and prefill: quadratic-memory-safe at 32k.
+* ``decode``   — einsum attention for Lq==1 with a KV cache.  Written
+  GSPMD-friendly: with the cache's Lk dim sharded (sequence parallelism for
+  long_500k), XLA turns the softmax reductions and the PV contraction into
+  psums over the sequence shards — flash-decode as a sharding consequence.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def repeat_kv(x: jax.Array, rep: int) -> jax.Array:
+    return x if rep == 1 else jnp.repeat(x, rep, axis=1)
+
+
+def _mask(qpos, kpos, causal: bool, window: int, lk_valid: int | None = None):
+    m = jnp.ones(jnp.broadcast_shapes(qpos.shape, kpos.shape), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    if lk_valid is not None:
+        m &= kpos < lk_valid
+    return m
+
+
+def chunked_attention(q, k, v, *, causal=True, softcap=0.0, window=0,
+                      scale=None, bq=256, unroll=False) -> jax.Array:
+    """q [B,H,Lq,D], k/v [B,Hkv,Lk,D] -> [B,H,Lq,D].  Scans q chunks."""
+    B, H, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    k = repeat_kv(k, H // Hkv)
+    v = repeat_kv(v, H // Hkv)
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(bq, Lq)
+    if Lq % bq:
+        bq = int(np.gcd(bq, Lq))
+    nq = Lq // bq
+
+    Dv = v.shape[-1]   # may differ from D (MLA: v_head != qk dim)
+
+    # local attention: only a window+bq slice of K/V is reachable from a
+    # q-chunk — slice it instead of scoring all Lk keys (gemma2's local
+    # layers at 32k prefill otherwise waste 8x compute+bytes;
+    # EXPERIMENTS.md section Perf iter. 4)
+    wsz = min(Lk, window + bq) if window > 0 else Lk
+    sliced = 0 < wsz < Lk
+
+    def chunk(carry, qc_i):
+        qc, i = qc_i
+        q0 = (Lk - Lq) + i * bq            # absolute pos of first query
+        if sliced:
+            start = jnp.clip(q0 - window + 1, 0, Lk - wsz)
+            kk = jax.lax.dynamic_slice_in_dim(k, start, wsz, axis=2)
+            vv = jax.lax.dynamic_slice_in_dim(v, start, wsz, axis=2)
+            kpos = start + jnp.arange(wsz)[None, :]
+        else:
+            kk, vv = k, v
+            kpos = jnp.arange(Lk)[None, :]
+        s = jnp.einsum("bhqd,bhkd->bhqk", qc, kk,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q0 + jnp.arange(bq)[:, None]
+        s = jnp.where(_mask(qpos, kpos, causal, window)[None, None], s,
+                      -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vv.dtype), vv)
+        return carry, o
+
+    if nq == 1:
+        _, o = chunk(None, (q, 0))
+        return o.astype(q.dtype)
+    qs = q.reshape(B, H, nq, bq, D).transpose(2, 0, 1, 3, 4)
+    # remat each q-chunk: without it the scan saves every chunk's softmax
+    # residuals — the full quadratic [B,H,Lq,Lk] this code exists to avoid.
+    _, os = jax.lax.scan(jax.checkpoint(chunk), None, (qs, jnp.arange(nq)),
+                         unroll=True if unroll else 1)
+    return (os.transpose(1, 2, 0, 3, 4).reshape(B, H, Lq, Dv)
+            ).astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, softcap=0.0, window=0, scale=None,
+                     kv_len=None) -> jax.Array:
+    """One-token attention.  q [B,H,1,D], k/v [B,Hkv,Lk,D].
+
+    ``kv_len``: per-batch valid cache length [B] (positions >= kv_len are
+    masked) — the cache array itself is a static ring of max length."""
+    B, H, _, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    k = repeat_kv(k, H // Hkv)
+    v = repeat_kv(v, H // Hkv)
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(Lk)[None, None, None, :]
+    if kv_len is None:
+        valid = jnp.ones((B, 1, 1, Lk), bool)
+        qpos = Lk - 1
+    else:
+        valid = kpos < kv_len[:, None, None, None]
+        qpos = kv_len[:, None, None, None] - 1
+    # window may be a traced per-layer scalar (decode layer scan); a static 0
+    # means "global".
+    if isinstance(window, jax.Array) or window > 0:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, softcap=0.0, window=0, scale=None,
+              impl: str = "chunked", bq: int = 256,
+              unroll: bool = False) -> jax.Array:
+    """Dispatcher used by the transformer; decode shapes route to the einsum
+    path regardless of impl."""
+    if q.shape[2] == 1:
+        return decode_attention(q, k, v, softcap=softcap, window=window,
+                                scale=scale)
+    if impl == "pallas":
+        from repro.kernels.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal, softcap=softcap,
+                               window=window, scale=scale)
+    return chunked_attention(q, k, v, causal=causal, softcap=softcap,
+                             window=window, scale=scale, bq=bq,
+                             unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / norms, shared by every LM arch
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x [..., L, D] with D even; positions [..., L] absolute."""
+    D = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, D // 2, dtype=jnp.float32) / (D // 2))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., L, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

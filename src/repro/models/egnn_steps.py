@@ -1,0 +1,245 @@
+"""Distributed EGNN train steps.
+
+Two regimes:
+
+* full-graph (cora / ogb_products / flattened molecule batches): edges
+  sharded over the FULL mesh, node features replicated for the gathers;
+  per-layer partial aggregates are ``psum_scatter`` onto a node shard, the
+  node MLP runs node-sharded, and an ``all_gather`` rebuilds the replicated
+  features — the paper's Alg. 4 ownership pattern, applied to nodes.
+
+* sampled minibatch (minibatch_lg): pure DP — each device trains on its own
+  padded subgraphs from the fanout sampler (repro/data/graph.py); grads are
+  psum'd and the Split-SGD update runs replicated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.egnn import (EGNNConfig, egnn_layer, egnn_node_update,
+                               init_egnn_params, normalize_dx)
+from repro.models.mlp import mlp_forward
+from repro.optim import split_sgd
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+def _axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+def _ns(mesh):
+    return int(np.prod(list(mesh.shape.values())))
+
+
+def egnn_state_structs(cfg: EGNNConfig, mesh):
+    pshape = jax.eval_shape(
+        lambda: init_egnn_params(jax.random.PRNGKey(0), cfg))
+    mk = lambda dt: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt), pshape)
+    structs = {"hi": mk(jnp.bfloat16), "lo": mk(jnp.uint16)}
+    specs = jax.tree.map(lambda _: P(), structs)
+    return structs, specs, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def init_egnn_state(key, cfg, mesh):
+    params = init_egnn_params(key, cfg)
+    hi_lo = jax.tree.map(split_sgd.split_fp32, params)
+    leaf = lambda x: isinstance(x, tuple)
+    state = {"hi": jax.tree.map(lambda t: t[0], hi_lo, is_leaf=leaf),
+             "lo": jax.tree.map(lambda t: t[1], hi_lo, is_leaf=leaf)}
+    _, _, sh = egnn_state_structs(cfg, mesh)
+    return jax.device_put(state, sh)
+
+
+def fullgraph_batch_structs(cfg: EGNNConfig, mesh, n_nodes, n_edges,
+                            graph_level_graphs: int = 0):
+    """Padded global shapes: nodes to ns*8, edges to ns."""
+    ns = _ns(mesh)
+    N = _round_up(n_nodes, ns * 8)
+    E = _round_up(n_edges, ns)
+    AX = _axes(mesh)
+    structs = {
+        "feats": jax.ShapeDtypeStruct((N, cfg.d_feat), jnp.bfloat16),
+        "coords": jax.ShapeDtypeStruct((N, cfg.coord_dim), jnp.float32),
+        "src": jax.ShapeDtypeStruct((E,), jnp.int32),
+        "dst": jax.ShapeDtypeStruct((E,), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((E,), jnp.float32),
+    }
+    specs = {"feats": P(None, None), "coords": P(None, None),
+             "src": P(AX), "dst": P(AX), "edge_mask": P(AX)}
+    if graph_level_graphs:
+        structs["graph_ids"] = jax.ShapeDtypeStruct((N,), jnp.int32)
+        structs["targets"] = jax.ShapeDtypeStruct((graph_level_graphs,),
+                                                  jnp.float32)
+        specs["graph_ids"] = P(None)
+        specs["targets"] = P()
+    else:
+        structs["labels"] = jax.ShapeDtypeStruct((N,), jnp.int32)
+        structs["label_mask"] = jax.ShapeDtypeStruct((N,), jnp.float32)
+        specs["labels"] = P(None)
+        specs["label_mask"] = P(None)
+    return structs, specs, (N, E)
+
+
+def make_fullgraph_train_step(cfg: EGNNConfig, mesh, n_nodes, n_edges,
+                              lr=1e-2, graph_level_graphs: int = 0,
+                              unroll: bool = False):
+    sstructs, sspecs, sshard = egnn_state_structs(cfg, mesh)
+    bstructs, bspecs, (N, E) = fullgraph_batch_structs(
+        cfg, mesh, n_nodes, n_edges, graph_level_graphs)
+    AX = _axes(mesh)
+    ns = _ns(mesh)
+    Nsh = N // ns
+
+    def fwd(hi, batch):
+        # encoder on the node shard, gather to replicated
+        shard = jax.lax.axis_index(AX)
+        feats_sh = jax.lax.dynamic_slice_in_dim(batch["feats"], shard * Nsh,
+                                                Nsh, axis=0)
+        h_sh = mlp_forward(hi["encoder"], feats_sh, final_activation=True
+                           ).astype(jnp.bfloat16)
+        h = jax.lax.all_gather(h_sh, AX, axis=0, tiled=True)     # [N, H]
+        x = batch["coords"]
+
+        def body(carry, lp):
+            h, x = carry
+            magg, dx_raw, deg = egnn_layer(h, x, batch["src"], batch["dst"],
+                                           lp, batch["edge_mask"],
+                                           num_nodes=N)
+            # partial aggregates -> node shard, update, regather
+            magg_sh = jax.lax.psum_scatter(magg, AX, scatter_dimension=0,
+                                           tiled=True)
+            h_sh = jax.lax.dynamic_slice_in_dim(h, shard * Nsh, Nsh, 0)
+            h_sh = egnn_node_update(h_sh, magg_sh, lp)
+            h = jax.lax.all_gather(h_sh, AX, axis=0, tiled=True)
+            if cfg.update_coords:
+                # sum partials THEN normalize by the global degree
+                dx_raw = jax.lax.psum(dx_raw, AX)
+                deg = jax.lax.psum(deg, AX)
+                x = x + normalize_dx(dx_raw, deg)
+            return (h, x), None
+
+        (h, x), _ = jax.lax.scan(jax.checkpoint(body), (h, x), hi["layers"],
+                                 unroll=True if unroll else 1)
+        # head on node shard
+        h_sh = jax.lax.dynamic_slice_in_dim(h, shard * Nsh, Nsh, 0)
+        return mlp_forward(hi["head"], h_sh), shard              # [Nsh, C]
+
+    def loss_fn(hi, batch):
+        logits, shard = fwd(hi, batch)
+        if graph_level_graphs:
+            gids = jax.lax.dynamic_slice_in_dim(batch["graph_ids"],
+                                                shard * Nsh, Nsh, 0)
+            pooled = jax.ops.segment_sum(logits, gids,
+                                         num_segments=graph_level_graphs)
+            pooled = jax.lax.psum(pooled, AX)
+            pred = pooled[:, 0]
+            return ((pred - batch["targets"]) ** 2).mean()
+        labels = jax.lax.dynamic_slice_in_dim(batch["labels"],
+                                              shard * Nsh, Nsh, 0)
+        lmask = jax.lax.dynamic_slice_in_dim(batch["label_mask"],
+                                             shard * Nsh, Nsh, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+        num = jax.lax.psum((lse - lab) * lmask, AX).sum()
+        den = jax.lax.psum(lmask.sum(), AX)
+        return num / jnp.maximum(den, 1.0)
+
+    def step(state, batch):
+        loss, g = jax.value_and_grad(loss_fn)(state["hi"], batch)
+        g = jax.lax.psum(g, AX)
+        out = jax.tree.map(
+            lambda h, l, gg: split_sgd.update_leaf(h, l, gg, lr),
+            state["hi"], state["lo"], g)
+        leaf = lambda x: isinstance(x, tuple)
+        new = {"hi": jax.tree.map(lambda t: t[0], out, is_leaf=leaf),
+               "lo": jax.tree.map(lambda t: t[1], out, is_leaf=leaf)}
+        return new, loss
+
+    sm = jax.shard_map(step, mesh=mesh, in_specs=(sspecs, bspecs),
+                       out_specs=(sspecs, P()), check_vma=False)
+    jitted = jax.jit(sm, donate_argnums=(0,))
+    return jitted, (sstructs, bstructs), (sshard, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), bspecs,
+        is_leaf=lambda x: isinstance(x, P)))
+
+
+def minibatch_batch_structs(cfg: EGNNConfig, mesh, n_graphs, n_pad, e_pad):
+    AX = _axes(mesh)
+    structs = {
+        "feats": jax.ShapeDtypeStruct((n_graphs, n_pad, cfg.d_feat),
+                                      jnp.bfloat16),
+        "coords": jax.ShapeDtypeStruct((n_graphs, n_pad, cfg.coord_dim),
+                                       jnp.float32),
+        "src": jax.ShapeDtypeStruct((n_graphs, e_pad), jnp.int32),
+        "dst": jax.ShapeDtypeStruct((n_graphs, e_pad), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((n_graphs, e_pad), jnp.float32),
+        "labels": jax.ShapeDtypeStruct((n_graphs,), jnp.int32),
+    }
+    specs = {k: P(AX, *([None] * (len(s.shape) - 1)))
+             for k, s in structs.items()}
+    return structs, specs
+
+
+def make_minibatch_train_step(cfg: EGNNConfig, mesh, n_graphs, n_pad, e_pad,
+                              lr=1e-2, unroll: bool = False):
+    """Sampled-subgraph DP: one padded subgraph per target node, target is
+    local node 0."""
+    sstructs, sspecs, sshard = egnn_state_structs(cfg, mesh)
+    bstructs, bspecs = minibatch_batch_structs(cfg, mesh, n_graphs, n_pad,
+                                               e_pad)
+    AX = _axes(mesh)
+
+    def one_graph(hi, feats, coords, src, dst, emask):
+        h = mlp_forward(hi["encoder"], feats, final_activation=True
+                        ).astype(jnp.bfloat16)
+        x = coords
+
+        def body(carry, lp):
+            h, x = carry
+            magg, dx_raw, deg = egnn_layer(h, x, src, dst, lp, emask,
+                                           num_nodes=n_pad)
+            h = egnn_node_update(h, magg, lp)
+            if cfg.update_coords:
+                x = x + normalize_dx(dx_raw, deg)
+            return (h, x), None
+
+        (h, x), _ = jax.lax.scan(body, (h, x), hi["layers"],
+                                 unroll=True if unroll else 1)
+        return mlp_forward(hi["head"], h[:1])[0]        # target node logits
+
+    def loss_fn(hi, batch):
+        logits = jax.vmap(
+            lambda f, c, s, d, m: one_graph(hi, f, c, s, d, m)
+        )(batch["feats"], batch["coords"], batch["src"], batch["dst"],
+          batch["edge_mask"])                            # [g_local, C]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, batch["labels"][:, None], -1)[:, 0]
+        return jax.lax.psum((lse - lab).sum(), AX) / n_graphs
+
+    def step(state, batch):
+        loss, g = jax.value_and_grad(loss_fn)(state["hi"], batch)
+        g = jax.lax.psum(g, AX)
+        out = jax.tree.map(
+            lambda h, l, gg: split_sgd.update_leaf(h, l, gg, lr),
+            state["hi"], state["lo"], g)
+        leaf = lambda x: isinstance(x, tuple)
+        new = {"hi": jax.tree.map(lambda t: t[0], out, is_leaf=leaf),
+               "lo": jax.tree.map(lambda t: t[1], out, is_leaf=leaf)}
+        return new, loss
+
+    sm = jax.shard_map(step, mesh=mesh, in_specs=(sspecs, bspecs),
+                       out_specs=(sspecs, P()), check_vma=False)
+    jitted = jax.jit(sm, donate_argnums=(0,))
+    return jitted, (sstructs, bstructs), (sshard, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), bspecs,
+        is_leaf=lambda x: isinstance(x, P)))

@@ -1,0 +1,253 @@
+"""Jitted train/prefill/decode step factories for the LM family.
+
+Distribution is GSPMD: param trees carry Megatron TP specs
+(repro/dist/sharding.py), batch enters sharded over the DP axes, and XLA
+inserts the collectives.  The optimizer is Split-SGD-BF16 (+momentum) on the
+TP-sharded params — C5 is placement-agnostic, which is the paper's
+"transferable to all other topologies" claim in action.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import transformer as tf
+from repro.optim import split_sgd
+
+
+def lm_state_structs(cfg: tf.TransformerConfig, mesh, momentum: bool = True):
+    """(structs, shardings) for {'hi','lo','mom'} without materializing."""
+    pshape = jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+    specs = shd.lm_param_specs(pshape, fsdp=cfg.fsdp,
+                               tp=cfg.tp_size > 1)
+    mk = lambda dt: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt), pshape)
+    structs = {"hi": mk(jnp.bfloat16), "lo": mk(jnp.uint16)}
+    spec_tree = {"hi": specs, "lo": specs}
+    if momentum:
+        structs["mom"] = mk(jnp.float32)
+        spec_tree["mom"] = specs
+    return structs, spec_tree, shd.named(mesh, spec_tree)
+
+
+def init_lm_state(key, cfg: tf.TransformerConfig, mesh, momentum=True):
+    params = tf.init_params(key, cfg)
+    hi_lo = jax.tree.map(split_sgd.split_fp32, params)
+    leaf = lambda x: isinstance(x, tuple)
+    state = {"hi": jax.tree.map(lambda t: t[0], hi_lo, is_leaf=leaf),
+             "lo": jax.tree.map(lambda t: t[1], hi_lo, is_leaf=leaf)}
+    if momentum:
+        state["mom"] = jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+    _, _, shardings = lm_state_structs(cfg, mesh, momentum)
+    return jax.device_put(state, shardings)
+
+
+def make_lm_train_step(cfg: tf.TransformerConfig, mesh, B: int, L: int,
+                       lr: float = 1e-2, beta: float = 0.9,
+                       momentum: bool = True):
+    structs, spec_tree, shardings = lm_state_structs(cfg, mesh, momentum)
+    bdp = cfg.dp_axes   # pure-DP configs span the whole mesh (HC1)
+    bstructs = {"tokens": jax.ShapeDtypeStruct((B, L), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, L), jnp.int32)}
+    bshard = {"tokens": NamedSharding(mesh, P(bdp, None)),
+              "labels": NamedSharding(mesh, P(bdp, None))}
+
+    def grads_of(state, batch):
+        """Loss+grads, optionally accumulated over microbatches (gradient
+        accumulation divides activation transients by cfg.microbatch while
+        keeping the global batch — the standard large-scale fit lever)."""
+        mb = max(1, cfg.microbatch)
+        if mb == 1:
+            return jax.value_and_grad(
+                lambda hi: tf.lm_loss(hi, batch["tokens"], batch["labels"],
+                                      cfg))(state["hi"])
+        toks = batch["tokens"].reshape(mb, B // mb, L)
+        labs = batch["labels"].reshape(mb, B // mb, L)
+
+        def cons(t):
+            # pin the fp32 accumulator to the param sharding — GSPMD
+            # otherwise under-shards it (observed: a 2.2 GiB half-replicated
+            # embed grad on gemma2)
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                t, shardings["hi"])
+
+        # bf16 accumulation: matches the non-microbatched path's gradient
+        # dtype and halves the accumulator footprint (fp32 accum on 236B
+        # params costs 6.8 GiB/device on top of the weights).
+        g0 = cons(jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                               state["hi"]))
+
+        def body(carry, inp):
+            acc_l, acc_g = carry
+            t, l = inp
+            loss, g = jax.value_and_grad(
+                lambda hi: tf.lm_loss(hi, t, l, cfg))(state["hi"])
+            acc_g = cons(jax.tree.map(
+                lambda a, gg: (a + gg).astype(a.dtype), acc_g, g))
+            return (acc_l + loss, acc_g), None
+
+        (loss, g), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), g0),
+                                    (toks, labs))
+        return loss / mb, jax.tree.map(lambda x: x / mb, g)
+
+    def upd_leaf(h, l, g, m=None):
+        """Split-SGD on one leaf; stacked-layer leaves are scanned over the
+        layer dim so the fp32 reconstruct/bit temporaries stay per-layer
+        (a 236B param tree otherwise materializes multi-GiB w32 buffers)."""
+        if h.ndim >= 3 and h.shape[0] > 1 and not cfg.cost_mode:
+            def body(_, s):
+                if m is None:
+                    hh, ll, gg = s
+                    return None, split_sgd.update_leaf(hh, ll, gg, lr)
+                hh, ll, gg, mm = s
+                return None, split_sgd.update_leaf(hh, ll, gg, lr, mm, beta)
+            xs = (h, l, g) if m is None else (h, l, g, m)
+            _, out = jax.lax.scan(body, None, xs)
+            return out
+        if m is None:
+            return split_sgd.update_leaf(h, l, g, lr)
+        return split_sgd.update_leaf(h, l, g, lr, m, beta)
+
+    def step(state, batch):
+        loss, grads = grads_of(state, batch)
+        leaf = lambda x: isinstance(x, tuple)
+        if momentum:
+            out = jax.tree.map(upd_leaf, state["hi"], state["lo"], grads,
+                               state["mom"])
+            new = {"hi": jax.tree.map(lambda t: t[0], out, is_leaf=leaf),
+                   "lo": jax.tree.map(lambda t: t[1], out, is_leaf=leaf),
+                   "mom": jax.tree.map(lambda t: t[2], out, is_leaf=leaf)}
+        else:
+            out = jax.tree.map(lambda h, l, g: upd_leaf(h, l, g),
+                               state["hi"], state["lo"], grads)
+            new = {"hi": jax.tree.map(lambda t: t[0], out, is_leaf=leaf),
+                   "lo": jax.tree.map(lambda t: t[1], out, is_leaf=leaf)}
+        return new, loss
+
+    jitted = jax.jit(step, in_shardings=(shardings, bshard),
+                     out_shardings=(shardings, NamedSharding(mesh, P())),
+                     donate_argnums=(0,))
+    return jitted, (structs, bstructs), (shardings, bshard)
+
+
+def _param_structs(cfg, mesh):
+    pshape = jax.eval_shape(lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
+    specs = shd.lm_param_specs(pshape, fsdp=cfg.fsdp,
+                               tp=cfg.tp_size > 1)
+    structs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), pshape)
+    return structs, shd.named(mesh, specs)
+
+
+def cache_structs(cfg: tf.TransformerConfig, mesh, B: int, Lmax: int):
+    """KV-cache ShapeDtypeStructs + shardings.
+
+    Decode writes one position per step; a SEQ-sharded cache turns that
+    scatter into GSPMD's replicate-fallback reshard (HC2 in EXPERIMENTS.md
+    section Perf: ~1e11 collective bytes/step on internlm2).  So when the
+    batch covers the DP axes we shard HEADS over 'model' when divisible,
+    else the HEAD DIM — the per-step write is then shard-local.  Only the
+    long-context B=1 cell keeps sequence sharding (a 500k cache must split
+    along seq; its decode reads amortize the reshard)."""
+    bdp = shd.batch_axes(mesh)
+    ndp = int(np.prod([mesh.shape[a] for a in bdp]))
+    tp = mesh.shape["model"]
+    nl = cfg.n_layers
+    batch_ok = B % ndp == 0
+    if cfg.mla:
+        structs = {
+            "c_kv": jax.ShapeDtypeStruct((nl, B, Lmax, cfg.kv_lora),
+                                         jnp.bfloat16),
+            "k_rope": jax.ShapeDtypeStruct((nl, B, Lmax, cfg.qk_rope),
+                                           jnp.bfloat16),
+        }
+        if batch_ok:
+            # latent dim sharded; the per-step write stays local
+            spec = {"c_kv": P(None, bdp, None, shd.MODEL),
+                    "k_rope": P(None, bdp, None,
+                                shd.MODEL if cfg.qk_rope % tp == 0
+                                else None)}
+        else:
+            spec = {"c_kv": P(None, None, shd.all_axes(mesh), None),
+                    "k_rope": P(None, None, shd.all_axes(mesh), None)}
+    else:
+        shape = (nl, B, cfg.n_kv_heads, Lmax, cfg.d_head)
+        structs = {"k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+                   "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16)}
+        if batch_ok and cfg.n_kv_heads % tp == 0:
+            spec = {k: P(None, bdp, shd.MODEL, None, None)
+                    for k in ("k", "v")}
+        elif batch_ok and cfg.d_head % tp == 0:
+            spec = {k: P(None, bdp, None, None, shd.MODEL)
+                    for k in ("k", "v")}
+        elif batch_ok:
+            spec = {k: P(None, bdp, None, shd.MODEL, None)
+                    for k in ("k", "v")}
+        else:
+            spec = {k: P(None, None, None, shd.all_axes(mesh), None)
+                    for k in ("k", "v")}
+    return structs, spec, shd.named(mesh, spec)
+
+
+def make_prefill_step(cfg: tf.TransformerConfig, mesh, B: int, L: int):
+    pstructs, pshard = _param_structs(cfg, mesh)
+    bdp = shd.batch_axes(mesh)
+    ndp = int(np.prod([mesh.shape[a] for a in bdp]))
+    tstruct = jax.ShapeDtypeStruct((B, L), jnp.int32)
+    tshard = NamedSharding(mesh, P(bdp, None))
+    _, cspec, cshard = cache_structs(cfg, mesh, B, L)
+    mb = max(1, min(cfg.prefill_microbatch, B // ndp))
+    while B % mb or (B // mb) % ndp:
+        mb -= 1
+
+    def run(params, tokens):
+        if mb == 1:
+            return tf.prefill(params, tokens, cfg)
+        # batch-chunked prefill: sequential half-batches bound the MoE
+        # dispatch transients (serving-style)
+        toks = tokens.reshape(mb, B // mb, L)
+        _, (logits, cache) = jax.lax.scan(
+            lambda _, t: (None, tf.prefill(params, t, cfg)), None, toks)
+        logits = logits.reshape(B, -1)
+        cache = jax.tree.map(
+            lambda a: a.transpose(1, 0, *range(2, a.ndim)).reshape(
+                a.shape[1], B, *a.shape[3:]), cache)
+        return logits, cache
+
+    jitted = jax.jit(run, in_shardings=(pshard, tshard),
+                     out_shardings=(NamedSharding(mesh, P(bdp, shd.MODEL)),
+                                    cshard))
+    return jitted, (pstructs, tstruct), (pshard, tshard)
+
+
+def make_decode_step(cfg: tf.TransformerConfig, mesh, B: int, Lmax: int):
+    pstructs, pshard = _param_structs(cfg, mesh)
+    cstructs, cspec, cshard = cache_structs(cfg, mesh, B, Lmax)
+    bdp = shd.batch_axes(mesh)
+    ndp = int(np.prod([mesh.shape[a] for a in bdp]))
+    batch_ok = B % ndp == 0
+    tok_spec = P(bdp) if batch_ok else P()
+    logit_spec = P(bdp, shd.MODEL) if batch_ok else P(None, shd.MODEL)
+    tstruct = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pstruct = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tshard = NamedSharding(mesh, tok_spec)
+
+    def run(params, cache, tokens, pos):
+        return tf.decode_step(params, cache, tokens, pos, cfg)
+
+    jitted = jax.jit(
+        run,
+        in_shardings=(pshard, cshard, tshard, tshard),
+        out_shardings=(NamedSharding(mesh, logit_spec), cshard),
+        donate_argnums=(1,))
+    return jitted, (pstructs, cstructs, tstruct, pstruct), (pshard, cshard,
+                                                            tshard, tshard)

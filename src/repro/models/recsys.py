@@ -1,0 +1,310 @@
+"""The four assigned recsys architectures as HybridDef models:
+
+    fm       FM 2-way (Rendle, ICDM'10) via the O(nk) sum-square trick
+    bst      Behavior Sequence Transformer (arXiv:1905.06874)
+    sasrec   self-attentive sequential rec (arXiv:1808.09781)
+    din      Deep Interest Network target attention (arXiv:1706.06978)
+
+All share the paper's hybrid-parallel skeleton (repro/core/hybrid.py): one
+unified embedding space (items + context fields concatenated), model-parallel
+over the mesh, dense nets data-parallel.  Sequence lookups reuse the bag
+machinery with P=1 per position (a bag of one IS a lookup), so the paper's
+all-to-all/reduce-scatter layout switch covers sequence models too.
+
+The ``retrieval_cand`` shape (1 query x 1M candidates) is a batched-dot /
+candidate-sharded scoring step with a distributed top-k merge — never a loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.embedding import EmbeddingSpec
+from repro.core.hybrid import HybridDef
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.attention import chunked_attention
+
+
+def bce_sum(logits, labels):
+    x, y = logits.astype(jnp.float32), labels.astype(jnp.float32)
+    return (jnp.maximum(x, 0) - x * y + jnp.log1p(jnp.exp(-jnp.abs(x)))).sum()
+
+
+# ---------------------------------------------------------------------------
+# FM — n_sparse=39, embed_dim=10, fm-2way
+# The unified table carries E=11 per row: dims 0..9 are the factor vector v,
+# dim 10 is the linear weight w (one lookup serves both terms).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FMSizes:
+    n_fields: int = 39
+    k: int = 10
+
+
+def fm_dense_init(key):
+    return {"bias": jnp.zeros((1,), jnp.float32)}
+
+
+def fm_score(dense_hi, emb_out, batch, k: int = 10):
+    v = emb_out[:, :, :k]                   # [B, S, k] fp32
+    w = emb_out[:, :, k]                    # [B, S]
+    sv = v.sum(axis=1)                      # [B, k]
+    fm2 = 0.5 * ((sv * sv).sum(-1) - (v * v).sum(axis=(1, 2)))
+    return dense_hi["bias"][0].astype(jnp.float32) + w.sum(-1) + fm2
+
+
+def make_fm(table_rows, batch=65536, **kw) -> HybridDef:
+    sizes = FMSizes()
+    spec = EmbeddingSpec(tuple(table_rows), sizes.k + 1)
+    return HybridDef(
+        name="fm", spec=spec, pooling=1, batch=batch,
+        init_dense=fm_dense_init,
+        dense_loss=lambda hi, e, b: bce_sum(fm_score(hi, e, b, sizes.k),
+                                            b["labels"]),
+        dense_score=lambda hi, e, b: fm_score(hi, e, b, sizes.k),
+        extras={"labels": ((), jnp.float32)}, **kw)
+
+
+# ---------------------------------------------------------------------------
+# BST — embed_dim=32, seq_len=20, 1 transformer block, 8 heads,
+#       MLP 1024-512-256.  Slots: [0..19]=behavior seq, [20]=target item,
+#       [21..28]=context fields.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BSTSizes:
+    seq_len: int = 20
+    emb_dim: int = 32
+    n_heads: int = 8
+    n_ctx: int = 8
+    mlp: tuple = (1024, 512, 256)
+
+
+def bst_dense_init(key, s: BSTSizes = BSTSizes()):
+    ks = iter(jax.random.split(key, 8))
+    d = s.emb_dim
+    L = s.seq_len + 1
+    mlp_in = L * d + s.n_ctx * d
+    return {
+        "pos": jax.random.normal(next(ks), (L, d), jnp.float32) * 0.02,
+        "wq": jax.random.normal(next(ks), (d, d), jnp.float32) * d ** -0.5,
+        "wk": jax.random.normal(next(ks), (d, d), jnp.float32) * d ** -0.5,
+        "wv": jax.random.normal(next(ks), (d, d), jnp.float32) * d ** -0.5,
+        "wo": jax.random.normal(next(ks), (d, d), jnp.float32) * d ** -0.5,
+        "ffn": init_mlp(next(ks), [d, 4 * d, d]),
+        "mlp": init_mlp(next(ks), [mlp_in, *s.mlp, 1]),
+    }
+
+
+def bst_score(dense_hi, emb_out, batch, s: BSTSizes = BSTSizes()):
+    B = emb_out.shape[0]
+    d, H = s.emb_dim, s.n_heads
+    L = s.seq_len + 1
+    seq = emb_out[:, :L].astype(jnp.bfloat16) + \
+        dense_hi["pos"].astype(jnp.bfloat16)[None]
+    ctx = emb_out[:, L:]
+    q = jnp.dot(seq, dense_hi["wq"]).reshape(B, L, H, d // H)
+    k = jnp.dot(seq, dense_hi["wk"]).reshape(B, L, H, d // H)
+    v = jnp.dot(seq, dense_hi["wv"]).reshape(B, L, H, d // H)
+    o = chunked_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(B, L, d)
+    h = seq + jnp.dot(o, dense_hi["wo"]).astype(jnp.bfloat16)
+    h = h + mlp_forward(dense_hi["ffn"], h).astype(jnp.bfloat16)
+    flat = jnp.concatenate([h.reshape(B, L * d).astype(jnp.float32),
+                            ctx.reshape(B, -1)], axis=-1)
+    return mlp_forward(dense_hi["mlp"], flat.astype(jnp.bfloat16))[:, 0]
+
+
+def make_bst(item_vocab, ctx_rows, batch=65536, **kw) -> HybridDef:
+    s = BSTSizes()
+    # ONE shared item table; seq+target slots all map to it (slot_to_table)
+    rows = (item_vocab,) + tuple(ctx_rows)
+    spec = EmbeddingSpec(rows, s.emb_dim)
+    s2t = tuple([0] * (s.seq_len + 1)) + tuple(range(1, 1 + len(ctx_rows)))
+    return HybridDef(
+        name="bst", spec=spec, pooling=1, batch=batch,
+        init_dense=lambda k: bst_dense_init(k, s),
+        dense_loss=lambda hi, e, b: bce_sum(bst_score(hi, e, b, s),
+                                            b["labels"]),
+        dense_score=lambda hi, e, b: bst_score(hi, e, b, s),
+        extras={"labels": ((), jnp.float32)}, slot_to_table=s2t, **kw)
+
+
+# ---------------------------------------------------------------------------
+# SASRec — embed_dim=50, 2 blocks, 1 head, seq_len=50.
+# Slots: [0..49]=input seq, [50..99]=positive next items, [100..149]=sampled
+# negatives.  BCE over (pos, neg) per position (the paper's objective).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SASRecSizes:
+    seq_len: int = 50
+    emb_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+
+
+def sasrec_dense_init(key, s: SASRecSizes = SASRecSizes()):
+    ks = iter(jax.random.split(key, 2 + 5 * s.n_blocks))
+    d = s.emb_dim
+    blocks = []
+    for _ in range(s.n_blocks):
+        blocks.append({
+            "wq": jax.random.normal(next(ks), (d, d)) * d ** -0.5,
+            "wk": jax.random.normal(next(ks), (d, d)) * d ** -0.5,
+            "wv": jax.random.normal(next(ks), (d, d)) * d ** -0.5,
+            "wo": jax.random.normal(next(ks), (d, d)) * d ** -0.5,
+            "ffn": init_mlp(next(ks), [d, d, d]),
+        })
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return {"pos": jax.random.normal(next(ks), (s.seq_len, d)) * 0.02,
+            "blocks": blocks}
+
+
+def sasrec_user_rep(dense_hi, seq_emb, s: SASRecSizes = SASRecSizes()):
+    """seq_emb [B, L, E] fp32 -> causal user representations [B, L, E]."""
+    B, L, d = seq_emb.shape
+    h = seq_emb.astype(jnp.bfloat16) + \
+        dense_hi["pos"].astype(jnp.bfloat16)[None]
+    H = s.n_heads
+
+    def block(h, bp):
+        q = jnp.dot(h, bp["wq"]).reshape(B, L, H, d // H).transpose(0, 2, 1, 3)
+        k = jnp.dot(h, bp["wk"]).reshape(B, L, H, d // H).transpose(0, 2, 1, 3)
+        v = jnp.dot(h, bp["wv"]).reshape(B, L, H, d // H).transpose(0, 2, 1, 3)
+        o = chunked_attention(q, k, v, causal=True)
+        o = o.transpose(0, 2, 1, 3).reshape(B, L, d)
+        h = h + jnp.dot(o, bp["wo"]).astype(jnp.bfloat16)
+        return (h + mlp_forward(bp["ffn"], h).astype(jnp.bfloat16)), None
+
+    h, _ = jax.lax.scan(block, h, dense_hi["blocks"])
+    return h.astype(jnp.float32)
+
+
+def sasrec_loss_sum(dense_hi, emb_out, batch, s: SASRecSizes = SASRecSizes()):
+    L = s.seq_len
+    u = sasrec_user_rep(dense_hi, emb_out[:, :L], s)       # [B, L, E]
+    pos, neg = emb_out[:, L:2 * L], emb_out[:, 2 * L:3 * L]
+    sp = (u * pos).sum(-1)
+    sn = (u * neg).sum(-1)
+    m = batch["seq_mask"].astype(jnp.float32)              # [B, L]
+    ls = bce_like = (jnp.log1p(jnp.exp(-sp)) + jnp.log1p(jnp.exp(sn))) * m
+    return ls.sum() / jnp.maximum(1.0, 1.0)                # per-shard sum
+
+
+def sasrec_score(dense_hi, emb_out, batch, s: SASRecSizes = SASRecSizes()):
+    """Serve: dot(user rep at last position, target item) -- the target item
+    embedding rides in the 'pos' slots' first column."""
+    L = s.seq_len
+    u = sasrec_user_rep(dense_hi, emb_out[:, :L], s)[:, -1]
+    target = emb_out[:, L]                                 # slot L = target
+    return (u * target).sum(-1)
+
+
+def make_sasrec(item_vocab, batch=65536, **kw) -> HybridDef:
+    s = SASRecSizes()
+    spec = EmbeddingSpec((item_vocab,), s.emb_dim)   # ONE shared item table
+    s2t = tuple([0] * (3 * s.seq_len))               # seq + pos + neg slots
+    return HybridDef(
+        name="sasrec", spec=spec, pooling=1, batch=batch,
+        init_dense=lambda k: sasrec_dense_init(k, s),
+        dense_loss=lambda hi, e, b: sasrec_loss_sum(hi, e, b, s),
+        dense_score=lambda hi, e, b: sasrec_score(hi, e, b, s),
+        extras={"seq_mask": ((s.seq_len,), jnp.float32)},
+        slot_to_table=s2t, **kw)
+
+
+# ---------------------------------------------------------------------------
+# DIN — embed_dim=18, hist len=100, attention MLP 80-40, main MLP 200-80.
+# Slots: [0..99]=history, [100]=target, [101..104]=context fields.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DINSizes:
+    hist: int = 100
+    emb_dim: int = 18
+    n_ctx: int = 4
+    attn_mlp: tuple = (80, 40)
+    mlp: tuple = (200, 80)
+
+
+def din_dense_init(key, s: DINSizes = DINSizes()):
+    k1, k2 = jax.random.split(key)
+    d = s.emb_dim
+    return {"attn": init_mlp(k1, [4 * d, *s.attn_mlp, 1]),
+            "mlp": init_mlp(k2, [(2 + s.n_ctx) * d, *s.mlp, 1])}
+
+
+def din_score(dense_hi, emb_out, batch, s: DINSizes = DINSizes()):
+    B = emb_out.shape[0]
+    h = emb_out[:, :s.hist]                    # [B, T, E]
+    t = emb_out[:, s.hist]                     # [B, E]
+    ctx = emb_out[:, s.hist + 1:]              # [B, n_ctx, E]
+    tt = jnp.broadcast_to(t[:, None, :], h.shape)
+    a_in = jnp.concatenate([h, tt, h - tt, h * tt], axis=-1)
+    a = mlp_forward(dense_hi["attn"], a_in.astype(jnp.bfloat16))[..., 0]
+    mask = batch.get("hist_mask")
+    if mask is not None:
+        a = a * mask.astype(jnp.float32)
+    pooled = (a[..., None] * h).sum(axis=1)    # [B, E]
+    flat = jnp.concatenate([pooled, t, ctx.reshape(B, -1)], axis=-1)
+    return mlp_forward(dense_hi["mlp"], flat.astype(jnp.bfloat16))[:, 0]
+
+
+def make_din(item_vocab, ctx_rows, batch=65536, **kw) -> HybridDef:
+    s = DINSizes()
+    rows = (item_vocab,) + tuple(ctx_rows)           # ONE shared item table
+    spec = EmbeddingSpec(rows, s.emb_dim)
+    s2t = tuple([0] * (s.hist + 1)) + tuple(range(1, 1 + len(ctx_rows)))
+    return HybridDef(
+        name="din", spec=spec, pooling=1, batch=batch,
+        init_dense=lambda k: din_dense_init(k, s),
+        dense_loss=lambda hi, e, b: bce_sum(din_score(hi, e, b, s),
+                                            b["labels"]),
+        dense_score=lambda hi, e, b: din_score(hi, e, b, s),
+        extras={"labels": ((), jnp.float32),
+                "hist_mask": ((s.hist,), jnp.float32)},
+        slot_to_table=s2t, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Retrieval scoring (retrieval_cand shape): candidates sharded over the full
+# mesh, per-shard scores + distributed top-k merge.
+# ---------------------------------------------------------------------------
+
+def make_retrieval_step(mdef: HybridDef, mesh, n_candidates: int,
+                        emb_dim: int, topk: int = 128):
+    """Generic candidate scoring: the caller passes per-candidate embedding
+    rows (gathered from the item table) pre-sharded over the mesh, plus the
+    query-side embedding output; scoring is a batched dot (sasrec) or the
+    model's dense_score vmapped over candidate chunks.
+
+    Returns scores' global top-k (values, indices)."""
+    all_axes = tuple(mesh.axis_names)
+    ns = int(np.prod(list(mesh.shape.values())))
+    per = n_candidates // ns
+
+    def local(urep, cand):                      # urep [E], cand [per, E]
+        s = jnp.einsum("e,ce->c", urep.astype(jnp.float32),
+                       cand.astype(jnp.float32))
+        v, i = jax.lax.top_k(s, min(topk, per))
+        base = jax.lax.axis_index(all_axes) * per
+        i = i + base
+        vg = jax.lax.all_gather(v, all_axes, axis=0, tiled=True)
+        ig = jax.lax.all_gather(i, all_axes, axis=0, tiled=True)
+        vv, pos = jax.lax.top_k(vg, topk)
+        return vv, jnp.take(ig, pos)
+
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(P(), P(all_axes, None)),
+                       out_specs=(P(), P()), check_vma=False)
+    return jax.jit(fn)

@@ -1,0 +1,790 @@
+"""Transformer LM family covering the five assigned architectures:
+
+    qwen3-moe-30b-a3b   GQA + 128-expert top-8 MoE
+    deepseek-v2-236b    MLA (latent KV) + 2-shared/160-routed top-6 MoE
+    internlm2-1.8b      dense GQA
+    gemma2-27b          dense GQA, alternating local/global attn, softcaps
+    phi3-medium-14b     dense GQA
+
+Design notes
+------------
+* Layers are scanned (stacked params) with full per-layer remat — compile
+  size stays flat in depth, which is what makes the 512-device dry-run of a
+  60-layer MoE tractable.
+* TP follows Megatron: attention heads and FFN hidden sharded over 'model';
+  vocab table row-sharded over 'model' (the paper's C1 embedding-sharding
+  insight applied to the LM family); batch over the remaining axes.
+  Sharding enters through constraints below + param specs in
+  repro/dist/sharding.py, GSPMD inserts the collectives.
+* MoE dispatch is per-sequence grouped (capacity C = ceil(L*k*cf/E)):
+  one-hot slot assignment via cumsum, scatter into [B, E, C, d] buffers,
+  batched expert GEMMs (TP over the expert hidden dim), gather+weighted
+  combine.  No host-side or data-dependent shapes anywhere.
+* MoE models follow the paper's hybrid-parallel pattern: the router's
+  dispatch/combine is the same model<->data layout switch as DLRM's
+  interaction all-to-all (DESIGN.md section 5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import (attention, decode_attention, rms_norm,
+                                    repeat_kv, rope)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    # MLA (deepseek)
+    mla: bool = False
+    q_lora: int = 0
+    kv_lora: int = 0
+    qk_nope: int = 0
+    qk_rope: int = 0
+    v_head: int = 0
+    # gemma2
+    local_global: bool = False
+    window: int = 4096
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    embed_scale: bool = False       # multiply embeddings by sqrt(d_model)
+    tie_embeddings: bool = True
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    attn_impl: str = "chunked"      # 'chunked' | 'pallas'
+    remat: bool = True
+    # sequence parallelism: shard the token dim of activations over 'model'
+    # between blocks (Megatron-SP); dp_axes are the mesh batch axes.
+    seq_shard: bool = True
+    dp_axes: tuple = ("data",)
+    tp_size: int = 16               # 'model' axis width (set by the builder)
+    loss_chunk: int = 1024          # token-chunked loss (never materializes
+                                    # the full [B, L, V] logits)
+    microbatch: int = 1             # grad-accumulation chunks per step
+    prefill_microbatch: int = 1     # batch-chunked prefill (serving)
+    attn_chunk: int = 256           # q-chunk for the XLA attention path
+    # FSDP('data') on top of TP: required for 27B+ params, a PESSIMIZATION
+    # for small models (per-layer weight all-gathers dominate; see
+    # EXPERIMENTS.md section Perf HC1) — configs disable it when params fit.
+    fsdp: bool = True
+    # cost_mode: fully unroll the layer scans so compiled cost_analysis
+    # counts every layer (XLA counts a while body ONCE regardless of trip
+    # count).  Used ONLY by benchmarks/roofline.py on reduced-depth builds.
+    cost_mode: bool = False
+
+    @property
+    def moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def attn_scale(self) -> float:
+        if self.mla:
+            return float((self.qk_nope + self.qk_rope) ** -0.5)
+        return float(self.d_head ** -0.5)
+
+    def layer_windows(self) -> list[int]:
+        """Per-layer local window (0 = global).  gemma2 alternates
+        local(window), global, local, ..."""
+        if not self.local_global:
+            return [0] * self.n_layers
+        return [self.window if i % 2 == 0 else 0
+                for i in range(self.n_layers)]
+
+    def param_count(self) -> int:
+        c = self
+        d = c.d_model
+        if c.mla:
+            attn = (d * c.q_lora + c.q_lora * c.n_heads * (c.qk_nope + c.qk_rope)
+                    + d * (c.kv_lora + c.qk_rope)
+                    + c.kv_lora * c.n_heads * (c.qk_nope + c.v_head)
+                    + c.n_heads * c.v_head * d)
+        else:
+            attn = d * c.n_heads * c.d_head + 2 * d * c.n_kv_heads * c.d_head \
+                + c.n_heads * c.d_head * d
+        dense_ffn = 3 * d * c.d_ff
+        if c.moe:
+            moe_ffn = c.n_experts * 3 * d * c.moe_d_ff + d * c.n_experts
+            if c.n_shared_experts:
+                moe_ffn += 3 * d * c.moe_d_ff * c.n_shared_experts
+            n_moe = c.n_layers - c.first_dense_layers
+            ffn_total = n_moe * moe_ffn + c.first_dense_layers * dense_ffn
+        else:
+            ffn_total = c.n_layers * dense_ffn
+        total = c.n_layers * (attn + 2 * d) + ffn_total + c.vocab * d
+        if not c.tie_embeddings:
+            total += c.vocab * d
+        return total
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k of n_experts)."""
+        if not self.moe:
+            return self.param_count()
+        c = self
+        d = c.d_model
+        full = self.param_count()
+        n_moe = c.n_layers - c.first_dense_layers
+        routed_all = n_moe * c.n_experts * 3 * d * c.moe_d_ff
+        routed_active = n_moe * c.top_k * 3 * d * c.moe_d_ff
+        return full - routed_all + routed_active
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction (fp32 host init for smoke configs; eval_shape for
+# the dry-run)
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, scale=None):
+    scale = scale if scale is not None else (shape[0] ** -0.5)
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def init_layer_params(key, cfg: TransformerConfig, moe_layer: bool) -> dict:
+    ks = iter(jax.random.split(key, 24))
+    d, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p: dict[str, Any] = {"ln1": jnp.zeros((d,)), "ln2": jnp.zeros((d,))}
+    if cfg.mla:
+        p["attn"] = {
+            "wq_a": _dense(next(ks), (d, cfg.q_lora)),
+            "q_norm": jnp.zeros((cfg.q_lora,)),
+            "wq_b": _dense(next(ks), (cfg.q_lora,
+                                      H * (cfg.qk_nope + cfg.qk_rope))),
+            "wkv_a": _dense(next(ks), (d, cfg.kv_lora + cfg.qk_rope)),
+            "kv_norm": jnp.zeros((cfg.kv_lora,)),
+            "wkv_b": _dense(next(ks), (cfg.kv_lora,
+                                       H * (cfg.qk_nope + cfg.v_head))),
+            "wo": _dense(next(ks), (H * cfg.v_head, d)),
+        }
+    else:
+        p["attn"] = {
+            "wq": _dense(next(ks), (d, H * dh)),
+            "wk": _dense(next(ks), (d, Hkv * dh)),
+            "wv": _dense(next(ks), (d, Hkv * dh)),
+            "wo": _dense(next(ks), (H * dh, d)),
+        }
+    if moe_layer:
+        f = cfg.moe_d_ff
+        p["moe"] = {
+            "router": _dense(next(ks), (d, cfg.n_experts)),
+            "wg": _dense(next(ks), (cfg.n_experts, d, f)),
+            "wu": _dense(next(ks), (cfg.n_experts, d, f)),
+            "wd": _dense(next(ks), (cfg.n_experts, f, d)),
+        }
+        if cfg.n_shared_experts:
+            fs = f * cfg.n_shared_experts
+            p["moe"]["shared"] = {
+                "wg": _dense(next(ks), (d, fs)),
+                "wu": _dense(next(ks), (d, fs)),
+                "wd": _dense(next(ks), (fs, d)),
+            }
+    else:
+        p["mlp"] = {"wg": _dense(next(ks), (d, cfg.d_ff)),
+                    "wu": _dense(next(ks), (d, cfg.d_ff)),
+                    "wd": _dense(next(ks), (cfg.d_ff, d))}
+    return p
+
+
+def init_params(key, cfg: TransformerConfig) -> dict:
+    """Stacked-layer fp32 params.  Structure:
+    {embed, layers (stacked n_moe), dense_layers (stacked, optional),
+     final_norm, unembed?}"""
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    n_dense_pre = cfg.first_dense_layers
+    n_main = cfg.n_layers - n_dense_pre
+    main_moe = cfg.moe
+
+    def stack(key, n, moe_layer):
+        keys = jax.random.split(key, n)
+        layers = [init_layer_params(k, cfg, moe_layer) for k in keys]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+    params = {
+        "embed": _dense(k0, (cfg.vocab, cfg.d_model), scale=0.02),
+        "layers": stack(k1, n_main, main_moe),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+    if n_dense_pre:
+        params["dense_layers"] = stack(k2, n_dense_pre, False)
+    if not cfg.tie_embeddings:
+        params["unembed"] = _dense(k3, (cfg.d_model, cfg.vocab), scale=0.02)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _wsc(x, spec):
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # no mesh in context (single-device smoke tests)
+
+
+def _expert_ffn(buf, wg, wu, wd, cfg: TransformerConfig):
+    """Expert FFN with an EXPLICIT EP exchange.
+
+    The model<->data layout switch (the paper's C3 all-to-all) is done with
+    manual ``jax.lax.all_to_all`` inside a shard_map — GSPMD's automatic
+    reshard of the [B, E, C, d] dispatch buffer falls into its
+    replicate-fallback on the multi-pod mesh (observed 16 GiB/device), so
+    we spell out the collective:
+
+        fwd: all_to_all over EP axis (split E, concat B)  -> expert GEMMs
+             (f sharded over 'model', fp32-accumulated, psum over 'model')
+             -> all_to_all back
+        bwd: the transposed collectives, for free via shard_map autodiff.
+    """
+    if not cfg.seq_shard:      # single-device / smoke path
+        g = jnp.einsum("becd,edf->becf", buf, wg)
+        u = jnp.einsum("becd,edf->becf", buf, wu)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+        return jnp.einsum("becf,efd->becd", h, wd).astype(buf.dtype)
+
+    from jax.sharding import PartitionSpec as P
+    ep = cfg.dp_axes[-1]
+    mesh = jax.sharding.get_abstract_mesh()
+
+    def inner(buf_l, wg_l, wu_l, wd_l):
+        # buf_l [B/ndp, E, C, d] -> a2a -> [B/ndp*ep, E/ep, C, d]
+        bx = jax.lax.all_to_all(buf_l, ep, split_axis=1, concat_axis=0,
+                                tiled=True)
+        g = jnp.einsum("becd,edf->becf", bx, wg_l)
+        u = jnp.einsum("becd,edf->becf", bx, wu_l)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(bx.dtype) * u
+        o = jnp.einsum("becf,efd->becd", h, wd_l,
+                       preferred_element_type=jnp.float32)
+        o = jax.lax.psum(o, "model").astype(bx.dtype)  # TP reduce over f
+        return jax.lax.all_to_all(o, ep, split_axis=0, concat_axis=1,
+                                  tiled=True)
+
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(cfg.dp_axes, None, None, None),
+                  P(ep, None, "model"), P(ep, None, "model"),
+                  P(ep, "model", None)),
+        out_specs=P(cfg.dp_axes, None, None, None),
+        check_vma=False)(buf, wg, wu, wd)
+
+
+def _head_constraint(x, cfg: TransformerConfig):
+    """[B, H, L, D] head-sharded over 'model' when divisible (GSPMD loses
+    the head sharding through MLA's reshape chain — observed: deepseek
+    attention scores with all 128 heads on every device)."""
+    if cfg.tp_size <= 1 or not cfg.seq_shard or x.shape[1] % cfg.tp_size:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return _wsc(x, P(cfg.dp_axes, "model", None, None))
+
+
+def _logit_constraint(x, cfg: TransformerConfig):
+    """[B, c, V] vocab-sharded (the tied-embedding gradient otherwise
+    materializes a replicated fp32 [V, d] — observed on gemma2).  Pure-DP:
+    batch-sharded over both axes (an unconstrained CE scan otherwise
+    replicates 90 GiB of chunk logits)."""
+    if cfg.tp_size > 1 and not cfg.seq_shard:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = (P(cfg.dp_axes, None, "model") if cfg.tp_size > 1
+            else P(cfg.dp_axes, None, None))
+    return _wsc(x, spec)
+
+
+def swiglu(x, wg, wu, wd):
+    # bf16-stored outputs: the MXU still accumulates fp32 internally, but
+    # fp32 *materialization* of [tokens, d_ff] transients doubles HBM for
+    # nothing (observed on gemma2's 36864-wide FFN).
+    g = jnp.dot(x, wg)
+    u = jnp.dot(x, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.dot(h, wd).astype(x.dtype)
+
+
+# MoE dispatch/combine as custom-vjp GATHERS in both directions.  dispatch
+# and combine are inverse permutations, so each one's backward is the
+# other's forward gather — no batched scatter ever reaches GSPMD (whose
+# scatter partitioner replicates operands; observed 16 GiB/device).
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _moe_dispatch(k, x, tok, filled, dest):
+    """x [B,L,d] -> buf [B, EC, d]; slot s reads token tok[b,s]."""
+    buf = jnp.take_along_axis(x, tok[..., None], axis=1)
+    return jnp.where(filled[..., None], buf, 0)
+
+
+def _moe_dispatch_fwd(k, x, tok, filled, dest):
+    return _moe_dispatch(k, x, tok, filled, dest), (x.shape, dest)
+
+
+def _moe_dispatch_bwd(k, res, d_buf):
+    (B, L, d), dest = res
+    EC = d_buf.shape[1]
+    safe = jnp.minimum(dest, EC - 1)
+    dp = jnp.take_along_axis(d_buf, safe[..., None], axis=1)
+    dp = jnp.where((dest < EC)[..., None], dp, 0)
+    dx = dp.reshape(B, L, k, d).sum(axis=2).astype(d_buf.dtype)
+    return dx, None, None, None
+
+
+_moe_dispatch.defvjp(_moe_dispatch_fwd, _moe_dispatch_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _moe_combine(k, out_flat, dest, src_pair):
+    """out_flat [B, EC, d] -> per-pair rows [B, L*k, d] via dest."""
+    EC = out_flat.shape[1]
+    safe = jnp.minimum(dest, EC - 1)
+    y = jnp.take_along_axis(out_flat, safe[..., None], axis=1)
+    return jnp.where((dest < EC)[..., None], y, 0)
+
+
+def _moe_combine_fwd(k, out_flat, dest, src_pair):
+    return _moe_combine(k, out_flat, dest, src_pair), \
+        (out_flat.shape, src_pair)
+
+
+def _moe_combine_bwd(k, res, d_y):
+    (B, EC, d), src_pair = res
+    Lk = d_y.shape[1]
+    safe = jnp.minimum(src_pair, Lk - 1)
+    dout = jnp.take_along_axis(d_y, safe[..., None], axis=1)
+    dout = jnp.where((src_pair < Lk)[..., None], dout, 0)
+    return dout.astype(d_y.dtype), None, None
+
+
+_moe_combine.defvjp(_moe_combine_fwd, _moe_combine_bwd)
+
+
+def moe_block(x: jax.Array, p: dict, cfg: TransformerConfig) -> jax.Array:
+    """Per-sequence grouped top-k dispatch.  x [B, L, d] -> [B, L, d]."""
+    B, L, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(8, int(np.ceil(L * k * cfg.capacity_factor / E)))
+    C = min(C, L * k)
+    logits = jnp.einsum("bld,de->ble", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                 # [B, L, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    ef = eidx.reshape(B, L * k)
+    oh = jax.nn.one_hot(ef, E, dtype=jnp.int32)          # [B, Lk, E]
+    pos = jnp.cumsum(oh, axis=1) - oh
+    slot = jnp.take_along_axis(pos, ef[..., None], -1)[..., 0]  # [B, Lk]
+    keep = slot < C
+    dest = jnp.where(keep, ef * C + slot, E * C)         # OOB -> dropped
+    # Dispatch via an int32 id-scatter + feature GATHER: scattering the
+    # feature tensor itself is replicated by GSPMD's scatter partitioner
+    # (observed 390 GiB/device); scattering only pair ids keeps the scatter
+    # tiny and the [B, E*C, d] buffer comes from a batched gather, which
+    # partitions cleanly on the batch dim.
+    sentinel = L * k
+    pair_ids = jnp.broadcast_to(jnp.arange(L * k, dtype=jnp.int32)[None],
+                                (B, L * k))
+    src_pair = jnp.full((B, E * C), sentinel, jnp.int32)
+    src_pair = src_pair.at[jnp.arange(B)[:, None], dest].set(pair_ids)
+    tok = jnp.minimum(src_pair // k, L - 1)              # [B, E*C]
+    filled = src_pair < sentinel
+    buf = _moe_dispatch(k, x, tok, filled, dest).reshape(B, E, C, d)
+    out = _expert_ffn(buf, p["wg"], p["wu"], p["wd"], cfg)
+    out = out.reshape(B, E * C, d)
+    y_pair = _moe_combine(k, out, dest, src_pair)
+    y_pair = y_pair * (keep[..., None] *
+                       gate.reshape(B, L * k)[..., None]).astype(y_pair.dtype)
+    y = y_pair.reshape(B, L, k, d).sum(axis=2).astype(x.dtype)
+    if cfg.seq_shard:
+        from jax.sharding import PartitionSpec as P
+        y = _wsc(y, P(cfg.dp_axes, None, None))
+    if "shared" in p:
+        sh = p["shared"]
+        y = y + swiglu(x, sh["wg"], sh["wu"], sh["wd"])
+    return y
+
+
+def _gqa_qkv(x, ap, cfg, positions):
+    B, L, _ = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.dot(x, ap["wq"]).reshape(B, L, H, dh).transpose(0, 2, 1, 3)
+    kk = jnp.dot(x, ap["wk"]).reshape(B, L, Hkv, dh).transpose(0, 2, 1, 3)
+    vv = jnp.dot(x, ap["wv"]).reshape(B, L, Hkv, dh).transpose(0, 2, 1, 3)
+    q = rope(q, positions[None, None, :], cfg.rope_theta)
+    kk = rope(kk, positions[None, None, :], cfg.rope_theta)
+    return q, kk, vv
+
+
+def _mla_qkv(x, ap, cfg, positions):
+    """MLA decompression path (train/prefill).  Returns q,k [B,H,L,nope+rope]
+    and v [B,H,L,v_head], plus the latent cache entries."""
+    B, L, _ = x.shape
+    H = cfg.n_heads
+    cq = rms_norm(jnp.dot(x, ap["wq_a"]), ap["q_norm"], cfg.norm_eps)
+    q = jnp.dot(cq, ap["wq_b"]).reshape(B, L, H, cfg.qk_nope + cfg.qk_rope)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope], axis=-1)
+    kv_a = jnp.dot(x, ap["wkv_a"])
+    c_kv, k_rope = jnp.split(kv_a, [cfg.kv_lora], axis=-1)
+    c_kv = rms_norm(c_kv, ap["kv_norm"], cfg.norm_eps)      # [B, L, kv_lora]
+    kv = jnp.dot(c_kv, ap["wkv_b"]).reshape(B, L, H, cfg.qk_nope + cfg.v_head)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope], axis=-1)
+    pos = positions[None, :]
+    q_rope = rope(q_rope.transpose(0, 2, 1, 3), pos[:, None],
+                  cfg.rope_theta).transpose(0, 2, 1, 3)
+    k_rope = rope(k_rope, pos, cfg.rope_theta)               # [B, L, rope]
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, L, H, cfg.qk_rope))
+    q_full = jnp.concatenate([q_nope, q_rope], -1).transpose(0, 2, 1, 3)
+    k_full = jnp.concatenate([k_nope, k_rope_h], -1).transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    return q_full, k_full, v, (c_kv, k_rope)
+
+
+def attn_block(x, ap, cfg: TransformerConfig, positions, window: int):
+    B, L, d = x.shape
+    if cfg.mla:
+        q, k, v, cache_entry = _mla_qkv(x, ap, cfg, positions)
+        q = _head_constraint(q, cfg)
+        k = _head_constraint(k, cfg)
+        v = _head_constraint(v, cfg)
+        o = attention(q, k, v, causal=True, softcap=cfg.attn_softcap,
+                      window=window, scale=cfg.attn_scale,
+                      impl=cfg.attn_impl, bq=cfg.attn_chunk,
+                      unroll=cfg.cost_mode)
+        o = _head_constraint(o, cfg)
+        o = o.transpose(0, 2, 1, 3).reshape(B, L, cfg.n_heads * cfg.v_head)
+    else:
+        q, k, v = _gqa_qkv(x, ap, cfg, positions)
+        cache_entry = (k, v)
+        q = _head_constraint(q, cfg)
+        o = attention(q, k, v, causal=True, softcap=cfg.attn_softcap,
+                      window=window, scale=cfg.attn_scale,
+                      impl=cfg.attn_impl, bq=cfg.attn_chunk,
+                      unroll=cfg.cost_mode)
+        o = _head_constraint(o, cfg)
+        o = o.transpose(0, 2, 1, 3).reshape(B, L, cfg.n_heads * cfg.d_head)
+    return jnp.dot(o, ap["wo"]).astype(x.dtype), cache_entry
+
+
+def _sp_constraint(x, cfg: TransformerConfig):
+    """Sequence-parallel activation sharding between blocks: tokens over
+    'model', batch over the DP axes (pure-DP configs: batch only).  GSPMD
+    derives the Megatron-SP all-gather/reduce-scatter pattern around the
+    matmuls."""
+    if cfg.tp_size > 1 and not cfg.seq_shard:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = (P(cfg.dp_axes, "model", None) if cfg.tp_size > 1
+            else P(cfg.dp_axes, None, None))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, NameError):
+        return x  # no mesh in context (single-device smoke tests)
+
+
+def layer_fwd(x, lp, cfg: TransformerConfig, positions, window: int,
+              moe_layer: bool, return_cache: bool = False):
+    x = _sp_constraint(x, cfg)
+    h, cache = attn_block(rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"],
+                          cfg, positions, window)
+    x = x + h
+    z = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if moe_layer:
+        x = x + moe_block(z, lp["moe"], cfg)
+    else:
+        x = x + swiglu(z, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+    # constrain the OUTPUT too: the scan carry (what remat saves per layer)
+    # must be sequence-sharded, or 40+ layers of replicated residuals blow
+    # past HBM (observed: phi3 28 GiB -> fits after this).
+    x = _sp_constraint(x, cfg)
+    return (x, cache) if return_cache else (x, None)
+
+
+# ---------------------------------------------------------------------------
+# Full forward: train loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.bfloat16)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), jnp.bfloat16)
+    return x
+
+
+def _unembed(params, x, cfg):
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = jnp.dot(x, w.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def _scan_layers(x, params, cfg: TransformerConfig, positions,
+                 collect_cache: bool = False):
+    """Scan the stacked layers.  gemma2's alternating local/global pattern
+    scans PAIRS (the stacked params were built with n_layers entries; we
+    reindex as [n/2, 2, ...] so each scan step applies local then global)."""
+    windows = cfg.layer_windows()
+
+    def make_body(window, moe_layer):
+        def body(h, lp):
+            h2, cache = layer_fwd(h, lp, cfg, positions, window, moe_layer,
+                                  return_cache=collect_cache)
+            return h2, cache
+        return jax.checkpoint(body) if cfg.remat else body
+
+    caches = []
+    if "dense_layers" in params:
+        body = make_body(0, False)
+        x, c = jax.lax.scan(body, x, params["dense_layers"],
+                            unroll=True if cfg.cost_mode else 1)
+        caches.append(c)
+    if cfg.local_global:
+        n = cfg.n_layers
+        assert n % 2 == 0
+        stacked = jax.tree.map(lambda a: a.reshape(n // 2, 2, *a.shape[1:]),
+                               params["layers"])
+        def pair_body(h, lp2):
+            l0 = jax.tree.map(lambda a: a[0], lp2)
+            l1 = jax.tree.map(lambda a: a[1], lp2)
+            h, c0 = layer_fwd(h, l0, cfg, positions, windows[0], cfg.moe,
+                              return_cache=collect_cache)
+            h, c1 = layer_fwd(h, l1, cfg, positions, 0, cfg.moe,
+                              return_cache=collect_cache)
+            if collect_cache:
+                c = jax.tree.map(lambda a, b: jnp.stack([a, b]), c0, c1)
+            else:
+                c = None
+            return h, c
+        pb = jax.checkpoint(pair_body) if cfg.remat else pair_body
+        x, c = jax.lax.scan(pb, x, stacked,
+                            unroll=True if cfg.cost_mode else 1)
+        if collect_cache:
+            c = jax.tree.map(
+                lambda a: a.reshape(n, *a.shape[2:]), c)
+        caches.append(c)
+    else:
+        body = make_body(0, cfg.moe)
+        x, c = jax.lax.scan(body, x, params["layers"],
+                            unroll=True if cfg.cost_mode else 1)
+        caches.append(c)
+    if not collect_cache:
+        return x, None
+    cache = jax.tree.map(lambda *xs: jnp.concatenate(xs) if len(xs) > 1
+                         else xs[0], *caches)
+    return x, cache
+
+
+def _chunked_ce(params, x, labels, cfg: TransformerConfig) -> jax.Array:
+    """Cross-entropy scanned over token chunks — the full [B, L, V] logits
+    tensor is never materialized (V_chunk transients only)."""
+    B, L, d = x.shape
+    c = min(cfg.loss_chunk, L)
+    while L % c:
+        c -= 1
+    n = L // c
+    if n == 1:
+        logits = _logit_constraint(_unembed(params, x, cfg), cfg)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        return (lse - lab).sum()
+
+    def body(acc, inp):
+        xc, lc = inp                                  # [B, c, d], [B, c]
+        logits = _logit_constraint(_unembed(params, xc, cfg), cfg)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, lc[..., None], -1)[..., 0]
+        return acc + (lse - lab).sum(), None
+
+    xs = (x.reshape(B, n, c, d).transpose(1, 0, 2, 3),
+          labels.reshape(B, n, c).transpose(1, 0, 2))
+    body = jax.checkpoint(body) if cfg.remat else body
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs,
+                            unroll=True if cfg.cost_mode else 1)
+    return total
+
+
+def lm_loss(params, tokens, labels, cfg: TransformerConfig) -> jax.Array:
+    """Causal LM cross-entropy (mean over tokens)."""
+    B, L = tokens.shape
+    x = _embed(params, tokens, cfg)
+    positions = jnp.arange(L)
+    x, _ = _scan_layers(x, params, cfg, positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _chunked_ce(params, x, labels, cfg) / (B * L)
+
+
+def prefill(params, tokens, cfg: TransformerConfig):
+    """Serving prefill: last-token logits + KV cache.
+
+    Cache layout: GQA {'k','v'} [n_layers, B, Hkv, L, dh];
+    MLA {'c_kv' [n_layers, B, L, kv_lora], 'k_rope' [n_layers, B, L, rope]}.
+    """
+    B, L = tokens.shape
+    x = _embed(params, tokens, cfg)
+    positions = jnp.arange(L)
+    x, cache = _scan_layers(x, params, cfg, positions, collect_cache=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, x[:, -1:], cfg)[:, 0]
+    if cfg.mla:
+        cache = {"c_kv": cache[0], "k_rope": cache[1]}
+    else:
+        cache = {"k": cache[0], "v": cache[1]}
+    return logits, cache
+
+
+# -------------------------- decode ----------------------------------------
+
+def _mla_decode_attn(z, ap, cfg, c_kv_cache, k_rope_cache, pos):
+    """Absorbed-MLA decode: scores in latent space, no per-step K/V
+    decompression (deepseek-v2's serving trick).  z [B, 1, d] normed input;
+    caches [B, Lmax, kv_lora] / [B, Lmax, qk_rope]."""
+    B = z.shape[0]
+    H = cfg.n_heads
+    cq = rms_norm(jnp.dot(z, ap["wq_a"]), ap["q_norm"], cfg.norm_eps)
+    q = jnp.dot(cq, ap["wq_b"]).reshape(B, H, cfg.qk_nope + cfg.qk_rope)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope], axis=-1)   # [B,H,*]
+    q_rope = rope(q_rope[:, :, None, :], pos[:, None, None],
+                  cfg.rope_theta)[:, :, 0]                  # [B,H,rope]
+    wkv_b = ap["wkv_b"].reshape(cfg.kv_lora, H, cfg.qk_nope + cfg.v_head)
+    wk = wkv_b[:, :, :cfg.qk_nope]                          # [lora,H,nope]
+    wv = wkv_b[:, :, cfg.qk_nope:]                          # [lora,H,v]
+    q_eff = jnp.einsum("bhn,lhn->bhl", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))              # absorb
+    s = jnp.einsum("bhl,btl->bht", q_eff, c_kv_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,btr->bht", q_rope.astype(jnp.float32),
+                       k_rope_cache.astype(jnp.float32))
+    s = s * cfg.attn_scale
+    Lk = c_kv_cache.shape[1]
+    valid = jnp.arange(Lk)[None, None, :] < pos[:, None, None] + 1
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bht,btl->bhl", p, c_kv_cache.astype(jnp.float32))
+    o = jnp.einsum("bhl,lhv->bhv", ctx, wv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * cfg.v_head).astype(z.dtype)
+    return jnp.dot(o, ap["wo"]).astype(z.dtype)
+
+
+def _decode_layer(x, lp, cache_slice, cfg, pos, window, moe_layer):
+    """One decode layer.  ``window`` is a TRACED per-layer scalar (Lmax for
+    global layers) so the layer loop can be a lax.scan.  Returns
+    (x, new cache slice)."""
+    B = x.shape[0]
+    z = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        kv_a = jnp.dot(z, lp["attn"]["wkv_a"])
+        c_new, kr_new = jnp.split(kv_a, [cfg.kv_lora], axis=-1)
+        c_new = rms_norm(c_new, lp["attn"]["kv_norm"], cfg.norm_eps)
+        kr_new = rope(kr_new, pos[:, None], cfg.rope_theta)
+        ck = cache_slice["c_kv"].at[jnp.arange(B), pos].set(c_new[:, 0])
+        kr = cache_slice["k_rope"].at[jnp.arange(B), pos].set(kr_new[:, 0])
+        new_slice = {"c_kv": ck, "k_rope": kr}
+        h = _mla_decode_attn(z, lp["attn"], cfg, ck, kr, pos)
+    else:
+        H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = jnp.dot(z, lp["attn"]["wq"]).reshape(B, 1, H, dh)
+        kk = jnp.dot(z, lp["attn"]["wk"]).reshape(B, 1, Hkv, dh)
+        vv = jnp.dot(z, lp["attn"]["wv"]).reshape(B, 1, Hkv, dh)
+        q = rope(q.transpose(0, 2, 1, 3), pos[:, None, None], cfg.rope_theta)
+        kk = rope(kk.transpose(0, 2, 1, 3), pos[:, None, None],
+                  cfg.rope_theta)
+        vv = vv.transpose(0, 2, 1, 3)
+
+        def _align(t):
+            # match q/new-KV sharding to the CACHE placement (HC2): a
+            # mismatched einsum otherwise all-gathers the whole cache every
+            # step (observed: ~52 GB/step on internlm2 decode).  The cache
+            # placement is decided by Hkv (see lm_steps.cache_structs), so
+            # EVERY attention operand follows that choice.
+            if not cfg.seq_shard:
+                return t
+            from jax.sharding import PartitionSpec as P
+            if Hkv % cfg.tp_size == 0 and t.shape[1] % cfg.tp_size == 0:
+                return _wsc(t, P(cfg.dp_axes, "model", None, None))
+            if dh % cfg.tp_size == 0:
+                return _wsc(t, P(cfg.dp_axes, None, None, "model"))
+            return t
+
+        q = _align(q)
+        kk = _align(kk)
+        vv = _align(vv)
+        ck = cache_slice["k"].at[jnp.arange(B), :, pos].set(kk[:, :, 0])
+        cv = cache_slice["v"].at[jnp.arange(B), :, pos].set(vv[:, :, 0])
+        new_slice = {"k": ck, "v": cv}
+        o = decode_attention(q, ck, cv, softcap=cfg.attn_softcap,
+                             window=window, scale=cfg.attn_scale,
+                             kv_len=pos + 1)
+        o = _align(o)
+        h = o.transpose(0, 2, 1, 3).reshape(B, 1, H * dh)
+        h = jnp.dot(h, lp["attn"]["wo"]).astype(x.dtype)
+    x = x + h
+    z2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if moe_layer:
+        x = x + moe_block(z2, lp["moe"], cfg)
+    else:
+        x = x + swiglu(z2, lp["mlp"]["wg"], lp["mlp"]["wu"], lp["mlp"]["wd"])
+    return x, new_slice
+
+
+def decode_step(params, cache, tokens, pos, cfg: TransformerConfig):
+    """One serving decode step, layers scanned with the cache as ys.
+
+    tokens [B] int32; pos [B] int32 = number of valid cache entries (the
+    position this token is written at).  Returns (logits [B, V], cache').
+    """
+    B = tokens.shape[0]
+    x = _embed(params, tokens[:, None], cfg)             # [B, 1, d]
+    windows = np.array(
+        [w if w > 0 else (1 << 30) for w in cfg.layer_windows()], np.int32)
+    n_pre = params["dense_layers"]["ln1"].shape[0] \
+        if "dense_layers" in params else 0
+
+    def make_scan(moe_layer):
+        def body(x, xs):
+            lp, cache_slice, window = xs
+            x, new_slice = _decode_layer(x, lp, cache_slice, cfg, pos,
+                                         window, moe_layer)
+            return x, new_slice
+        return body
+
+    new_cache_parts = []
+    if n_pre:
+        pre_cache = jax.tree.map(lambda a: a[:n_pre], cache)
+        x, nc = jax.lax.scan(
+            make_scan(False), x,
+            (params["dense_layers"], pre_cache,
+             jnp.asarray(windows[:n_pre])),
+            unroll=True if cfg.cost_mode else 1)
+        new_cache_parts.append(nc)
+    main_cache = jax.tree.map(lambda a: a[n_pre:], cache)
+    x, nc = jax.lax.scan(
+        make_scan(cfg.moe), x,
+        (params["layers"], main_cache, jnp.asarray(windows[n_pre:])),
+        unroll=True if cfg.cost_mode else 1)
+    new_cache_parts.append(nc)
+    if len(new_cache_parts) > 1:
+        new_cache = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs), *new_cache_parts)
+    else:
+        new_cache = new_cache_parts[0]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, x, cfg)[:, 0]
+    return logits, new_cache

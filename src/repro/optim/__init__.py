@@ -1,0 +1,3 @@
+from repro.optim import adamw, data_parallel, sgd, split_sgd  # noqa: F401
+from repro.optim.split_sgd import (combine_split, split_fp32,  # noqa: F401
+                                   SplitParams)

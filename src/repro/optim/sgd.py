@@ -1,0 +1,27 @@
+"""Plain fp32 SGD (DLRM's default optimizer) — the baseline Split-SGD must
+match bit-for-bit on the update rule."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_momentum(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def apply_updates(params: Any, grads: Any, lr,
+                  momentum: Optional[Any] = None, beta: float = 0.0):
+    if momentum is None:
+        return jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+    new_mom = jax.tree.map(
+        lambda m, g: beta * m + g.astype(jnp.float32), momentum, grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params, new_mom)
+    return new_params, new_mom

@@ -1,0 +1,1 @@
+from repro.serve.loop import BatchingServer  # noqa: F401

@@ -1,0 +1,50 @@
+"""Minimal batched serving loop (the serve_p99 path).
+
+Requests queue up; the server pads them to the compiled batch size and runs
+the jitted score step.  Latency percentiles are tracked so the examples can
+report p50/p99 — the metric the ``serve_p99`` shape exists for.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Callable
+
+import numpy as np
+
+
+class BatchingServer:
+    def __init__(self, score_fn: Callable[[dict], np.ndarray],
+                 batch_size: int, pad_batch: Callable[[list], dict],
+                 max_wait_ms: float = 2.0):
+        self.score_fn = score_fn
+        self.batch_size = batch_size
+        self.pad_batch = pad_batch
+        self.max_wait_ms = max_wait_ms
+        self.queue: deque = deque()
+        self.latencies_ms: list[float] = []
+
+    def submit(self, request: Any):
+        self.queue.append((time.perf_counter(), request))
+
+    def drain(self):
+        """Process the queue in compiled-batch chunks."""
+        while self.queue:
+            n = min(self.batch_size, len(self.queue))
+            items = [self.queue.popleft() for _ in range(n)]
+            t_in = [t for t, _ in items]
+            reqs = [r for _, r in items]
+            batch = self.pad_batch(reqs)
+            scores = np.asarray(self.score_fn(batch))[:n]
+            t_done = time.perf_counter()
+            self.latencies_ms += [(t_done - t) * 1e3 for t in t_in]
+            yield reqs, scores
+
+    def percentiles(self) -> dict:
+        if not self.latencies_ms:
+            return {}
+        a = np.asarray(self.latencies_ms)
+        return {"p50_ms": float(np.percentile(a, 50)),
+                "p99_ms": float(np.percentile(a, 99)),
+                "mean_ms": float(a.mean()), "n": int(a.size)}

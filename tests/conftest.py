@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 device (the
+# 512-device override belongs ONLY to repro.launch.dryrun).  Distributed
+# behaviour is tested via subprocesses in test_distributed.py.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,71 @@
+"""Data pipeline: index-skew generator and the fanout neighbor sampler."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.graph import NeighborSampler, random_powerlaw_graph
+from repro.data.synthetic import SparseBatchSpec, sparse_batch, zipf_indices
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(10, 10_000), st.floats(0.0, 2.0))
+def test_zipf_in_range(vocab, alpha):
+    rng = np.random.default_rng(0)
+    idx = zipf_indices(rng, vocab, (256,), alpha)
+    assert idx.min() >= 0 and idx.max() < vocab
+
+
+def test_zipf_skew_increases_contention():
+    rng = np.random.default_rng(0)
+    flat = zipf_indices(rng, 10_000, (20_000,), 0.0)
+    skew = zipf_indices(np.random.default_rng(0), 10_000, (20_000,), 1.2)
+    assert len(np.unique(skew)) < len(np.unique(flat)) * 0.5
+
+
+def test_sparse_batch_shapes():
+    spec = SparseBatchSpec((100, 50, 20), None, pooling=4, batch=32,
+                           num_dense=8)
+    b = sparse_batch(np.random.default_rng(0), spec)
+    assert b["idx"].shape == (32, 3, 4)
+    assert b["dense_x"].shape == (32, 8)
+    assert b["labels"].shape == (32,)
+    for s, rows in enumerate((100, 50, 20)):
+        assert b["idx"][:, s].max() < rows
+
+
+def test_sparse_batch_slot_sharing():
+    spec = SparseBatchSpec((1000, 7), (0, 0, 0, 1), pooling=1, batch=16)
+    b = sparse_batch(np.random.default_rng(0), spec)
+    assert b["idx"].shape == (16, 4, 1)
+    assert b["idx"][:, :3].max() < 1000
+    assert b["idx"][:, 3].max() < 7
+
+
+def test_neighbor_sampler_validity():
+    g = random_powerlaw_graph(5000, 60_000, seed=1)
+    s = NeighborSampler(g, fanout=(5, 3), n_pad=32, e_pad=32, seed=0)
+    sub = s.sample(42)
+    n_real, e_real = sub["n_real"], int(sub["edge_mask"].sum())
+    assert sub["nodes"][0] == 42                      # target is node 0
+    assert 1 <= n_real <= 32
+    # every real edge uses only relabeled local ids < n_real
+    assert sub["src"][:e_real].max(initial=0) < n_real
+    assert sub["dst"][:e_real].max(initial=0) < n_real
+    # all sampled neighbors are true graph neighbors of their parent
+    for i in range(e_real):
+        child = sub["nodes"][sub["src"][i]]
+        parent = sub["nodes"][sub["dst"][i]]
+        lo, hi = g.indptr[parent], g.indptr[parent + 1]
+        assert child in g.indices[lo:hi]
+
+
+def test_neighbor_sampler_batch():
+    g = random_powerlaw_graph(2000, 20_000, seed=2)
+    s = NeighborSampler(g, fanout=(4, 2), n_pad=16, e_pad=16, seed=0)
+    feats = np.random.default_rng(0).standard_normal((2000, 6)).astype(
+        np.float32)
+    labels = np.random.default_rng(1).integers(0, 5, 2000)
+    batch = s.sample_batch(np.array([1, 2, 3, 4]), feats, labels)
+    assert batch["feats"].shape == (4, 16, 6)
+    assert batch["src"].shape == (4, 16)
+    assert batch["labels"].shape == (4,)

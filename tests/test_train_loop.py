@@ -1,0 +1,58 @@
+"""Train loop fault tolerance: straggler detection, data rebalancing,
+checkpoint/restore mid-run."""
+
+import numpy as np
+
+from repro.train import StragglerMonitor, TrainLoop, TrainLoopConfig
+from repro.train.loop import DataRebalancer
+
+
+def test_straggler_detection():
+    mon = StragglerMonitor(window=20, threshold=2.0)
+    for i in range(20):
+        assert not mon.record(i, 0.1)
+    assert mon.record(20, 0.5)          # 5x median
+    assert not mon.record(21, 0.12)
+    assert len(mon.events) == 1
+
+
+def test_straggler_callback():
+    hits = []
+    mon = StragglerMonitor(window=10, threshold=1.5,
+                           on_straggler=lambda s, dt, med: hits.append(s))
+    for i in range(12):
+        mon.record(i, 0.1)
+    mon.record(99, 1.0)
+    assert hits == [99]
+
+
+def test_rebalancer_conserves_batch():
+    rb = DataRebalancer(n_hosts=4)
+    rb.penalize(2)
+    rb.penalize(2)
+    rows = rb.rows_per_host(1024)
+    assert rows.sum() == 1024
+    assert rows[2] < rows[0]
+    # floor: repeated penalties never starve a host below min_share
+    for _ in range(50):
+        rb.penalize(2)
+    assert rb.rows_per_host(1024)[2] >= int(0.5 / 4 * 1024) - 1
+
+
+def test_loop_checkpoint_restore(tmp_path):
+    def step(state, batch):
+        return state + 1, float(state)
+
+    batches = iter(range(10_000))
+    loop = TrainLoop(TrainLoopConfig(steps=10, ckpt_dir=str(tmp_path),
+                                     ckpt_every=5, log_every=100),
+                     step, 0, batches)
+    loop.run()
+    # a fresh loop restores and continues
+    loop2 = TrainLoop(TrainLoopConfig(steps=15, ckpt_dir=str(tmp_path),
+                                      ckpt_every=5, log_every=100),
+                      step, 0, batches)
+    assert loop2.start_step == 10
+    assert int(loop2.state) == 10
+    loop2.run()
+    assert int(loop2.state) == 15
