@@ -60,6 +60,22 @@ def rows() -> list[tuple[str, float, str]]:
         out.append((f"embed_update_dedup_split_{tag}", us,
                     "alg4-dedup+split-sgd"))
 
+        # fused Pallas kernel (kernels/embedding_update), interpret-mode
+        # emulation on CPU: the while-loop grid round-trips every carried
+        # buffer per step (O(shard) per touched row), so time a tiny
+        # sub-shard only — bench_split_sgd.py --fused has the full-size
+        # bytes/step roofline that transfers to hardware.
+        from repro.kernels import ops as kops
+        Mm = 5_000
+        Lm = (256 // P) * P          # keep L a multiple of P: bag ids of
+        us = timeit(jax.jit(          # lookups [0, Lm) must index dY[:Lm//P]
+            lambda h, l, t, d: kops.fused_embedding_update(
+                h, l, t, d, 0.1, pooling=P, interpret=True)),
+            hi[:Mm], lo[:Mm], jnp.minimum(flat_g[:Lm], Mm - 1),
+            dY.reshape(-1, 64)[:Lm // P], iters=1)
+        out.append((f"embed_update_fused_split_{tag}", us,
+                    f"pallas-fused-interpret-M{Mm}-L{Lm}"))
+
     # MLP + interaction
     from repro.models.mlp import init_mlp, mlp_forward
     from repro.core.interaction import dot_interaction

@@ -1,7 +1,21 @@
-"""Paper Fig. 16 + Sect. VII accounting: Split-SGD-BF16 convergence parity
-and capacity/bandwidth table."""
+"""Paper Fig. 16 + Sect. VII accounting: Split-SGD-BF16 convergence parity,
+capacity/bandwidth table, and the fused-vs-reference embedding update
+roofline (kernels/embedding_update.py).
 
+    PYTHONPATH=src python benchmarks/bench_split_sgd.py [--fused|--reference]
+        [--json BENCH_embedding_update.json]
+
+The update section reports THEORETICAL bytes/step for both paths (the
+acceptance metric: the fused path touches O(unique_rows) data, the
+reference path O(shard_rows)) plus measured wall-clock.  The fused kernel
+runs in Pallas interpret mode on CPU — its wall-clock is an emulation
+artifact; the bytes model is the TPU-relevant number.
+"""
+
+import argparse
+import json
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "examples"))
@@ -30,9 +44,128 @@ def rows():
     return out
 
 
-def main():
+def _timeit(fn, *args, iters=5):
+    # local copy of bench_ops.timeit: these files run both as scripts and
+    # as benchmarks.* modules, so a cross-file import would need dual-path
+    # resolution for a three-line helper
+    import jax
+    jax.block_until_ready(fn(*args))          # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def embedding_update_bench(modes=("reference", "fused"),
+                           M=200_000, E=64, B=512, S=8, P=4, zipf=1.05,
+                           measure_fused=False):
+    """Fused vs reference sparse Split-SGD update on one shard.
+
+    Returns a JSON-able dict with the bytes/step roofline model and
+    measured wall-clock per requested mode."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.sharded_embedding import apply_rows_split_sgd
+    from repro.data.synthetic import zipf_indices
+    from repro.kernels import ops
+    from repro.optim.split_sgd import split_fp32
+
+    rng = np.random.default_rng(0)
+    L, NB = B * S * P, B * S
+    W = jnp.asarray(rng.standard_normal((M, E)), jnp.float32)
+    hi, lo = split_fp32(W)
+    tgt = jnp.asarray(
+        zipf_indices(rng, M, (L,), zipf).astype(np.int32))
+    dY = jnp.asarray(rng.standard_normal((NB, E)), jnp.float32)
+    grad_rows = jnp.take(dY, jnp.arange(L) // P, axis=0)
+    U = int(len(np.unique(np.asarray(tgt))))
+
+    # --- bytes/step roofline model --------------------------------------
+    # reference: materialize the [L, E] per-lookup gradient (write+read),
+    # segment-sum it (write), gather+combine the L candidate rows, then the
+    # functional scatter COPIES the whole (hi, lo) shard (read+write of
+    # M rows x 4 B/elem).
+    ref_bytes = {
+        "grad_expand_rw": 2 * L * E * 4,
+        "segment_sum_out": L * E * 4,
+        "row_gather": L * E * 4,
+        "shard_copy_rw": 2 * M * E * 4,
+    }
+    # fused: touched rows in+out (2+2 B/elem each way), dY once, and the
+    # int32 sort of the L flat row ids. No dense dW, no shard copy.
+    fused_bytes = {
+        "touched_rows_rw": 2 * U * E * 4,
+        "dY_read": NB * E * 4,
+        "index_sort": 3 * L * 4,
+    }
+    result = {
+        "config": {"shard_rows": M, "dim": E, "batch": B, "slots": S,
+                   "pooling": P, "flat_lookups": L, "unique_rows": U,
+                   "zipf": zipf},
+        "reference": {"bytes_per_step": sum(ref_bytes.values()),
+                      "bytes_breakdown": ref_bytes,
+                      "touches": "O(shard_rows)"},
+        "fused": {"bytes_per_step": sum(fused_bytes.values()),
+                  "bytes_breakdown": fused_bytes,
+                  "touches": "O(unique_rows)"},
+    }
+    result["model_speedup"] = (result["reference"]["bytes_per_step"]
+                               / result["fused"]["bytes_per_step"])
+
+    # --- measured wall-clock -------------------------------------------
+    if "reference" in modes:
+        f = jax.jit(apply_rows_split_sgd)
+        result["reference"]["us_measured"] = _timeit(f, hi, lo, tgt,
+                                                     grad_rows, 0.05)
+    if measure_fused and "fused" in modes:
+        # CPU interpret emulation runs the grid as an XLA while-loop that
+        # round-trips EVERY carried buffer per step — O(shard_rows) per
+        # touched row, the exact inverse of the kernel's on-TPU profile.
+        # So: opt-in (--fused), tiny shard, one iteration.  The bytes model
+        # above is the hardware-relevant number.
+        Mm, Lm = 5_000, 256
+        f = jax.jit(lambda h, l, t, d: ops.fused_embedding_update(
+            h, l, t, d, 0.05, pooling=P, interpret=True))
+        us = _timeit(f, hi[:Mm], lo[:Mm],
+                     jnp.minimum(tgt[:Lm], Mm - 1), dY[:Lm // P], iters=1)
+        result["fused"]["us_measured_interpret"] = us
+        result["fused"]["measured_lookups"] = Lm
+        result["fused"]["measured_shard_rows"] = Mm
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--fused", action="store_true",
+                   help="measure only the fused Pallas path")
+    g.add_argument("--reference", action="store_true",
+                   help="measure only the segment_sum reference path")
+    ap.add_argument("--json", default="BENCH_embedding_update.json",
+                    help="where to write the update-bench JSON")
+    args, _ = ap.parse_known_args(argv)
+
     for name, val, derived in rows():
         print(f"{name},{val:.2f},{derived}")
+
+    modes = (("fused",) if args.fused else
+             ("reference",) if args.reference else ("reference", "fused"))
+    res = embedding_update_bench(modes, measure_fused=args.fused)
+    for path in ("reference", "fused"):
+        b = res[path]["bytes_per_step"]
+        print(f"embed_update_{path}_bytes_per_step,{b:.0f},"
+              f"{res[path]['touches']}")
+    print(f"embed_update_model_speedup,{res['model_speedup']:.1f},"
+          f"bytes(ref)/bytes(fused) at U={res['config']['unique_rows']}")
+    for path in ("reference", "fused"):
+        for k in ("us_measured", "us_measured_interpret"):
+            if k in res[path]:
+                print(f"embed_update_{path}_{k},{res[path][k]:.1f},us")
+    Path(args.json).write_text(json.dumps(res, indent=2))
+    print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

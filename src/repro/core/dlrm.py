@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.embedding import EmbeddingSpec
 from repro.core import sharded_embedding as se
 from repro.core.interaction import dot_interaction, interaction_output_dim
@@ -46,6 +47,11 @@ class DLRMConfig:
     batch: int = 2048               # global minibatch
     emb_mode: str = "row"           # 'row' | 'table'  (C3 placement)
     split_sgd: bool = True          # C5 on/off
+    # Pallas fused sparse-bwd + Split-SGD update (bit-identical to the
+    # reference).  None = on where the kernel compiles (TPU), off elsewhere
+    # (CPU interpret emulation pays O(shard) per grid step); True/False
+    # forces the choice for A/B benchmarking and tests.
+    fused_update: Optional[bool] = None
     compress_grads: bool = False    # bf16 wire + error feedback
     num_buckets: int = 4            # C4 bucketing
     lr: float = 0.1
@@ -220,6 +226,8 @@ def make_train_step(cfg: DLRMConfig, mesh):
     all_axes, model, batch_axes = mesh_axes(mesh)
     emb_ax, replica_ax = emb_axes_for(cfg, mesh)
     B = cfg.batch
+    fused = (jax.default_backend() == "tpu" if cfg.fused_update is None
+             else cfg.fused_update)
 
     def step_local(state, batch):
         emb_store = state["emb"]
@@ -243,12 +251,16 @@ def make_train_step(cfg: DLRMConfig, mesh):
         if cfg.split_sgd:
             hi2, lo2 = se.apply_update_scan(
                 layout, (emb_store["hi"], emb_store["lo"]), idx, dY,
-                cfg.lr, emb_ax, split=True, replica_axes=replica_ax)
+                cfg.lr, emb_ax, split=True, replica_axes=replica_ax,
+                fused=fused)
             new_emb = {"hi": hi2, "lo": lo2}
         else:
+            # NB: the fused fp32 kernel pre-reduces duplicates (one rounding
+            # per row) where the reference scatter-adds per lookup, so the
+            # two non-split paths are close but not bit-identical.
             w2 = se.apply_update_scan(layout, emb_store["w"], idx, dY,
                                       cfg.lr, emb_ax, split=False,
-                                      replica_axes=replica_ax)
+                                      replica_axes=replica_ax, fused=fused)
             new_emb = {"w": w2}
 
         # --- dense RS+AG split-SGD (C4+C5) -------------------------------
@@ -262,7 +274,7 @@ def make_train_step(cfg: DLRMConfig, mesh):
                                "err": st2.err_shard}}
         return new_state, jax.lax.psum(loss, all_axes)
 
-    step = jax.shard_map(step_local, mesh=mesh,
+    step = compat.shard_map(step_local, mesh=mesh,
                          in_specs=(specs, bspecs),
                          out_specs=(specs, P()),
                          check_vma=False)
@@ -287,6 +299,6 @@ def make_eval_step(cfg: DLRMConfig, mesh):
                                batch["dense_x"], cfg.mlp_impl)
         return jax.nn.sigmoid(logits)
 
-    ev = jax.shard_map(eval_local, mesh=mesh, in_specs=(specs, bspecs),
+    ev = compat.shard_map(eval_local, mesh=mesh, in_specs=(specs, bspecs),
                        out_specs=P(all_axes), check_vma=False)
     return jax.jit(ev), shardings, bspecs, layout

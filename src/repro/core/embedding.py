@@ -144,19 +144,46 @@ def lookup(W: jax.Array, idx: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def bag_update(W: jax.Array, g: jax.Array, dY: jax.Array, lr,
-               weights: jax.Array | None = None) -> jax.Array:
+               weights: jax.Array | None = None,
+               method: str = "scatter") -> jax.Array:
     """Apply the fused sparse SGD step for a bag lookup.
 
     ``W``: [M, E]; ``g``: [B, S, P]; ``dY``: [B, S, E] cotangent of the bag
-    output.  Returns the updated W (pure-functional scatter-add).
+    output.  Returns the updated W.
+
+    ``method``:
+      * ``"scatter"`` — XLA scatter-add (Alg. 3; duplicates accumulate via
+        the deterministic scatter).  The functional update copies the shard.
+      * ``"fused"`` — the Pallas fused kernel
+        (:mod:`repro.kernels.embedding_update`): sort + in-VMEM duplicate
+        pre-reduction, touched rows only, in-place.  No [B,S,P,E] gradient
+        expansion and no shard copy.  ``weights`` unsupported.
     """
     B, S, P = g.shape
     E = W.shape[1]
+    if method == "fused":
+        if weights is not None:
+            raise NotImplementedError("per-lookup weights on the fused path")
+        from repro.kernels import ops
+        return ops.fused_embedding_update_fp32(
+            W, g.reshape(-1), dY.reshape(B * S, E), lr, pooling=P)
     upd = jnp.broadcast_to(dY[:, :, None, :], (B, S, P, E))
     if weights is not None:
         upd = upd * weights[..., None]
     upd = (-lr * upd.astype(jnp.float32)).reshape(-1, E).astype(W.dtype)
     return W.at[g.reshape(-1)].add(upd)
+
+
+def bag_update_split(hi: jax.Array, lo: jax.Array, g: jax.Array,
+                     dY: jax.Array, lr) -> tuple[jax.Array, jax.Array]:
+    """Fused sparse backward + Split-SGD-BF16 step on a split-storage table
+    (paper Alg. 3 + C5): only the rows named by ``g`` are reconstructed,
+    stepped and re-split — in VMEM, via the Pallas fused kernel."""
+    from repro.kernels import ops
+    B, S, P = g.shape
+    E = hi.shape[1]
+    return ops.fused_embedding_update(hi, lo, g.reshape(-1),
+                                      dY.reshape(B * S, E), lr, pooling=P)
 
 
 def bag_grad_rows(g: jax.Array, dY: jax.Array, num_rows: int) -> jax.Array:

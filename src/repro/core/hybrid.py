@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.embedding import EmbeddingSpec
 from repro.core import sharded_embedding as se
 from repro.optim import data_parallel as dp
@@ -42,6 +43,12 @@ class HybridDef:
     slot_to_table: Optional[tuple] = None
     emb_mode: str = "row"
     split_sgd: bool = True
+    # fused Pallas sparse-bwd + Split-SGD row update (kernels/embedding_update)
+    # — bit-identical to the reference path, touches O(unique rows) instead of
+    # O(shard rows).  None (default) = on where the kernel compiles (TPU);
+    # off elsewhere, because CPU interpret emulation pays O(shard) per grid
+    # step.  True/False forces the choice (A/B, tests).
+    fused_update: Optional[bool] = None
     compress_grads: bool = False
     num_buckets: int = 4
     lr: float = 0.01
@@ -152,6 +159,8 @@ def make_train_step(mdef: HybridDef, mesh):
     all_axes, model, batch_axes = _mesh_axes(mesh)
     emb_ax, replica_ax = _emb_axes(mdef, mesh)
     B = mdef.batch
+    fused = (jax.default_backend() == "tpu" if mdef.fused_update is None
+             else mdef.fused_update)
 
     def step_local(state, batch):
         emb_store = state["emb"]
@@ -171,12 +180,16 @@ def make_train_step(mdef: HybridDef, mesh):
         if mdef.split_sgd:
             hi2, lo2 = se.apply_update_scan(
                 layout, (emb_store["hi"], emb_store["lo"]), idx, dY,
-                mdef.emb_lr, emb_ax, split=True, replica_axes=replica_ax)
+                mdef.emb_lr, emb_ax, split=True, replica_axes=replica_ax,
+                fused=fused)
             new_emb = {"hi": hi2, "lo": lo2}
         else:
+            # NB: the fused fp32 kernel pre-reduces duplicates (one rounding
+            # per row) where the reference scatter-adds per lookup, so the
+            # two non-split paths are close but not bit-identical.
             w2 = se.apply_update_scan(layout, emb_store["w"], idx, dY,
                                       mdef.emb_lr, emb_ax, split=False,
-                                      replica_axes=replica_ax)
+                                      replica_axes=replica_ax, fused=fused)
             new_emb = {"w": w2}
 
         st = dp.DPState(hi=state["dense"]["hi"], lo_shard=state["dense"]["lo"],
@@ -189,7 +202,7 @@ def make_train_step(mdef: HybridDef, mesh):
                                "err": st2.err_shard}}
         return new_state, jax.lax.psum(loss, all_axes)
 
-    step = jax.shard_map(step_local, mesh=mesh, in_specs=(specs, bspecs),
+    step = compat.shard_map(step_local, mesh=mesh, in_specs=(specs, bspecs),
                          out_specs=(specs, P()), check_vma=False)
     return jax.jit(step, donate_argnums=(0,)), shardings, bspecs, layout
 
@@ -209,7 +222,7 @@ def make_score_step(mdef: HybridDef, mesh, batch: int | None = None):
         emb_out = se.sharded_bag_fwd(layout, W_fwd, idx, emb_ax)
         return mdef.dense_score(state["dense"]["hi"], emb_out, batch_d)
 
-    sc = jax.shard_map(score_local, mesh=mesh, in_specs=(specs, bspecs),
+    sc = compat.shard_map(score_local, mesh=mesh, in_specs=(specs, bspecs),
                        out_specs=P(all_axes), check_vma=False)
     return jax.jit(sc), shardings, bspecs, layout
 
@@ -253,7 +266,7 @@ def make_retrieval_step(mdef: HybridDef, mesh, n_candidates: int,
 
     cand_struct = jax.ShapeDtypeStruct((n_candidates, E), jnp.bfloat16)
     cand_spec = P(all_axes, None)
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = compat.shard_map(local, mesh=mesh,
                        in_specs=(specs, bspecs, cand_spec),
                        out_specs=(P(), P()), check_vma=False)
     arg_structs = (structs, bstructs, cand_struct)

@@ -313,7 +313,7 @@ def apply_rows_sgd(W_local: jax.Array, tgt: jax.Array, grad: jax.Array,
 
 def apply_update_scan(layout: ShardedEmbeddingLayout, W_local, idx_local,
                       dY: jax.Array, lr, axis_name, split: bool = False,
-                      replica_axes=None):
+                      replica_axes=None, fused: bool = False):
     """Fused sparse bwd+SGD, scanned over batch chunks (bounded transients;
     paper configs reach P=100 where the naive [B,S,P,E] expansion is tens
     of GB).
@@ -321,7 +321,13 @@ def apply_update_scan(layout: ShardedEmbeddingLayout, W_local, idx_local,
     ``W_local``: [rows, E] array, or a (hi, lo) pair when ``split``.
     ``idx_local``: [B, S_or_K, P]; ``dY``: matching [B, S_or_K, E] (already
     passed through :func:`gather_dY`).  In table mode with replica axes the
-    index array is gathered the same way as dY."""
+    index array is gathered the same way as dY.
+
+    ``fused=True`` routes each chunk through the Pallas fused kernel
+    (:mod:`repro.kernels.embedding_update`): the [cb,S,P,E] gradient
+    expansion is never built (the kernel reads dY rows by bag id), duplicate
+    rows are pre-reduced in VMEM, and the shard is updated in place on the
+    touched rows only.  Split results are bit-identical to the reference."""
     if layout.mode == "table" and replica_axes is not None:
         idx_local = jax.lax.all_gather(idx_local, replica_axes, axis=0,
                                        tiled=True)
@@ -332,6 +338,17 @@ def apply_update_scan(layout: ShardedEmbeddingLayout, W_local, idx_local,
     cb = B // n
 
     def chunk_update(W, loc_c, val_c, dY_c):
+        if fused:
+            from repro.kernels import ops
+            tgt = loc_c.reshape(-1)
+            val = val_c.reshape(-1)
+            dYr = dY_c.reshape(cb * S, E)
+            if split:
+                hi, lo = W
+                return ops.fused_embedding_update(hi, lo, tgt, dYr, lr,
+                                                  valid=val, pooling=P)
+            return ops.fused_embedding_update_fp32(W, tgt, dYr, lr,
+                                                   valid=val, pooling=P)
         grad = jnp.broadcast_to(dY_c[:, :, None, :],
                                 (cb, S, P, E)).astype(jnp.float32)
         grad = jnp.where(val_c[..., None], grad, 0.0).reshape(-1, E)
@@ -405,8 +422,15 @@ def replicate_grad_rows(tgt: jax.Array, grad: jax.Array, replica_axes
 # ---------------------------------------------------------------------------
 # Split-SGD-BF16 sparse row update (contribution C5 on the sparse path).
 # Gather-modify-scatter needs duplicate indices PRE-REDUCED (unlike
-# scatter-add); we dedup with a sort + run-length segment-sum, then apply an
-# exact fp32 update on the touched rows only.
+# scatter-add); the reference path dedups with a sort + run-length
+# segment-sum, then applies an exact fp32 update on the touched rows — but
+# its functional scatter still copies the whole (hi, lo) shard every step.
+# The fused Pallas path (repro.kernels.embedding_update, ``fused=True``
+# here and in apply_update_scan) moves the dedup accumulation into VMEM and
+# updates the shard in place: bytes/step drops from O(shard_rows) to
+# O(unique_touched_rows) — see the table in that module's docstring and
+# benchmarks/bench_split_sgd.py for the roofline numbers.  Outputs are
+# bit-identical between the two paths (tests/test_embedding_update.py).
 # ---------------------------------------------------------------------------
 
 def dedup_rows(tgt: jax.Array, upd: jax.Array, num_rows: int
@@ -427,9 +451,19 @@ def dedup_rows(tgt: jax.Array, upd: jax.Array, num_rows: int
 
 
 def apply_rows_split_sgd(hi: jax.Array, lo: jax.Array, tgt: jax.Array,
-                         grad: jax.Array, lr) -> tuple[jax.Array, jax.Array]:
+                         grad: jax.Array, lr, fused: bool = False
+                         ) -> tuple[jax.Array, jax.Array]:
     """Exact-fp32 sparse SGD on split-bf16 storage (see
-    repro.optim.split_sgd).  ``tgt`` may contain duplicates."""
+    repro.optim.split_sgd).  ``tgt`` may contain duplicates.
+
+    ``fused=False`` (reference): segment_sum the per-row gradients, gather
+    the touched rows, combine/step/split, and scatter back — the functional
+    scatter copies the whole shard.  ``fused=True``: one Pallas pass
+    (:mod:`repro.kernels.embedding_update`) that pre-reduces duplicates in
+    VMEM and rewrites only the touched rows in place; bit-identical output."""
+    if fused:
+        from repro.kernels import ops
+        return ops.fused_embedding_update(hi, lo, tgt, grad, lr, pooling=1)
     from repro.optim.split_sgd import combine_split, split_fp32
     rep, summed = dedup_rows(tgt, grad, hi.shape[0])
     safe = jnp.minimum(rep, hi.shape[0] - 1)   # gather side must be in-bounds

@@ -1,0 +1,1 @@
+"""Distribution helpers: mesh-axis conventions and GSPMD placement policies."""

@@ -1,0 +1,86 @@
+"""Placement policy: Megatron-style TP + FSDP PartitionSpecs for LM trees.
+
+Mesh convention (shared with repro.core.hybrid / repro.core.dlrm): the LAST
+mesh axis is ``model``; every other axis is data-parallel.  Policies:
+
+* ``tp`` — Megatron tensor parallel: column-parallel projections shard the
+  OUTPUT dim over ``model`` (wq/wk/wv/wg/wu, unembed), row-parallel ones the
+  INPUT dim (wo, wd), so each pair needs one collective.  The embedding is
+  vocab-parallel (``model`` on the vocab dim).
+* ``fsdp`` — ZeRO-3 style weight sharding over the DATA axes (over the FULL
+  mesh when tp is off).  Applied to the matmul input dim, which GSPMD
+  all-gathers just-in-time.
+* MoE expert weights keep expert-parallel placement over the data axes and
+  TP over the FFN dim REGARDLESS of the dense policy — the EP all-to-all in
+  :mod:`repro.models.transformer` assumes it.
+* Norm/bias vectors and routers are replicated.
+
+Leaves are classified by their dict key (``wq``/``wo``/``embed``/... );
+leading stack dims (layers, experts) stay unsharded.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MODEL = "model"
+
+_ROW = frozenset({"wo", "wd"})           # row-parallel: model on input dim
+_REPLICATED = frozenset({"router"})
+
+
+def all_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Data-parallel axes: every mesh axis except ``model``."""
+    return tuple(a for a in mesh.axis_names if a != MODEL)
+
+
+def named(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _path_keys(path) -> list[str]:
+    return [str(k.key) for k in path if hasattr(k, "key")]
+
+
+def lm_param_specs(params, fsdp: bool = True, tp: bool = True):
+    """PartitionSpec tree for an LM param tree (see module docstring).
+
+    ``params`` may hold arrays or ShapeDtypeStructs (eval_shape trees).
+    """
+    def spec(path, leaf):
+        n = len(leaf.shape)
+        keys = _path_keys(path)
+        name = keys[-1] if keys else ""
+        if name in _REPLICATED or "norm" in name or name.startswith("ln"):
+            return P(*([None] * n))
+        if name == "embed":                      # (vocab, d): vocab-parallel
+            return P(MODEL if tp else None,
+                     _fsdp_axis(fsdp, tp) if fsdp else None)
+        moe = "moe" in keys and "shared" not in keys
+        if moe and name in ("wg", "wu"):         # (..., E, d, f): EP + TP
+            return P(*([None] * (n - 3)), "data", None, MODEL)
+        if moe and name == "wd":                 # (..., E, f, d)
+            return P(*([None] * (n - 3)), "data", MODEL, None)
+        if n < 2:
+            return P(*([None] * n))
+        lead = [None] * (n - 2)
+        if name in _ROW and tp:
+            return P(*lead, MODEL, "data" if fsdp else None)
+        col_in = _fsdp_axis(fsdp, tp) if fsdp else None
+        col_out = MODEL if tp else None
+        return P(*lead, col_in, col_out)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def _fsdp_axis(fsdp: bool, tp: bool):
+    """FSDP spans the data axes, or the FULL mesh when TP is off (ZeRO-3
+    over every device)."""
+    return "data" if tp else ("data", MODEL)

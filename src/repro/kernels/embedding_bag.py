@@ -3,10 +3,16 @@
 The hot loop of DLRM.  On CPU the paper streams consecutive cache lines per
 row and parallelizes over bags; the TPU-native structure is a
 ``PrefetchScalarGridSpec``: the index array is scalar-prefetched so the
-pipeline can issue the HBM->VMEM row DMA for lookup (n, p+1) while row
-(n, p) is being accumulated in VMEM.  The bag dimension is the outer grid
-axis (= the paper's ``#pragma omp parallel for`` over N), the pooling
-dimension the inner one, and the row accumulation is fp32.
+pipeline can issue the HBM->VMEM row DMA for lookup (n, j, p+1) while row
+(n, j, p) is being accumulated in VMEM.  The grid is blocked over BAGS —
+``bags_per_block`` bags share one VMEM output block, so the output is
+written back once per ``bags_per_block * P`` row fetches instead of once
+per bag (the write-combining the paper gets from its cache-blocked loop).
+Row accumulation is fp32.
+
+Storage dtype is polymorphic: pass the bf16 ``hi`` half of a Split-SGD
+table (:mod:`repro.optim.split_sgd`) and the forward reads 2 bytes/elem —
+the paper's bf16-table forward — while still accumulating in fp32.
 
 This kernel should run at HBM-bandwidth roofline — the GUPS-like
 expectation the paper states in Sect. II.
@@ -22,36 +28,44 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(idx_ref, w_ref, o_ref, *, pooling: int, bags_per_block: int):
-    p = pl.program_id(1)
+def _kernel(idx_ref, w_ref, o_ref):
+    j = pl.program_id(1)
+    p = pl.program_id(2)
 
-    @pl.when(p == 0)
+    @pl.when((j == 0) & (p == 0))
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    o_ref[...] += w_ref[...].astype(jnp.float32)
+    o_ref[pl.ds(j, 1), :] += w_ref[...].astype(jnp.float32)
 
 
 def embedding_bag_pallas(W: jax.Array, idx: jax.Array,
+                         bags_per_block: int = 8,
                          interpret: bool = False) -> jax.Array:
-    """W [M, E], idx [N, P] int32 -> [N, E] fp32 bag sums.
+    """W [M, E] (fp32 or bf16-``hi``), idx [N, P] int32 -> [N, E] fp32 bag
+    sums.
 
-    E must be lane-aligned (multiple of 128) for the TPU target; the ops.py
-    wrapper pads smaller embedding dims.
+    ``N % bags_per_block == 0`` and E lane-aligned (multiple of 128) on the
+    TPU target; the ops.py wrapper pads both.
     """
     M, E = W.shape
     N, P = idx.shape
-    grid = (N, P)
+    bpb = min(bags_per_block, N)
+    assert N % bpb == 0, (N, bpb)
+    grid = (N // bpb, bpb, P)
     return pl.pallas_call(
-        functools.partial(_kernel, pooling=P, bags_per_block=1),
+        _kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
                 # one embedding row per step, chosen by the prefetched index
-                pl.BlockSpec((1, E), lambda n, p, idx_ref: (idx_ref[n, p], 0)),
+                pl.BlockSpec((1, E),
+                             lambda n, j, p, idx_ref:
+                             (idx_ref[n * bpb + j, p], 0)),
             ],
-            out_specs=pl.BlockSpec((1, E), lambda n, p, idx_ref: (n, 0)),
+            out_specs=pl.BlockSpec((bpb, E),
+                                   lambda n, j, p, idx_ref: (n, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((N, E), jnp.float32),
         interpret=interpret,

@@ -1,0 +1,204 @@
+"""Pallas TPU kernel: fused sparse embedding backward + Split-SGD row update
+(paper Alg. 3 + contribution C5 composed — the operator behind the headline
+110x).
+
+The embedding backward is NOT a gradient materialization: it is a scatter-SGD
+applied directly to the table.  The paper's CPU kernel walks the minibatch's
+rows and applies ``W[r] -= lr * sum(dY of bags touching r)`` in one pass; the
+TPU-native structure here is a ``PrefetchScalarGridSpec`` over the SORTED
+flat lookups:
+
+* XLA side (cheap, O(L) on int32): sort the flat local row ids, so duplicate
+  rows form contiguous runs and each touched row is visited exactly once.
+* The sorted row ids are scalar-prefetched and drive the (hi, lo) row DMA —
+  a new row block is fetched only when the run changes.
+* Inside the kernel the duplicate contributions are accumulated in a VMEM
+  fp32 scratch (segment accumulation), then at the run end the row is
+  reconstructed ``(hi<<16)|lo``, stepped ``w -= lr * acc``, and re-split —
+  all in VMEM.
+* ``input_output_aliases`` makes the update in-place on the HBM table, so
+  rows NOT touched by the minibatch are never read, never written, and no
+  dense ``dW`` or fp32 shard copy ever exists.
+
+Bytes per step (shard of M rows x E, L flat lookups, U unique touched rows,
+NB = L / pooling bags):
+
+    path                         reads                       writes
+    ------------------------------------------------------------------
+    reference (segment_sum +     L*E*4 (grad expand)         M*E*4 (new hi+lo
+    combine_split + functional   + U*E*4 (gather hi,lo)       shard copies)
+    scatter)                     + M*E*4 (scatter copy-in)
+    fused (this kernel)          U*E*4 (hi+lo rows)          U*E*4 (hi+lo rows)
+                                 + NB*E*4 (dY)
+
+i.e. the fused path touches ``O(U)`` row data instead of ``O(M)`` shard data
+— the bandwidth profile Hsia et al. (2020) identify as the dominant memory
+bottleneck of DLRM-class training.
+
+Numerics: duplicate contributions are pre-reduced in fp32 in sorted order —
+the same order ``jax.ops.segment_sum`` uses on sorted segments — and the
+step is applied once per row, so the result is bit-identical to the
+``dedup_rows`` + ``combine_split`` reference path
+(:func:`repro.core.sharded_embedding.apply_rows_split_sgd`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# plain lax bit ops — trace fine inside the kernel body, and sharing the
+# exact expressions with the optimizer is what makes the bit-identity claim
+# structural rather than coincidental
+from repro.optim.split_sgd import combine_split, split_fp32
+
+
+def _run_bounds(rows_ref, i):
+    """(is_start, is_end) of the sorted duplicate run at position ``i``."""
+    L = pl.num_programs(0)
+    row = rows_ref[i]
+    prev = rows_ref[jnp.maximum(i - 1, 0)]
+    nxt = rows_ref[jnp.minimum(i + 1, L - 1)]
+    return (i == 0) | (row != prev), (i == L - 1) | (nxt != row)
+
+
+def _kernel_split(rows_ref, bags_ref, msk_ref, lr_ref, hi_ref, lo_ref,
+                  dY_ref, nhi_ref, nlo_ref, acc_ref):
+    i = pl.program_id(0)
+    is_start, is_end = _run_bounds(rows_ref, i)
+
+    @pl.when(is_start)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # masked accumulate: padding / invalid (non-owned) lookups add exact 0.0
+    g = dY_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.where(msk_ref[i] != 0, g, 0.0)
+
+    @pl.when(is_end)
+    def _apply():
+        # same expression as the combine_split reference: XLA contracts the
+        # mul+sub identically under jit, so the update is bit-identical to
+        # the jitted segment_sum + combine_split path
+        w32 = combine_split(hi_ref[...], lo_ref[...])
+        w32 = w32 - lr_ref[0] * acc_ref[...]
+        nh, nl = split_fp32(w32)
+        nhi_ref[...] = nh
+        nlo_ref[...] = nl
+
+
+def _kernel_fp32(rows_ref, bags_ref, msk_ref, lr_ref, w_ref, dY_ref,
+                 nw_ref, acc_ref):
+    i = pl.program_id(0)
+    is_start, is_end = _run_bounds(rows_ref, i)
+
+    @pl.when(is_start)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = dY_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.where(msk_ref[i] != 0, g, 0.0)
+
+    @pl.when(is_end)
+    def _apply():
+        w32 = w_ref[...].astype(jnp.float32) - lr_ref[0] * acc_ref[...]
+        nw_ref[...] = w32.astype(nw_ref.dtype)
+
+
+def _row_specs(E, n_out):
+    """(in_specs tail, out_specs) for the row-addressed operands.  The
+    scalar-prefetch refs (rows, bags, msk, lr — lr lives in SMEM, the
+    TPU-legal home for kernel scalars) are appended to every index_map."""
+    row = pl.BlockSpec((1, E), lambda i, rows, bags, msk, lr: (rows[i], 0))
+    bag = pl.BlockSpec((1, E), lambda i, rows, bags, msk, lr: (bags[i], 0))
+    return row, bag, [row] * n_out
+
+
+def fused_update_split_pallas(hi: jax.Array, lo: jax.Array,
+                              sorted_rows: jax.Array, sorted_bags: jax.Array,
+                              sorted_msk: jax.Array, dY: jax.Array, lr,
+                              interpret: bool = False
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Fused sparse-backward + Split-SGD-BF16 update, in place on (hi, lo).
+
+    ``hi`` [M, E] bf16 / ``lo`` [M, E] uint16: the split table shard.
+    ``sorted_rows`` [L] int32: ASCENDING local row id per flat lookup
+    (duplicates contiguous; padding entries must repeat an in-range row and
+    carry ``sorted_msk == 0``).  ``sorted_bags`` [L] int32: row of ``dY``
+    holding each lookup's cotangent.  ``dY`` [NB, E].  Returns the updated
+    (hi, lo); rows not named in ``sorted_rows`` are untouched (aliased
+    buffers, no shard copy).  E must be lane-aligned on the TPU target
+    (ops.py pads).
+    """
+    M, E = hi.shape
+    L = sorted_rows.shape[0]
+    row, bag, outs = _row_specs(E, 2)
+    lr_arr = jnp.full((1,), lr, jnp.float32)
+    return pl.pallas_call(
+        _kernel_split,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(L,),
+            in_specs=[row, row, bag],
+            out_specs=outs,
+            scratch_shapes=[pltpu.VMEM((1, E), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((M, E), jnp.bfloat16),
+                   jax.ShapeDtypeStruct((M, E), jnp.uint16)],
+        # args: (rows, bags, msk, lr, hi, lo, dY) -> alias hi->out0, lo->out1
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(sorted_rows, sorted_bags, sorted_msk, lr_arr, hi, lo, dY)
+
+
+def fused_update_fp32_pallas(W: jax.Array, sorted_rows: jax.Array,
+                             sorted_bags: jax.Array, sorted_msk: jax.Array,
+                             dY: jax.Array, lr, interpret: bool = False
+                             ) -> jax.Array:
+    """fp32/bf16-storage variant of :func:`fused_update_split_pallas`:
+    ``W[r] -= lr * sum(dY[bags of r])`` on the touched rows only."""
+    M, E = W.shape
+    L = sorted_rows.shape[0]
+    row, bag, outs = _row_specs(E, 1)
+    lr_arr = jnp.full((1,), lr, jnp.float32)
+    return pl.pallas_call(
+        _kernel_fp32,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(L,),
+            in_specs=[row, bag],
+            out_specs=outs,
+            scratch_shapes=[pltpu.VMEM((1, E), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((M, E), W.dtype)],
+        # args: (rows, bags, msk, lr, W, dY) -> alias W->out0
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(sorted_rows, sorted_bags, sorted_msk, lr_arr, W, dY)[0]
+
+
+def sort_lookups(tgt: jax.Array, valid: jax.Array | None, num_rows: int,
+                 pooling: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Host/XLA-side prep: sort flat lookups by row so duplicates form runs.
+
+    ``tgt`` [L] int32 local row ids (may be out of range where invalid);
+    ``valid`` [L] bool or None; flat lookup ``i`` reads bag ``i // pooling``.
+    Invalid/padding lookups are sorted to the tail as a zero-contribution
+    run on the last row (a bit-exact no-op rewrite of that row).  Returns
+    (sorted_rows, sorted_bags, sorted_msk) — int32 each, ready for the
+    kernels above.  Only int32 is sorted; the [*, E] gradient data is never
+    permuted or expanded.
+    """
+    valid = ((tgt >= 0) & (tgt < num_rows)) if valid is None else (
+        valid & (tgt >= 0) & (tgt < num_rows))
+    key = jnp.where(valid, tgt, num_rows).astype(jnp.int32)
+    order = jnp.argsort(key)                      # stable: ties in flat order
+    sorted_key = jnp.take(key, order)
+    sorted_rows = jnp.minimum(sorted_key, num_rows - 1)
+    sorted_bags = (order // pooling).astype(jnp.int32)
+    sorted_msk = (sorted_key < num_rows).astype(jnp.int32)
+    return sorted_rows, sorted_bags, sorted_msk

@@ -15,6 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.embedding_update import (fused_update_fp32_pallas,
+                                            fused_update_split_pallas,
+                                            sort_lookups)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fused_mlp import fused_mlp_pallas
 from repro.kernels.interaction import interaction_pallas
@@ -54,12 +57,70 @@ def fused_mlp_layer(x, w, b, activation: str = "relu",
     return out[:M, :N]
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def embedding_bag(W, idx, interpret: bool | None = None):
-    """W [M, E], idx [N, P] -> [N, E] fp32 bag sums (lane-pads E)."""
+@partial(jax.jit, static_argnames=("bags_per_block", "interpret"))
+def embedding_bag(W, idx, bags_per_block: int = 8,
+                  interpret: bool | None = None):
+    """W [M, E] (fp32, or the bf16 ``hi`` half for 2-byte/elem reads), idx
+    [N, P] -> [N, E] fp32 bag sums.  Lane-pads E and pads N to a multiple of
+    ``bags_per_block`` (padding bags read row 0 and are sliced off)."""
     interpret = _default_interpret() if interpret is None else interpret
     Wp, E = _pad_dim(W, 1, 128)
-    out = embedding_bag_pallas(Wp, idx, interpret=interpret)
+    idxp, N = _pad_dim(idx, 0, min(bags_per_block, idx.shape[0]))
+    out = embedding_bag_pallas(Wp, idxp, bags_per_block=bags_per_block,
+                               interpret=interpret)
+    return out[:N, :E]
+
+
+@partial(jax.jit, static_argnames=("pooling", "interpret"))
+def fused_embedding_update(hi, lo, tgt, dY, lr, valid=None, *,
+                           pooling: int = 1, interpret: bool | None = None):
+    """Fused sparse-backward + Split-SGD-BF16 update (paper Alg. 3 + C5).
+
+    ``hi``/``lo`` [M, E]: split table shard.  ``tgt`` [L] int32 local row
+    per flat lookup (out-of-range or ``valid == False`` entries contribute
+    nothing).  ``dY`` [L // pooling, E]: bag cotangents — flat lookup ``i``
+    reads ``dY[i // pooling]``; the [L, E] per-lookup gradient expansion of
+    the reference path is never materialized.  Returns the updated (hi, lo):
+    only touched rows are read/written (in-place via aliasing), and the
+    result is bit-identical to the jitted ``apply_rows_split_sgd``
+    reference.  On the compiled TPU path E must be lane-aligned: a
+    non-128-multiple E is padded, which copies the shard and forfeits the
+    O(unique_rows) traffic — production shards keep E % 128 == 0 so the pad
+    is a no-op.  Interpret mode (the CPU validation path) has no lane
+    constraint and never pads.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    M = hi.shape[0]
+    srows, sbags, smsk = sort_lookups(tgt, valid, M, pooling)
+    if interpret:
+        return fused_update_split_pallas(hi, lo, srows, sbags, smsk, dY,
+                                         lr, interpret=True)
+    hip, E = _pad_dim(hi, 1, 128)
+    lop, _ = _pad_dim(lo, 1, 128)
+    dYp, _ = _pad_dim(dY, 1, 128)
+    nh, nl = fused_update_split_pallas(hip, lop, srows, sbags, smsk, dYp,
+                                       lr, interpret=interpret)
+    return nh[:, :E], nl[:, :E]
+
+
+@partial(jax.jit, static_argnames=("pooling", "interpret"))
+def fused_embedding_update_fp32(W, tgt, dY, lr, valid=None, *,
+                                pooling: int = 1,
+                                interpret: bool | None = None):
+    """Non-split variant of :func:`fused_embedding_update`:
+    ``W[r] -= lr * sum(dY of lookups hitting r)`` on touched rows only.
+    Note the pre-reduced semantics (sum grads, one multiply) — mathematically
+    the scatter-add of ``bag_update`` but with a single rounding per row."""
+    interpret = _default_interpret() if interpret is None else interpret
+    M = W.shape[0]
+    srows, sbags, smsk = sort_lookups(tgt, valid, M, pooling)
+    if interpret:
+        return fused_update_fp32_pallas(W, srows, sbags, smsk, dY, lr,
+                                        interpret=True)
+    Wp, E = _pad_dim(W, 1, 128)
+    dYp, _ = _pad_dim(dY, 1, 128)
+    out = fused_update_fp32_pallas(Wp, srows, sbags, smsk, dYp, lr,
+                                   interpret=interpret)
     return out[:, :E]
 
 

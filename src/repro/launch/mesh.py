@@ -8,8 +8,7 @@ smoke tests and benchmarks must keep seeing 1 device).
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,12 +16,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     axis.  Matches the dry-run requirement verbatim."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/benchmarks (e.g. (2,4) on 8 CPU devices,
     or 1D meshes emulating the paper's 8-/64-socket systems)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.models.egnn import (EGNNConfig, egnn_layer, egnn_node_update,
                                init_egnn_params, normalize_dx)
 from repro.models.mlp import mlp_forward
@@ -165,7 +166,7 @@ def make_fullgraph_train_step(cfg: EGNNConfig, mesh, n_nodes, n_edges,
                "lo": jax.tree.map(lambda t: t[1], out, is_leaf=leaf)}
         return new, loss
 
-    sm = jax.shard_map(step, mesh=mesh, in_specs=(sspecs, bspecs),
+    sm = compat.shard_map(step, mesh=mesh, in_specs=(sspecs, bspecs),
                        out_specs=(sspecs, P()), check_vma=False)
     jitted = jax.jit(sm, donate_argnums=(0,))
     return jitted, (sstructs, bstructs), (sshard, jax.tree.map(
@@ -237,7 +238,7 @@ def make_minibatch_train_step(cfg: EGNNConfig, mesh, n_graphs, n_pad, e_pad,
                "lo": jax.tree.map(lambda t: t[1], out, is_leaf=leaf)}
         return new, loss
 
-    sm = jax.shard_map(step, mesh=mesh, in_specs=(sspecs, bspecs),
+    sm = compat.shard_map(step, mesh=mesh, in_specs=(sspecs, bspecs),
                        out_specs=(sspecs, P()), check_vma=False)
     jitted = jax.jit(sm, donate_argnums=(0,))
     return jitted, (sstructs, bstructs), (sshard, jax.tree.map(

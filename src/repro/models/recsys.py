@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.embedding import EmbeddingSpec
 from repro.core.hybrid import HybridDef
 from repro.models.mlp import init_mlp, mlp_forward
@@ -304,7 +305,7 @@ def make_retrieval_step(mdef: HybridDef, mesh, n_candidates: int,
         vv, pos = jax.lax.top_k(vg, topk)
         return vv, jnp.take(ig, pos)
 
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = compat.shard_map(local, mesh=mesh,
                        in_specs=(P(), P(all_axes, None)),
                        out_specs=(P(), P()), check_vma=False)
     return jax.jit(fn)

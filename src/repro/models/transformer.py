@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.models.attention import (attention, decode_attention, rms_norm,
                                     repeat_kv, rope)
 
@@ -263,7 +264,7 @@ def _expert_ffn(buf, wg, wu, wd, cfg: TransformerConfig):
 
     from jax.sharding import PartitionSpec as P
     ep = cfg.dp_axes[-1]
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
 
     def inner(buf_l, wg_l, wu_l, wd_l):
         # buf_l [B/ndp, E, C, d] -> a2a -> [B/ndp*ep, E/ep, C, d]
@@ -278,7 +279,7 @@ def _expert_ffn(buf, wg, wu, wd, cfg: TransformerConfig):
         return jax.lax.all_to_all(o, ep, split_axis=0, concat_axis=1,
                                   tiled=True)
 
-    return jax.shard_map(
+    return compat.shard_map(
         inner, mesh=mesh,
         in_specs=(P(cfg.dp_axes, None, None, None),
                   P(ep, None, "model"), P(ep, None, "model"),

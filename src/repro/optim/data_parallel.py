@@ -27,23 +27,19 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
+from repro import compat
 from repro.optim.split_sgd import combine_split, split_fp32
 
 
 def _axis_size(axis_name) -> int:
-    if isinstance(axis_name, (tuple, list)):
-        s = 1
-        for a in axis_name:
-            s *= jax.lax.axis_size(a)
-        return s
-    return jax.lax.axis_size(axis_name)
+    return compat.axis_size(axis_name)
 
 
 def _axis_index(axis_name) -> jax.Array:
     if isinstance(axis_name, (tuple, list)):
         idx = jnp.zeros((), jnp.int32)
         for a in axis_name:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
         return idx
     return jax.lax.axis_index(axis_name)
 

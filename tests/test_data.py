@@ -1,6 +1,9 @@
 """Data pipeline: index-skew generator and the fanout neighbor sampler."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.graph import NeighborSampler, random_powerlaw_graph

@@ -28,11 +28,11 @@ def run_sub(code: str, timeout=600):
 def test_row_sharded_bag_matches_reference():
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, AxisType
+        from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.core.embedding import EmbeddingSpec, bag_lookup, globalize
         from repro.core import sharded_embedding as se
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = compat.make_mesh((2, 4), ('data', 'model'))
         spec = EmbeddingSpec((1000, 50, 333, 20), dim=16)
         layout = se.make_layout(spec, 8, 'row')
         key = jax.random.PRNGKey(0)
@@ -41,7 +41,7 @@ def test_row_sharded_bag_matches_reference():
         idx = np.stack([rng.integers(0, m, (16, 4))
                         for m in spec.table_rows], 1).astype(np.int32)
         AX = ('data', 'model')
-        fwd = jax.jit(jax.shard_map(
+        fwd = jax.jit(compat.shard_map(
             lambda Wl, i: se.row_sharded_bag_fwd(layout, Wl, i, AX),
             mesh=mesh, in_specs=(P(AX, None), P(None, None, None)),
             out_specs=P(AX, None, None)))
@@ -58,11 +58,10 @@ def test_row_sharded_bag_matches_reference():
 def test_dlrm_hybrid_trains_both_modes():
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro import compat
         from repro.core.dlrm import DLRMConfig, make_train_step, init_state
         from repro.core import sharded_embedding as se
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = compat.make_mesh((2, 4), ('data', 'model'))
         rng = np.random.default_rng(0)
         for mode in ('row', 'table'):
             cfg = DLRMConfig(name='t', num_dense=16, bottom=(32, 8),
@@ -95,10 +94,11 @@ def test_rs_ag_equals_allreduce():
     """The paper's RS+AG decomposition (C4) == plain allreduce SGD."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, AxisType
+        from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.optim import data_parallel as dp
         from repro.optim.split_sgd import combine_split
-        mesh = jax.make_mesh((8,), ('d',), axis_types=(AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ('d',))
         rng = np.random.default_rng(0)
         params = {'w': jnp.asarray(rng.standard_normal((33, 7)),
                                    jnp.float32),
@@ -113,7 +113,7 @@ def test_rs_ag_equals_allreduce():
             st2 = dp.rs_ag_split_sgd(st, g, 0.1, 'd', num_buckets=2)
             return st2.hi, st2.lo_shard
 
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(compat.shard_map(
             step, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), arrays['hi']), P('d'),
                       jax.tree.map(lambda _: P(), grads)),
@@ -199,10 +199,9 @@ def test_sharded_idx_input_matches_replicated():
     all-gather == the paper's replicated loader, trajectory-identical."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
-        from jax.sharding import AxisType
+        from repro import compat
         from repro.core.dlrm import DLRMConfig, make_train_step, init_state
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(AxisType.Auto,)*2)
+        mesh = compat.make_mesh((2, 4), ('data', 'model'))
         rng = np.random.default_rng(0)
         base = DLRMConfig(name='t', num_dense=16, bottom=(32, 8), top=(32,),
                           table_rows=(100, 60, 40, 30, 20, 200, 51, 77),

@@ -4,6 +4,9 @@ the FM sum-square identity (hypothesis property tests)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import embedding as E

@@ -29,10 +29,11 @@ def test_fused_mlp(m, k, n, dtype, act):
 @pytest.mark.parametrize("rows,e,n,p", [(500, 96, 40, 7), (1000, 128, 16, 1),
                                         (64, 64, 128, 33), (200, 17, 8, 4)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_embedding_bag(rows, e, n, p, dtype):
+@pytest.mark.parametrize("bpb", [1, 8])
+def test_embedding_bag(rows, e, n, p, dtype, bpb):
     W = jnp.asarray(RNG.standard_normal((rows, e)), dtype)
     idx = jnp.asarray(RNG.integers(0, rows, (n, p)), jnp.int32)
-    out = ops.embedding_bag(W, idx, interpret=True)
+    out = ops.embedding_bag(W, idx, bags_per_block=bpb, interpret=True)
     r = ref.embedding_bag(W, idx)
     tol = 1e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=tol,

@@ -4,6 +4,9 @@ numerical invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import adamw, split_sgd as S
@@ -104,3 +107,25 @@ def test_capacity_overhead_is_zero():
     x = jnp.zeros((1000,), jnp.float32)
     hi, lo = S.split_fp32(x)
     assert hi.nbytes + lo.nbytes == x.nbytes
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 120), st.integers(0, 2**31 - 1))
+def test_fused_row_update_bit_exact(vocab, n, seed):
+    """Property: the fused Pallas sparse update (kernels/embedding_update)
+    == the jitted dedup + combine_split reference, bitwise, for any
+    duplicate structure (vocab << n forces heavy duplication)."""
+    from repro.core.sharded_embedding import apply_rows_split_sgd
+    from repro.kernels import ops
+    rng = np.random.default_rng(seed)
+    E = 8
+    w = jnp.asarray(rng.standard_normal((64, E)), jnp.float32)
+    hi, lo = S.split_fp32(w)
+    tgt = jnp.asarray(rng.integers(0, vocab, (n,)), jnp.int32)
+    grad = jnp.asarray(rng.standard_normal((n, E)), jnp.float32)
+    nh, nl = ops.fused_embedding_update(hi, lo, tgt, grad, 0.05,
+                                        interpret=True)
+    rh, rl = jax.jit(apply_rows_split_sgd)(hi, lo, tgt, grad, 0.05)
+    np.testing.assert_array_equal(
+        np.asarray(S.combine_split(nh, nl)),
+        np.asarray(S.combine_split(rh, rl)))
