@@ -1,20 +1,47 @@
-"""Paper Tab. II / Eq. 1-2 reproduction: analytic communication volumes per
-DLRM config, cross-checked against the collective bytes parsed out of the
-compiled dry-run HLO.
+"""Paper Tab. II / Eq. 1-2 reproduction + staged-pipeline overlap model.
+
+Analytic communication volumes per DLRM config, cross-checked against the
+collective bytes parsed out of compiled HLO:
 
     Eq. 1:  SZ_allreduce  = sum_l (f_i^l * f_o^l + f_o^l)   (per rank,
             rank-count independent -> the strong-scaling wall)
     Eq. 2:  SZ_alltoall   = S * N * E                        (global; per-rank
             share shrinks as ranks grow)
+
+``--microbatches M0,M1,...`` additionally evaluates the staged microbatch
+pipeline (repro/core/pipeline.py) at each M: the analytic step-time model
+applies the paper's Sect. VI comm/compute OVERLAP term — with M
+microbatches, microbatch i+1's index exchange + all-to-all runs under
+microbatch i's dense compute, so
+
+    t_serial(M)  = M * (t_ex/M + t_comp/M) + t_tail          (no overlap)
+    t_overlap(M) = t_ex/M + (M-1) * max(t_comp/M, t_ex/M)
+                   + t_comp/M + t_tail                        (pipelined)
+
+and the overlap efficiency is the fraction of exchange time hidden under
+compute.  Each M is also lowered+compiled on a forced-multi-device CPU
+subprocess (the pipeline's regression surface) and, without ``--dry-run``,
+timed end-to-end (CPU wall-clock: schedule-shape only, NOT
+hardware-representative — the modeled numbers target TPU_V5E).  Results
+land in ``BENCH_pipeline.json``.
 """
 
+import argparse
 import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
 from pathlib import Path
 
 from repro.configs.dlrm_paper import dlrm_large, dlrm_mlperf, dlrm_small
+from repro.hw import TPU_V5E
 from repro.models.mlp import allreduce_bytes
 
-RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "dryrun"
+SRC = ROOT / "src"
 
 
 def analytic(cfg):
@@ -24,6 +51,101 @@ def analytic(cfg):
     sz_alltoall = S * N * E * 4
     emb_gib = cfg.spec.bytes(4) / 2**30
     return sz_allreduce, sz_alltoall, emb_gib
+
+
+def dense_flops(cfg) -> float:
+    """fwd+bwd MLP FLOPs per GLOBAL batch (3x fwd: fwd + dgrad + wgrad)."""
+    total = 0
+    for sizes in (cfg.bottom_sizes, cfg.top_sizes):
+        for cin, cout in zip(sizes[:-1], sizes[1:]):
+            total += 2 * cin * cout * cfg.batch
+    return 3.0 * total
+
+
+def pipeline_model(cfg, ranks: int, M: int, chip=TPU_V5E) -> dict:
+    """Modeled per-rank step time with and without the overlap term."""
+    S, N, E, P = len(cfg.table_rows), cfg.batch, cfg.emb_dim, cfg.pooling
+    ici_bw = chip.ici_bw_per_link * chip.ici_links
+    # per-rank exchange volume per STEP: index stream (int32) + the
+    # fwd/bwd layout-switch share of Eq. 2 (both directions)
+    idx_bytes = S * N * P * 4 / ranks
+    a2a_bytes = 2 * (S * N * E * 4) / ranks
+    t_ex = (idx_bytes + a2a_bytes) / ici_bw
+    t_comp = dense_flops(cfg) / ranks / chip.peak_flops_bf16
+    # tail (not pipelined): sparse touched-row update + dense RS+AG
+    sz_ar = allreduce_bytes(cfg.bottom_sizes) + allreduce_bytes(cfg.top_sizes)
+    t_tail = (sz_ar / ici_bw
+              + (2 * N * S * E * 4 / ranks) / chip.hbm_bw)
+    ex_mb, comp_mb = t_ex / M, t_comp / M
+    t_serial = M * (ex_mb + comp_mb) + t_tail
+    t_overlap = ex_mb + (M - 1) * max(comp_mb, ex_mb) + comp_mb + t_tail
+    hidden = (M - 1) * min(comp_mb, ex_mb)
+    return {
+        "microbatches": M,
+        "exchange_ms_per_microbatch": ex_mb * 1e3,
+        "compute_ms_per_microbatch": comp_mb * 1e3,
+        "tail_ms": t_tail * 1e3,
+        "modeled_serial_ms": t_serial * 1e3,
+        "modeled_overlap_ms": t_overlap * 1e3,
+        "overlap_efficiency": (hidden / t_ex) if t_ex else 0.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Measured leg: lower/compile (and optionally time) the pipelined step on a
+# forced-multi-device CPU subprocess.
+# ---------------------------------------------------------------------------
+
+SUB = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ranks}"
+import json, time, jax, jax.numpy as jnp, numpy as np
+from repro.core.dlrm import DLRMConfig, make_train_step, init_state
+from repro.core import sharded_embedding as se
+from repro.launch.mesh import make_mesh
+from repro.launch.dryrun import parse_collective_bytes
+
+mesh = make_mesh((1, {ranks}), ("data", "model"))
+cfg = DLRMConfig(name="bench", num_dense=32, bottom=(64, 16), top=(64,),
+                 table_rows=(2000,) * 8, emb_dim=16, pooling=5,
+                 batch={batch}, emb_mode="table", microbatches={mb})
+step, shardings, bspecs, layout = make_train_step(cfg, mesh)
+state, _ = init_state(jax.random.PRNGKey(0), cfg, mesh)
+rng = np.random.default_rng(0)
+idx = np.stack([rng.integers(0, m, ({batch}, 5))
+                for m in cfg.table_rows], 1).astype(np.int32)
+idx = np.asarray(se.permute_indices(layout, jnp.asarray(idx)))
+batch = {{"idx": jnp.asarray(idx),
+         "dense_x": jnp.asarray(rng.standard_normal(({batch}, 32)),
+                                jnp.bfloat16),
+         "labels": jnp.asarray(rng.integers(0, 2, {batch}), jnp.float32)}}
+lowered = step.lower(state, batch)
+compiled = lowered.compile()
+coll = parse_collective_bytes(compiled.as_text())
+measured_ms = None
+if not {dry_run}:
+    state, loss = step(state, batch)     # warm donation-compatible call
+    jax.block_until_ready(loss)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        state, loss = step(state, batch)
+    jax.block_until_ready(loss)
+    measured_ms = (time.perf_counter() - t0) / 5 * 1e3
+print(json.dumps(dict(microbatches={mb}, measured_ms=measured_ms,
+                      collective_bytes=coll["bytes_by_op"],
+                      collective_counts=coll["counts"])))
+"""
+
+
+def run_measured(ranks: int, batch: int, mb: int, dry_run: bool) -> dict:
+    env = dict(os.environ, PYTHONPATH=str(SRC))
+    code = textwrap.dedent(SUB.format(ranks=ranks, batch=batch, mb=mb,
+                                      dry_run=dry_run))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=900)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+    return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def rows():
@@ -46,9 +168,60 @@ def rows():
     return out
 
 
-def main():
+def pipeline_rows(microbatches, ranks: int, batch: int, dry_run: bool,
+                  json_path: Path):
+    cfg_model = dlrm_small(mode="table")
+    points = []
+    out = []
+    for M in microbatches:
+        rec = pipeline_model(cfg_model, ranks=64, M=M)
+        measured = run_measured(ranks, batch, M, dry_run)
+        rec.update(measured)
+        points.append(rec)
+        out.append((f"pipeline_M{M}_modeled_serial_ms",
+                    rec["modeled_serial_ms"], "no-overlap model @64r"))
+        out.append((f"pipeline_M{M}_modeled_overlap_ms",
+                    rec["modeled_overlap_ms"], "Sect.VI overlap model @64r"))
+        out.append((f"pipeline_M{M}_overlap_efficiency",
+                    rec["overlap_efficiency"], "hidden/total exchange"))
+        if rec.get("measured_ms") is not None:
+            out.append((f"pipeline_M{M}_measured_ms", rec["measured_ms"],
+                        f"CPU wall-clock {ranks}r (schedule shape only)"))
+    json_path.write_text(json.dumps({
+        "model_config": cfg_model.name,
+        "modeled_chip": TPU_V5E.name,
+        "modeled_ranks": 64,
+        "measured_ranks": ranks,
+        "measured_batch": batch,
+        "measured_backend": "cpu-forced-devices"
+                            + (" (dry-run, compile only)" if dry_run else ""),
+        "points": points,
+    }, indent=2))
+    out.append(("pipeline_json", 1.0, str(json_path)))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--microbatches", default=None,
+                    help="comma list, e.g. 1,2,4: evaluate the staged "
+                         "pipeline at each M (model + compile + measure)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile each M but skip wall-clock timing")
+    ap.add_argument("--ranks", type=int, default=8,
+                    help="forced device count for the measured leg")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="global batch for the measured leg")
+    ap.add_argument("--json", default=str(ROOT / "BENCH_pipeline.json"))
+    args = ap.parse_args(argv)
+
     for name, val, derived in rows():
         print(f"{name},{val:.2f},{derived}")
+    if args.microbatches:
+        ms = [int(x) for x in args.microbatches.split(",") if x]
+        for name, val, derived in pipeline_rows(
+                ms, args.ranks, args.batch, args.dry_run, Path(args.json)):
+            print(f"{name},{val:.4f},{derived}")
 
 
 if __name__ == "__main__":

@@ -9,11 +9,21 @@ they need the 512-device flag before jax initializes.
 """
 
 import argparse
+import inspect
 import sys
 import traceback
 
 
 SECTIONS = ("ops", "comm", "scaling", "split")
+
+
+def _call_main(m) -> None:
+    """Benchmark mains that take an ``argv`` parameter get an empty list so
+    run.py's own --section flag never leaks into their parsers."""
+    if inspect.signature(m.main).parameters:
+        m.main([])
+    else:
+        m.main()
 
 
 def main() -> None:
@@ -33,7 +43,7 @@ def main() -> None:
                 from benchmarks import bench_scaling as m
             else:
                 from benchmarks import bench_split_sgd as m
-            m.main()
+            _call_main(m)
         except Exception:  # noqa: BLE001
             failed.append(sec)
             traceback.print_exc()

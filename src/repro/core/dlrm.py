@@ -18,7 +18,6 @@ Eq. 1 (allreduce) and Eq. 2 (alltoall).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -59,8 +58,15 @@ class DLRMConfig:
     # 'replicated' reproduces the paper's data loader (every rank reads the
     # full global minibatch — its own noted weak-scaling flaw); 'sharded'
     # feeds batch-sharded indices and all-gathers them over ICI instead,
-    # removing the host-side input replication (row mode only).
+    # removing the host-side input replication (row AND table mode; table
+    # mode also permutes to padded-slot order on chip).
     idx_input: str = "replicated"
+    # staged microbatch pipeline (repro/core/pipeline.py): split the global
+    # batch into M microbatches with a double-buffered index exchange so
+    # the layout-switch collectives overlap dense compute.  1 = monolithic.
+    microbatches: int = 1
+    # index-exchange lowering: 'fused' one all_gather, 'ring' ppermute chunks
+    exchange_impl: str = "fused"
 
     @property
     def spec(self) -> EmbeddingSpec:
@@ -198,7 +204,9 @@ def batch_struct(cfg: DLRMConfig, mesh, layout) -> tuple[dict, dict]:
     """(ShapeDtypeStructs, PartitionSpecs) for one global batch."""
     all_axes, model, batch_axes = mesh_axes(mesh)
     B, S, Pq = cfg.batch, cfg.spec.num_tables, cfg.pooling
-    if cfg.emb_mode == "row":
+    if cfg.emb_mode == "row" or cfg.idx_input == "sharded":
+        # sharded table mode feeds ORIGINAL-slot indices; the exchange
+        # stage permutes to padded order on chip (no host-side permute).
         idx = jax.ShapeDtypeStruct((B, S, Pq), jnp.int32)
         idx_spec = (P(None, None, None) if cfg.idx_input == "replicated"
                     else P(all_axes, None, None))
@@ -215,86 +223,69 @@ def batch_struct(cfg: DLRMConfig, mesh, layout) -> tuple[dict, dict]:
     return structs, specs
 
 
-def make_train_step(cfg: DLRMConfig, mesh):
-    """Build the jitted hybrid-parallel train step.
+def dlrm_dense_loss(cfg: DLRMConfig):
+    """Stage-shaped loss: (dense_hi, emb_out, batch) -> per-shard SUM loss
+    (the pipeline's dense_fwd_bwd stage divides by the global batch)."""
+    def loss(dense_hi, emb_out, batch):
+        logits = forward_local(dense_hi, emb_out, batch["dense_x"],
+                               cfg.mlp_impl)
+        return bce_with_logits(logits, batch["labels"]).sum()
+    return loss
+
+
+def dlrm_dense_score(cfg: DLRMConfig):
+    """Stage-shaped scorer: (dense_hi, emb_out, batch) -> [b] sigmoid."""
+    def score(dense_hi, emb_out, batch):
+        return jax.nn.sigmoid(forward_local(dense_hi, emb_out,
+                                            batch["dense_x"], cfg.mlp_impl))
+    return score
+
+
+def as_hybrid_def(cfg: DLRMConfig):
+    """DLRM expressed as the generic hybrid skeleton: the paper topology's
+    fwd/bwd pieces become stage-shaped functions the pipeline composes."""
+    from repro.core.hybrid import HybridDef
+    return HybridDef(
+        name=cfg.name, spec=cfg.spec, pooling=cfg.pooling, batch=cfg.batch,
+        init_dense=lambda key: init_dense_params(key, cfg),
+        dense_loss=dlrm_dense_loss(cfg),
+        dense_score=dlrm_dense_score(cfg),
+        extras={"dense_x": ((cfg.num_dense,), jnp.bfloat16),
+                "labels": ((), jnp.float32)},
+        emb_mode=cfg.emb_mode, split_sgd=cfg.split_sgd,
+        fused_update=cfg.fused_update, compress_grads=cfg.compress_grads,
+        num_buckets=cfg.num_buckets, lr=cfg.lr, emb_lr=cfg.lr,
+        idx_input=cfg.idx_input, microbatches=cfg.microbatches,
+        exchange_impl=cfg.exchange_impl)
+
+
+def make_train_step(cfg: DLRMConfig, mesh, microbatches: int | None = None):
+    """Build the jitted hybrid-parallel train step (staged pipeline; see
+    repro/core/pipeline.py).  ``microbatches`` defaults to
+    ``cfg.microbatches``; 1 reproduces the monolithic step bit-for-bit.
 
     Returns (step, state_shardings, batch_shardings, layout); call as
     ``new_state, loss = step(state, batch)``.
     """
-    structs, specs, shardings, layout = state_struct(cfg, mesh)
-    bstructs, bspecs = batch_struct(cfg, mesh, layout)
-    all_axes, model, batch_axes = mesh_axes(mesh)
-    emb_ax, replica_ax = emb_axes_for(cfg, mesh)
-    B = cfg.batch
-    fused = (jax.default_backend() == "tpu" if cfg.fused_update is None
-             else cfg.fused_update)
-
-    def step_local(state, batch):
-        emb_store = state["emb"]
-        W_fwd = emb_store["hi"] if cfg.split_sgd else emb_store["w"]
-        idx = batch["idx"]
-        if cfg.emb_mode == "row" and cfg.idx_input == "sharded":
-            # on-chip index exchange replaces the replicated data loader
-            idx = jax.lax.all_gather(idx, emb_ax, axis=0, tiled=True)
-        emb_out = se.sharded_bag_fwd(layout, W_fwd, idx, emb_ax)  # [b,S,E]
-
-        def loss_fn(dense_hi, emb_out):
-            logits = forward_local(dense_hi, emb_out, batch["dense_x"],
-                                   cfg.mlp_impl)
-            return bce_with_logits(logits, batch["labels"]).sum() / B
-
-        (loss, (g_dense, d_emb)) = jax.value_and_grad(
-            loss_fn, argnums=(0, 1))(state["dense"]["hi"], emb_out)
-
-        # --- fused sparse embedding update (C1) --------------------------
-        dY = se.gather_dY(layout, d_emb, emb_ax, replica_ax)
-        if cfg.split_sgd:
-            hi2, lo2 = se.apply_update_scan(
-                layout, (emb_store["hi"], emb_store["lo"]), idx, dY,
-                cfg.lr, emb_ax, split=True, replica_axes=replica_ax,
-                fused=fused)
-            new_emb = {"hi": hi2, "lo": lo2}
-        else:
-            # NB: the fused fp32 kernel pre-reduces duplicates (one rounding
-            # per row) where the reference scatter-adds per lookup, so the
-            # two non-split paths are close but not bit-identical.
-            w2 = se.apply_update_scan(layout, emb_store["w"], idx, dY,
-                                      cfg.lr, emb_ax, split=False,
-                                      replica_axes=replica_ax, fused=fused)
-            new_emb = {"w": w2}
-
-        # --- dense RS+AG split-SGD (C4+C5) -------------------------------
-        st = dp.DPState(hi=state["dense"]["hi"], lo_shard=state["dense"]["lo"],
-                        mom_shard=None, err_shard=state["dense"]["err"])
-        st2 = dp.rs_ag_split_sgd(st, g_dense, cfg.lr, all_axes,
-                                 compress=cfg.compress_grads,
-                                 num_buckets=cfg.num_buckets, mean=False)
-        new_state = {"emb": new_emb,
-                     "dense": {"hi": st2.hi, "lo": st2.lo_shard,
-                               "err": st2.err_shard}}
-        return new_state, jax.lax.psum(loss, all_axes)
-
-    step = compat.shard_map(step_local, mesh=mesh,
-                         in_specs=(specs, bspecs),
-                         out_specs=(specs, P()),
-                         check_vma=False)
-    step = jax.jit(step, donate_argnums=(0,))
-    return step, shardings, bspecs, layout
+    from repro.core import pipeline
+    M = cfg.microbatches if microbatches is None else microbatches
+    return pipeline.make_pipelined_train_step(as_hybrid_def(cfg), mesh,
+                                              microbatches=M)
 
 
 def make_eval_step(cfg: DLRMConfig, mesh):
-    """Forward-only scoring step (serving); returns per-sample sigmoid."""
+    """Forward-only scoring step (serving); returns per-sample sigmoid.
+    Reuses the pipeline's index_exchange + embedding_fwd stages."""
+    from repro.core import pipeline
     structs, specs, shardings, layout = state_struct(cfg, mesh)
     bstructs, bspecs = batch_struct(cfg, mesh, layout)
     all_axes, model, batch_axes = mesh_axes(mesh)
-    emb_ax, _ = emb_axes_for(cfg, mesh)
+    stages = pipeline.build_stages(as_hybrid_def(cfg), mesh, layout)
 
     def eval_local(state, batch):
         W_fwd = state["emb"]["hi"] if cfg.split_sgd else state["emb"]["w"]
-        idx = batch["idx"]
-        if cfg.emb_mode == "row" and cfg.idx_input == "sharded":
-            idx = jax.lax.all_gather(idx, emb_ax, axis=0, tiled=True)
-        emb_out = se.sharded_bag_fwd(layout, W_fwd, idx, emb_ax)
+        idx_fwd, _ = stages.index_exchange(batch["idx"], fwd_only=True)
+        emb_out = stages.embedding_fwd(W_fwd, idx_fwd)
         logits = forward_local(state["dense"]["hi"], emb_out,
                                batch["dense_x"], cfg.mlp_impl)
         return jax.nn.sigmoid(logits)

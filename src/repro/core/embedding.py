@@ -157,16 +157,19 @@ def bag_update(W: jax.Array, g: jax.Array, dY: jax.Array, lr,
       * ``"fused"`` — the Pallas fused kernel
         (:mod:`repro.kernels.embedding_update`): sort + in-VMEM duplicate
         pre-reduction, touched rows only, in-place.  No [B,S,P,E] gradient
-        expansion and no shard copy.  ``weights`` unsupported.
+        expansion and no shard copy.  ``weights`` [B, S, P] per-lookup bag
+        weights ride along as a flat scalar operand scaling each lookup's
+        dY row before the pre-reduction (the weighted-bag mirror of the
+        scatter path's ``upd * weights``).
     """
     B, S, P = g.shape
     E = W.shape[1]
     if method == "fused":
-        if weights is not None:
-            raise NotImplementedError("per-lookup weights on the fused path")
         from repro.kernels import ops
+        w_flat = None if weights is None else weights.reshape(-1)
         return ops.fused_embedding_update_fp32(
-            W, g.reshape(-1), dY.reshape(B * S, E), lr, pooling=P)
+            W, g.reshape(-1), dY.reshape(B * S, E), lr, weights=w_flat,
+            pooling=P)
     upd = jnp.broadcast_to(dY[:, :, None, :], (B, S, P, E))
     if weights is not None:
         upd = upd * weights[..., None]
@@ -175,15 +178,19 @@ def bag_update(W: jax.Array, g: jax.Array, dY: jax.Array, lr,
 
 
 def bag_update_split(hi: jax.Array, lo: jax.Array, g: jax.Array,
-                     dY: jax.Array, lr) -> tuple[jax.Array, jax.Array]:
+                     dY: jax.Array, lr, weights: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
     """Fused sparse backward + Split-SGD-BF16 step on a split-storage table
     (paper Alg. 3 + C5): only the rows named by ``g`` are reconstructed,
-    stepped and re-split — in VMEM, via the Pallas fused kernel."""
+    stepped and re-split — in VMEM, via the Pallas fused kernel.
+    ``weights`` [B, S, P]: optional per-lookup bag weights."""
     from repro.kernels import ops
     B, S, P = g.shape
     E = hi.shape[1]
+    w_flat = None if weights is None else weights.reshape(-1)
     return ops.fused_embedding_update(hi, lo, g.reshape(-1),
-                                      dY.reshape(B * S, E), lr, pooling=P)
+                                      dY.reshape(B * S, E), lr,
+                                      weights=w_flat, pooling=P)
 
 
 def bag_grad_rows(g: jax.Array, dY: jax.Array, num_rows: int) -> jax.Array:

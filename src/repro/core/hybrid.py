@@ -1,11 +1,27 @@
-"""Generic hybrid-parallel (C3) train/eval step factory.
+"""Generic hybrid-parallel (C3) train/eval step factory — staged pipeline.
 
-The DLRM step in repro/core/dlrm.py is the paper's exact topology; every
-other recsys architecture (FM, BST, SASRec, DIN) shares the same skeleton —
-model-parallel unified embedding + data-parallel dense net + all-to-all /
-reduce-scatter layout switch + fused sparse update + RS+AG dense optimizer —
-and only differs in the dense function and loss.  This factory hosts that
-skeleton once.
+Every recsys architecture here (DLRM, FM, BST, SASRec, DIN) shares one
+skeleton: model-parallel unified embedding + data-parallel dense net +
+all-to-all / reduce-scatter layout switch + fused sparse update + RS+AG
+dense optimizer.  This module hosts the skeleton's *definition*
+(:class:`HybridDef`: what a model must provide) and its state/batch
+structure builders; the step itself is composed from the explicit
+:class:`repro.core.pipeline.Stage` objects —
+
+    index_exchange -> embedding_fwd -> dense_fwd_bwd -> dY_exchange
+                   -> sparse_update -> dense_update
+
+— by :func:`repro.core.pipeline.make_pipelined_train_step`, which also
+software-pipelines M microbatches with a double-buffered index exchange so
+the layout-switch collectives of microbatch i+1 overlap microbatch i's
+dense compute (the paper's Sect. VI comm/compute overlap).
+
+:func:`make_train_step` is the ``M = mdef.microbatches`` entry point; with
+``microbatches=1`` (the default) it is the degenerate single-stage-chain
+case, bit-compatible with the historical monolithic step.  The serve path
+(:func:`make_score_step`) reuses the same ``index_exchange`` and
+``embedding_fwd`` stages, so a placement or exchange change lands in train
+and serve at once.  See docs/pipeline.md for the stage/timeline diagram.
 """
 
 from __future__ import annotations
@@ -20,6 +36,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core.embedding import EmbeddingSpec
+from repro.core import pipeline
 from repro.core import sharded_embedding as se
 from repro.optim import data_parallel as dp
 from repro.optim.split_sgd import split_fp32
@@ -44,7 +61,7 @@ class HybridDef:
     emb_mode: str = "row"
     split_sgd: bool = True
     # fused Pallas sparse-bwd + Split-SGD row update (kernels/embedding_update)
-    # — bit-identical to the reference path, touches O(unique rows) instead of
+    # — bit-identical to the reference path, touches O(touched rows) instead of
     # O(shard rows).  None (default) = on where the kernel compiles (TPU);
     # off elsewhere, because CPU interpret emulation pays O(shard) per grid
     # step.  True/False forces the choice (A/B, tests).
@@ -54,18 +71,21 @@ class HybridDef:
     lr: float = 0.01
     emb_lr: float = 0.01
     idx_input: str = "replicated"   # 'sharded': on-chip index exchange
+    # staged pipeline (repro/core/pipeline.py): number of microbatches the
+    # global batch is split into, with the index exchange double-buffered
+    # across them.  1 = the monolithic step.
+    microbatches: int = 1
+    # 'fused': one all_gather per exchange; 'ring': ppermute-chunked (finer
+    # units for the latency-hiding scheduler; bit-identical result).
+    exchange_impl: str = "fused"
 
 
-def _mesh_axes(mesh):
-    names = tuple(mesh.axis_names)
-    return names, names[-1], names[:-1]
+# stage-shaped mesh helpers live in pipeline.py; re-exported for callers
+_mesh_axes = pipeline.mesh_axes
 
 
 def _emb_axes(mdef, mesh):
-    all_axes, model, batch_axes = _mesh_axes(mesh)
-    if mdef.emb_mode == "row":
-        return all_axes, None
-    return model, (batch_axes if batch_axes else None)
+    return pipeline.emb_axes(mdef, mesh)
 
 
 def make_layout(mdef: HybridDef, mesh) -> se.ShardedEmbeddingLayout:
@@ -119,10 +139,19 @@ def batch_struct(mdef: HybridDef, mesh, layout, batch: int | None = None):
     all_axes, model, batch_axes = _mesh_axes(mesh)
     B = batch or mdef.batch
     S, Pq = layout.num_orig_slots, mdef.pooling
+    if mdef.idx_input not in ("replicated", "sharded"):
+        raise ValueError(f"unknown idx_input {mdef.idx_input!r}; "
+                         "expected 'replicated' or 'sharded'")
     if mdef.emb_mode == "row":
         idx = jax.ShapeDtypeStruct((B, S, Pq), jnp.int32)
         idx_spec = (P(None, None, None) if mdef.idx_input == "replicated"
                     else P(all_axes, None, None))
+    elif mdef.idx_input == "sharded":
+        # on-chip exchange: the loader feeds batch-sharded ORIGINAL-slot
+        # indices; the index_exchange stage gathers, permutes to padded
+        # order and slices this shard's slots (no host-side permute).
+        idx = jax.ShapeDtypeStruct((B, S, Pq), jnp.int32)
+        idx_spec = P(all_axes, None, None)
     else:
         idx = jax.ShapeDtypeStruct((B, layout.num_padded_slots, Pq),
                                    jnp.int32)
@@ -153,73 +182,31 @@ def init_state(key, mdef: HybridDef, mesh):
     return jax.device_put(state, shardings), layout
 
 
-def make_train_step(mdef: HybridDef, mesh):
-    structs, specs, shardings, layout = state_struct(mdef, mesh)
-    bstructs, bspecs = batch_struct(mdef, mesh, layout)
-    all_axes, model, batch_axes = _mesh_axes(mesh)
-    emb_ax, replica_ax = _emb_axes(mdef, mesh)
-    B = mdef.batch
-    fused = (jax.default_backend() == "tpu" if mdef.fused_update is None
-             else mdef.fused_update)
+def make_train_step(mdef: HybridDef, mesh, microbatches: int | None = None):
+    """Staged-pipeline train step; ``microbatches`` defaults to
+    ``mdef.microbatches`` (1 = the monolithic step, bit-compatible with the
+    historical closure)."""
+    M = mdef.microbatches if microbatches is None else microbatches
+    return pipeline.make_pipelined_train_step(mdef, mesh, microbatches=M)
 
-    def step_local(state, batch):
-        emb_store = state["emb"]
-        W_fwd = emb_store["hi"] if mdef.split_sgd else emb_store["w"]
-        idx = batch["idx"]
-        if mdef.emb_mode == "row" and mdef.idx_input == "sharded":
-            idx = jax.lax.all_gather(idx, emb_ax, axis=0, tiled=True)
-        emb_out = se.sharded_bag_fwd(layout, W_fwd, idx, emb_ax)
 
-        def loss_fn(dense_hi, emb_out):
-            return mdef.dense_loss(dense_hi, emb_out, batch) / B
-
-        (loss, (g_dense, d_emb)) = jax.value_and_grad(
-            loss_fn, argnums=(0, 1))(state["dense"]["hi"], emb_out)
-
-        dY = se.gather_dY(layout, d_emb, emb_ax, replica_ax)
-        if mdef.split_sgd:
-            hi2, lo2 = se.apply_update_scan(
-                layout, (emb_store["hi"], emb_store["lo"]), idx, dY,
-                mdef.emb_lr, emb_ax, split=True, replica_axes=replica_ax,
-                fused=fused)
-            new_emb = {"hi": hi2, "lo": lo2}
-        else:
-            # NB: the fused fp32 kernel pre-reduces duplicates (one rounding
-            # per row) where the reference scatter-adds per lookup, so the
-            # two non-split paths are close but not bit-identical.
-            w2 = se.apply_update_scan(layout, emb_store["w"], idx, dY,
-                                      mdef.emb_lr, emb_ax, split=False,
-                                      replica_axes=replica_ax, fused=fused)
-            new_emb = {"w": w2}
-
-        st = dp.DPState(hi=state["dense"]["hi"], lo_shard=state["dense"]["lo"],
-                        mom_shard=None, err_shard=state["dense"]["err"])
-        st2 = dp.rs_ag_split_sgd(st, g_dense, mdef.lr, all_axes,
-                                 compress=mdef.compress_grads,
-                                 num_buckets=mdef.num_buckets, mean=False)
-        new_state = {"emb": new_emb,
-                     "dense": {"hi": st2.hi, "lo": st2.lo_shard,
-                               "err": st2.err_shard}}
-        return new_state, jax.lax.psum(loss, all_axes)
-
-    step = compat.shard_map(step_local, mesh=mesh, in_specs=(specs, bspecs),
-                         out_specs=(specs, P()), check_vma=False)
-    return jax.jit(step, donate_argnums=(0,)), shardings, bspecs, layout
+# the explicit name used throughout benchmarks/tests
+make_pipelined_train_step = pipeline.make_pipelined_train_step
 
 
 def make_score_step(mdef: HybridDef, mesh, batch: int | None = None):
-    """Forward-only scoring (serve_p99 / serve_bulk shapes)."""
+    """Forward-only scoring (serve_p99 / serve_bulk shapes).  Reuses the
+    pipeline's index_exchange + embedding_fwd stages — the serve path sees
+    every placement/exchange improvement the train path gets."""
     structs, specs, shardings, layout = state_struct(mdef, mesh)
     bstructs, bspecs = batch_struct(mdef, mesh, layout, batch)
     all_axes, model, batch_axes = _mesh_axes(mesh)
-    emb_ax, _ = _emb_axes(mdef, mesh)
+    stages = pipeline.build_stages(mdef, mesh, layout)
 
     def score_local(state, batch_d):
         W_fwd = state["emb"]["hi"] if mdef.split_sgd else state["emb"]["w"]
-        idx = batch_d["idx"]
-        if mdef.emb_mode == "row" and mdef.idx_input == "sharded":
-            idx = jax.lax.all_gather(idx, emb_ax, axis=0, tiled=True)
-        emb_out = se.sharded_bag_fwd(layout, W_fwd, idx, emb_ax)
+        idx_fwd, _ = stages.index_exchange(batch_d["idx"], fwd_only=True)
+        emb_out = stages.embedding_fwd(W_fwd, idx_fwd)
         return mdef.dense_score(state["dense"]["hi"], emb_out, batch_d)
 
     sc = compat.shard_map(score_local, mesh=mesh, in_specs=(specs, bspecs),
@@ -243,20 +230,50 @@ def make_retrieval_step(mdef: HybridDef, mesh, n_candidates: int,
                           is_leaf=lambda x: isinstance(x, P))  # B=1: replicate
     all_axes, model, batch_axes = _mesh_axes(mesh)
     emb_ax, _ = _emb_axes(mdef, mesh)
-    assert mdef.emb_mode == "row", "retrieval step requires row mode"
+    if mdef.emb_mode != "row":
+        raise ValueError("retrieval step requires emb_mode='row' "
+                         f"(got {mdef.emb_mode!r})")
+    if mdef.idx_input != "replicated":
+        raise ValueError("retrieval step scores ONE replicated query; a "
+                         "batch-sharded index stream (idx_input='sharded') "
+                         "cannot shard a single sample — replace the mdef "
+                         "with idx_input='replicated' for retrieval")
     ns = int(np.prod(list(mesh.shape.values())))
     per = n_candidates // ns
     E = mdef.spec.dim
+
+    def _normalize_batch(batch):
+        """Schema-normalize the single-query batch BEFORE shard_map: every
+        declared extra is reshaped to ``(1, *schema_shape)``, so rank-1
+        (B-squeezed) extras are accepted instead of silently dropped."""
+        out = dict(batch)
+        for k, (shape, _) in mdef.extras.items():
+            if k in out:
+                out[k] = jnp.reshape(out[k], (1,) + tuple(shape))
+        return out
+
+    def _broadcast_batch(batch):
+        """Candidate-batch view of the (normalized) query: declared extras
+        broadcast over the local candidate chunk via the schema; unknown
+        fields keep the legacy leading-(1,) heuristic."""
+        out = {}
+        for k, v in batch.items():
+            if k in mdef.extras:
+                shape = tuple(mdef.extras[k][0])
+                out[k] = jnp.broadcast_to(v, (per,) + shape)
+            elif hasattr(v, "shape") and v.shape[:1] == (1,):
+                out[k] = jnp.broadcast_to(v, (per,) + v.shape[1:])
+            else:
+                out[k] = v
+        return out
 
     def local(state, batch, cand):
         W_fwd = state["emb"]["hi"] if mdef.split_sgd else state["emb"]["w"]
         emb = se.row_bag_fwd_replicated(layout, W_fwd, batch["idx"], emb_ax)
         emb_c = jnp.broadcast_to(emb, (per,) + emb.shape[1:])
         emb_c = emb_c.at[:, target_slot].set(cand.astype(jnp.float32))
-        batch_c = {k: (jnp.broadcast_to(v, (per,) + v.shape[1:])
-                       if hasattr(v, "shape") and v.shape[:1] == (1,) else v)
-                   for k, v in batch.items()}
-        scores = mdef.dense_score(state["dense"]["hi"], emb_c, batch_c)
+        scores = mdef.dense_score(state["dense"]["hi"], emb_c,
+                                  _broadcast_batch(batch))
         v, i = jax.lax.top_k(scores, min(topk, per))
         i = i + jax.lax.axis_index(all_axes) * per
         vg = jax.lax.all_gather(v, all_axes, axis=0, tiled=True)
@@ -266,9 +283,13 @@ def make_retrieval_step(mdef: HybridDef, mesh, n_candidates: int,
 
     cand_struct = jax.ShapeDtypeStruct((n_candidates, E), jnp.bfloat16)
     cand_spec = P(all_axes, None)
-    fn = compat.shard_map(local, mesh=mesh,
+    inner = compat.shard_map(local, mesh=mesh,
                        in_specs=(specs, bspecs, cand_spec),
                        out_specs=(P(), P()), check_vma=False)
+
+    def fn(state, batch, cand):
+        return inner(state, _normalize_batch(batch), cand)
+
     arg_structs = (structs, bstructs, cand_struct)
     arg_shardings = (shardings,
                      jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,

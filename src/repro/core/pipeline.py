@@ -1,0 +1,402 @@
+"""Staged microbatch pipeline for the hybrid-parallel train step.
+
+The paper's scaling story (Sect. VI) rests on overlapping the embedding
+layout-switch collectives (index exchange + all-to-all / reduce-scatter)
+with dense compute: on 64 sockets those collectives are the dominant
+non-compute cost.  A monolithic step closure gives the compiler one serial
+dependence chain per batch; this module decomposes the step into explicit
+:class:`Stage` objects and software-pipelines them over M microbatches:
+
+    index_exchange   loader layout -> compute layout for the index stream
+                     (row mode: all_gather over the embedding axes; table
+                     mode: replica gather / on-chip permute+slice).  DOUBLE
+                     BUFFERED: microbatch i+1's exchange is issued before
+                     microbatch i's compute consumes buffer i, so the two
+                     have no data dependence and XLA's latency-hiding
+                     scheduler can overlap them.  jax.lax exposes no public
+                     async collective start/done pair; ``exchange_impl=
+                     "ring"`` decomposes the gather into ns-1 ppermute
+                     chunks — finer units the scheduler can interleave —
+                     and is the hook an async start/done lowers into when
+                     the API lands.
+    embedding_fwd    model-parallel bag forward + layout switch
+                     (psum_scatter in row mode, all_to_all in table mode).
+    dense_fwd_bwd    data-parallel dense forward/backward on one
+                     microbatch; returns (loss, dense grads, emb cotangent).
+    dY_exchange      the mirror collective of the fwd layout switch, per
+                     microbatch (overlaps the NEXT microbatch's compute).
+    sparse_update    ONE fused sparse-backward + SGD application on the
+                     concatenated, order-restored index/cotangent stream
+                     (bit-identical to the unpipelined step — see below).
+    dense_update     ONE bucketed RS+AG Split-SGD step on the accumulated
+                     dense gradient (C4+C5).
+
+Microbatch partition and bit-exactness
+--------------------------------------
+Microbatch i is "every device's i-th slice of its local batch share".
+For batch-sharded inputs that is a contiguous local slice; for replicated
+index streams it is the matching strided selection (device-major layout
+``[ns, M, c]`` sliced at ``[:, i]``), so the bag output of each microbatch
+lands on exactly the rows whose dense features the device already holds.
+Every microbatch's forward/backward runs against the step's INITIAL
+weights (classic gradient accumulation), per-microbatch update streams are
+concatenated and restored to the full-batch order with a static
+permutation, and the sparse update is applied ONCE — hence
+``make_pipelined_train_step(M=1)`` is bit-identical to the legacy
+monolithic step and ``M>1`` is bit-identical on the embedding path (the
+accumulated dense gradient sums per-microbatch partial sums, which
+reassociates the reduction; see tests/test_pipeline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import sharded_embedding as se
+from repro.optim import data_parallel as dp
+
+
+# ---------------------------------------------------------------------------
+# Stage plumbing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One named, composable piece of the hybrid step (runs INSIDE
+    shard_map).  ``comm`` labels the collective the stage issues —
+    introspection/debugging metadata only (the benchmark overlap model in
+    benchmarks/bench_comm_model.py is analytic and does not read it)."""
+
+    name: str
+    fn: Callable
+    comm: str = ""
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineStages:
+    """The staged decomposition of one hybrid-parallel train step."""
+
+    index_exchange: Stage
+    embedding_fwd: Stage
+    dense_fwd_bwd: Stage
+    dY_exchange: Stage
+    sparse_update: Stage
+    dense_update: Stage
+
+
+def mesh_axes(mesh) -> tuple[tuple[str, ...], str, tuple[str, ...]]:
+    """(all_axes, model_axis, batch_axes).  The last mesh axis is 'model'."""
+    names = tuple(mesh.axis_names)
+    return names, names[-1], names[:-1]
+
+
+def emb_axes(mdef, mesh):
+    """Row mode shards the row space over the FULL mesh; table mode uses the
+    model axis and replicates over the rest."""
+    all_axes, model, batch_axes = mesh_axes(mesh)
+    if mdef.emb_mode == "row":
+        return all_axes, None
+    return model, (batch_axes if batch_axes else None)
+
+
+# one source of truth for the device-major flattening rule
+_combined_axis_index = dp.combined_axis_index
+
+
+def validate_pipeline(mdef, mesh, microbatches: int) -> None:
+    """Reject unsupported (emb_mode, idx_input, M) combinations with a
+    clear error instead of silently mis-sharding."""
+    if mdef.emb_mode not in ("row", "table"):
+        raise ValueError(f"unknown emb_mode {mdef.emb_mode!r}; "
+                         "expected 'row' or 'table'")
+    if mdef.idx_input not in ("replicated", "sharded"):
+        raise ValueError(f"unknown idx_input {mdef.idx_input!r}; "
+                         "expected 'replicated' or 'sharded'")
+    impl = getattr(mdef, "exchange_impl", "fused")
+    if impl not in ("fused", "ring"):
+        raise ValueError(f"unknown exchange_impl {impl!r}; "
+                         "expected 'fused' (one all_gather) or 'ring' "
+                         "(ppermute-chunked)")
+    if microbatches < 1:
+        raise ValueError(f"microbatches must be >= 1, got {microbatches}")
+    ns = int(np.prod(list(mesh.shape.values())))
+    if mdef.batch % (microbatches * ns):
+        raise ValueError(
+            f"global batch {mdef.batch} must be divisible by microbatches "
+            f"* mesh size = {microbatches} * {ns}")
+
+
+# ---------------------------------------------------------------------------
+# ppermute-chunked exchange (the "async" lowering of the index gather)
+# ---------------------------------------------------------------------------
+
+def _ring_all_gather_1d(x: jax.Array, axis_name) -> jax.Array:
+    """Tiled all_gather over ONE named axis as ns-1 ppermute steps.  Output
+    is bit-identical to ``jax.lax.all_gather(..., tiled=True)`` (pure data
+    movement, no arithmetic), but each chunk is an independent op the
+    scheduler can interleave with compute."""
+    ns = compat.axis_size(axis_name)
+    if ns == 1:
+        return x
+    idx = jax.lax.axis_index(axis_name)
+    chunk = x.shape[0]
+    out = jnp.zeros((ns * chunk,) + x.shape[1:], x.dtype)
+    out = jax.lax.dynamic_update_slice_in_dim(out, x, idx * chunk, axis=0)
+    cur = x
+    perm = [(i, (i + 1) % ns) for i in range(ns)]
+    for k in range(1, ns):
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        src = jnp.mod(idx - k, ns)          # after k shifts: chunk of idx-k
+        out = jax.lax.dynamic_update_slice_in_dim(out, cur, src * chunk,
+                                                  axis=0)
+    return out
+
+
+def ring_all_gather(x: jax.Array, axis_name) -> jax.Array:
+    """Tiled all_gather over a (tuple of) mesh axes via ppermute rings,
+    minor axis first — same block order as the fused collective."""
+    axes = axis_name if isinstance(axis_name, (tuple, list)) else (axis_name,)
+    for ax in reversed(tuple(axes)):
+        x = _ring_all_gather_1d(x, ax)
+    return x
+
+
+def _exchange_collective(x: jax.Array, axis_name, impl: str) -> jax.Array:
+    if impl == "ring":
+        return ring_all_gather(x, axis_name)
+    return jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Stage construction
+# ---------------------------------------------------------------------------
+
+def build_stages(mdef, mesh, layout) -> PipelineStages:
+    """Bind the model definition to the five pipeline stages.  All returned
+    callables run INSIDE shard_map over the full mesh."""
+    all_axes, model, batch_axes = mesh_axes(mesh)
+    emb_ax, replica_ax = emb_axes(mdef, mesh)
+    nb = (int(np.prod([mesh.shape[a] for a in batch_axes]))
+          if batch_axes else 1)
+    impl = getattr(mdef, "exchange_impl", "fused")
+    B = mdef.batch
+    fused = (jax.default_backend() == "tpu" if mdef.fused_update is None
+             else mdef.fused_update)
+
+    def exchange(idx_mb, fwd_only: bool = False):
+        """Index stream: loader layout -> compute layout for one
+        microbatch.  Returns (idx_fwd, idx_upd): the forward consumes
+        ``idx_fwd``; the sparse update consumes ``idx_upd`` (the full
+        microbatch in device-major order, matching dY_exchange).
+        ``fwd_only`` (serve path) skips the update-side gather."""
+        if mdef.emb_mode == "row":
+            if mdef.idx_input == "sharded":
+                g = _exchange_collective(idx_mb, emb_ax, impl)
+                return g, g
+            return idx_mb, idx_mb
+        if mdef.idx_input == "sharded":
+            # on-chip exchange replaces the replicated loader AND the
+            # host-side permute_indices: gather the original-slot stream,
+            # permute to padded-slot order, slice this shard's slots.
+            full = _exchange_collective(idx_mb, all_axes, impl)
+            padded = se.permute_indices(layout, full)     # [Bm, n_pad, P]
+            K = layout.slots_per_shard
+            m_idx = jax.lax.axis_index(model)
+            idx_upd = jax.lax.dynamic_slice_in_dim(padded, m_idx * K, K,
+                                                   axis=1)
+            if nb > 1:
+                c = idx_upd.shape[0] // nb
+                d_idx = _combined_axis_index(batch_axes)
+                idx_fwd = jax.lax.dynamic_slice_in_dim(idx_upd, d_idx * c,
+                                                       c, axis=0)
+            else:
+                idx_fwd = idx_upd
+            return idx_fwd, idx_upd
+        # paper loader: padded-slot order, already model-sharded slots;
+        # the update additionally needs every replica's batch rows.
+        if fwd_only:
+            return idx_mb, None
+        idx_upd = (_exchange_collective(idx_mb, replica_ax, impl)
+                   if replica_ax is not None else idx_mb)
+        return idx_mb, idx_upd
+
+    def embedding_fwd(W_fwd, idx_fwd):
+        return se.sharded_bag_fwd(layout, W_fwd, idx_fwd, emb_ax)
+
+    def dense_fwd_bwd(dense_hi, emb_out, batch_mb):
+        def loss_fn(hi, e):
+            return mdef.dense_loss(hi, e, batch_mb) / B
+        loss, (g_dense, d_emb) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1))(dense_hi, emb_out)
+        return loss, g_dense, d_emb
+
+    def dY_exchange(d_emb):
+        return se.gather_dY(layout, d_emb, emb_ax, replica_ax)
+
+    def sparse_update(emb_store, idx_upd, dY):
+        if mdef.split_sgd:
+            hi2, lo2 = se.apply_update_scan(
+                layout, (emb_store["hi"], emb_store["lo"]), idx_upd, dY,
+                mdef.emb_lr, emb_ax, split=True, replica_axes=None,
+                fused=fused)
+            return {"hi": hi2, "lo": lo2}
+        # NB: the fused fp32 kernel pre-reduces duplicates (one rounding
+        # per row) where the reference scatter-adds per lookup, so the
+        # two non-split paths are close but not bit-identical.
+        w2 = se.apply_update_scan(layout, emb_store["w"], idx_upd, dY,
+                                  mdef.emb_lr, emb_ax, split=False,
+                                  replica_axes=None, fused=fused)
+        return {"w": w2}
+
+    def dense_update(dense_state, g_dense):
+        st = dp.DPState(hi=dense_state["hi"], lo_shard=dense_state["lo"],
+                        mom_shard=None, err_shard=dense_state["err"])
+        st2 = dp.rs_ag_split_sgd(st, g_dense, mdef.lr, all_axes,
+                                 compress=mdef.compress_grads,
+                                 num_buckets=mdef.num_buckets, mean=False)
+        return {"hi": st2.hi, "lo": st2.lo_shard, "err": st2.err_shard}
+
+    ex_comm = ("all_gather(idx)" if mdef.idx_input == "sharded"
+               or mdef.emb_mode == "table" else "none")
+    fwd_comm = ("psum_scatter" if mdef.emb_mode == "row" else "all_to_all")
+    return PipelineStages(
+        index_exchange=Stage("index_exchange", exchange, comm=ex_comm),
+        embedding_fwd=Stage("embedding_fwd", embedding_fwd, comm=fwd_comm),
+        dense_fwd_bwd=Stage("dense_fwd_bwd", dense_fwd_bwd, comm="none"),
+        dY_exchange=Stage("dY_exchange", dY_exchange,
+                          comm=("all_gather(dY)" if mdef.emb_mode == "row"
+                                else "all_to_all(dY)")),
+        sparse_update=Stage("sparse_update", sparse_update, comm="none"),
+        dense_update=Stage("dense_update", dense_update, comm="rs+ag"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Microbatch slicing and stream-order restoration
+# ---------------------------------------------------------------------------
+
+def _slice_local(v: jax.Array, i: int, M: int) -> jax.Array:
+    c = v.shape[0] // M
+    return jax.lax.slice_in_dim(v, i * c, (i + 1) * c, axis=0)
+
+
+def _slice_idx(idx, i: int, M: int, mdef, repl_width: int):
+    """Microbatch i of the index stream.  Batch-sharded streams slice the
+    local share contiguously; REPLICATED streams take the matching strided
+    selection (device-major ``[width, M, c]`` at ``[:, i]``) so the bag
+    output of the microbatch lands on the rows whose dense features each
+    device already holds."""
+    if M == 1:
+        return idx
+    if mdef.idx_input == "sharded":
+        return _slice_local(idx, i, M)
+    Bl = idx.shape[0]
+    c = Bl // (repl_width * M)
+    r = idx.reshape((repl_width, M, c) + idx.shape[1:])
+    return r[:, i].reshape((repl_width * c,) + idx.shape[1:])
+
+
+def _interleave_perm(B: int, M: int, ns: int) -> np.ndarray:
+    """Static permutation restoring the concatenated per-microbatch update
+    stream (order: microbatch-major ``(i, device, j)``) to the full-batch
+    device-major order ``(device, i, j)`` the M=1 step sees."""
+    c = B // (M * ns)
+    return np.arange(B).reshape(M, ns, c).transpose(1, 0, 2).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# The pipelined step factory
+# ---------------------------------------------------------------------------
+
+def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
+    """Build the staged, microbatched hybrid-parallel train step.
+
+    ``microbatches=1`` composes the stages back into exactly the legacy
+    monolithic step (bit-identical outputs).  ``microbatches=M`` splits the
+    global batch into M microbatches, double-buffers the index exchange
+    (microbatch i+1's collective is issued while microbatch i computes),
+    accumulates dense gradients across microbatches into a single RS+AG,
+    and applies ONE sparse update on the order-restored concatenated
+    stream.
+
+    Returns (jitted step, state shardings, batch specs, layout) — the same
+    contract as the legacy ``make_train_step``.
+    """
+    from repro.core import hybrid  # deferred: hybrid imports this module
+
+    M = int(microbatches)
+    validate_pipeline(mdef, mesh, M)
+    structs, specs, shardings, layout = hybrid.state_struct(mdef, mesh)
+    bstructs, bspecs = hybrid.batch_struct(mdef, mesh, layout)
+    all_axes, model, batch_axes = mesh_axes(mesh)
+    ns = int(np.prod(list(mesh.shape.values())))
+    nm = mesh.shape[model]
+    stages = build_stages(mdef, mesh, layout)
+    # replicated index streams carry the device-major layout of the axes
+    # the stream is replicated over: the full mesh in row mode, the model
+    # axis in table mode (the batch dim is already sharded over the rest).
+    repl_width = ns if mdef.emb_mode == "row" else nm
+    perm = (jnp.asarray(_interleave_perm(mdef.batch, M, ns))
+            if M > 1 else None)
+
+    def step_local(state, batch):
+        emb_store = state["emb"]
+        W_fwd = emb_store["hi"] if mdef.split_sgd else emb_store["w"]
+        dense_hi = state["dense"]["hi"]
+
+        def microbatch(i):
+            mb = {k: (_slice_idx(v, i, M, mdef, repl_width) if k == "idx"
+                      else _slice_local(v, i, M))
+                  for k, v in batch.items()} if M > 1 else batch
+            return mb
+
+        # -- prologue: microbatch 0's index exchange ----------------------
+        ex = [None] * M
+        ex[0] = stages.index_exchange(microbatch(0)["idx"])
+
+        loss_acc = None
+        g_acc = None
+        idx_parts, dY_parts = [], []
+        for i in range(M):
+            if i + 1 < M:
+                # double buffer: issue microbatch i+1's exchange BEFORE
+                # microbatch i's compute — no data dependence between the
+                # two, so the scheduler can overlap collective and compute.
+                ex[i + 1] = stages.index_exchange(microbatch(i + 1)["idx"])
+            idx_fwd, idx_upd = ex[i]
+            emb_out = stages.embedding_fwd(W_fwd, idx_fwd)
+            loss, g_dense, d_emb = stages.dense_fwd_bwd(
+                dense_hi, emb_out, microbatch(i))
+            dY = stages.dY_exchange(d_emb)
+            loss_acc = loss if loss_acc is None else loss_acc + loss
+            g_acc = (g_dense if g_acc is None
+                     else jax.tree.map(jnp.add, g_acc, g_dense))
+            idx_parts.append(idx_upd)
+            dY_parts.append(dY)
+
+        # -- epilogue: one sparse update on the order-restored stream -----
+        if M == 1:
+            idx_full, dY_full = idx_parts[0], dY_parts[0]
+        else:
+            idx_full = jnp.take(jnp.concatenate(idx_parts, axis=0), perm,
+                                axis=0)
+            dY_full = jnp.take(jnp.concatenate(dY_parts, axis=0), perm,
+                               axis=0)
+        new_emb = stages.sparse_update(emb_store, idx_full, dY_full)
+        new_dense = stages.dense_update(state["dense"], g_acc)
+        return ({"emb": new_emb, "dense": new_dense},
+                jax.lax.psum(loss_acc, all_axes))
+
+    step = compat.shard_map(step_local, mesh=mesh, in_specs=(specs, bspecs),
+                            out_specs=(specs, P()), check_vma=False)
+    return jax.jit(step, donate_argnums=(0,)), shardings, bspecs, layout

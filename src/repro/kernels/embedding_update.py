@@ -66,8 +66,8 @@ def _run_bounds(rows_ref, i):
     return (i == 0) | (row != prev), (i == L - 1) | (nxt != row)
 
 
-def _kernel_split(rows_ref, bags_ref, msk_ref, lr_ref, hi_ref, lo_ref,
-                  dY_ref, nhi_ref, nlo_ref, acc_ref):
+def _kernel_split(rows_ref, bags_ref, msk_ref, lr_ref, wgt_ref, hi_ref,
+                  lo_ref, dY_ref, nhi_ref, nlo_ref, acc_ref):
     i = pl.program_id(0)
     is_start, is_end = _run_bounds(rows_ref, i)
 
@@ -75,8 +75,15 @@ def _kernel_split(rows_ref, bags_ref, msk_ref, lr_ref, hi_ref, lo_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # masked accumulate: padding / invalid (non-owned) lookups add exact 0.0
-    g = dY_ref[...].astype(jnp.float32)
+    # masked accumulate: padding / invalid (non-owned) lookups add exact 0.0.
+    # Weighted bags scale each lookup's cotangent row BEFORE the VMEM
+    # pre-reduction.  The compiler contracts the scale into the accumulate
+    # (FMA — observed on the XLA CPU backend even through barriers/bitcasts,
+    # and what Mosaic emits on TPU), so the WEIGHTED result sits within
+    # 1 ulp/step of the pre-scaled segment_sum reference rather than
+    # bitwise on it; weight == 1.0 multiplies exactly, so the unweighted
+    # path keeps its bit-identity contract.
+    g = dY_ref[...].astype(jnp.float32) * wgt_ref[i]
     acc_ref[...] += jnp.where(msk_ref[i] != 0, g, 0.0)
 
     @pl.when(is_end)
@@ -91,8 +98,8 @@ def _kernel_split(rows_ref, bags_ref, msk_ref, lr_ref, hi_ref, lo_ref,
         nlo_ref[...] = nl
 
 
-def _kernel_fp32(rows_ref, bags_ref, msk_ref, lr_ref, w_ref, dY_ref,
-                 nw_ref, acc_ref):
+def _kernel_fp32(rows_ref, bags_ref, msk_ref, lr_ref, wgt_ref, w_ref,
+                 dY_ref, nw_ref, acc_ref):
     i = pl.program_id(0)
     is_start, is_end = _run_bounds(rows_ref, i)
 
@@ -100,7 +107,7 @@ def _kernel_fp32(rows_ref, bags_ref, msk_ref, lr_ref, w_ref, dY_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    g = dY_ref[...].astype(jnp.float32)
+    g = dY_ref[...].astype(jnp.float32) * wgt_ref[i]
     acc_ref[...] += jnp.where(msk_ref[i] != 0, g, 0.0)
 
     @pl.when(is_end)
@@ -111,17 +118,20 @@ def _kernel_fp32(rows_ref, bags_ref, msk_ref, lr_ref, w_ref, dY_ref,
 
 def _row_specs(E, n_out):
     """(in_specs tail, out_specs) for the row-addressed operands.  The
-    scalar-prefetch refs (rows, bags, msk, lr — lr lives in SMEM, the
-    TPU-legal home for kernel scalars) are appended to every index_map."""
-    row = pl.BlockSpec((1, E), lambda i, rows, bags, msk, lr: (rows[i], 0))
-    bag = pl.BlockSpec((1, E), lambda i, rows, bags, msk, lr: (bags[i], 0))
+    scalar-prefetch refs (rows, bags, msk, lr, wgt — lr/wgt live in SMEM,
+    the TPU-legal home for kernel scalars) are appended to every
+    index_map."""
+    row = pl.BlockSpec((1, E),
+                       lambda i, rows, bags, msk, lr, wgt: (rows[i], 0))
+    bag = pl.BlockSpec((1, E),
+                       lambda i, rows, bags, msk, lr, wgt: (bags[i], 0))
     return row, bag, [row] * n_out
 
 
 def fused_update_split_pallas(hi: jax.Array, lo: jax.Array,
                               sorted_rows: jax.Array, sorted_bags: jax.Array,
-                              sorted_msk: jax.Array, dY: jax.Array, lr,
-                              interpret: bool = False
+                              sorted_msk: jax.Array, sorted_wgt: jax.Array,
+                              dY: jax.Array, lr, interpret: bool = False
                               ) -> tuple[jax.Array, jax.Array]:
     """Fused sparse-backward + Split-SGD-BF16 update, in place on (hi, lo).
 
@@ -129,10 +139,11 @@ def fused_update_split_pallas(hi: jax.Array, lo: jax.Array,
     ``sorted_rows`` [L] int32: ASCENDING local row id per flat lookup
     (duplicates contiguous; padding entries must repeat an in-range row and
     carry ``sorted_msk == 0``).  ``sorted_bags`` [L] int32: row of ``dY``
-    holding each lookup's cotangent.  ``dY`` [NB, E].  Returns the updated
-    (hi, lo); rows not named in ``sorted_rows`` are untouched (aliased
-    buffers, no shard copy).  E must be lane-aligned on the TPU target
-    (ops.py pads).
+    holding each lookup's cotangent.  ``sorted_wgt`` [L] fp32: per-lookup
+    bag weight (1.0 for plain sum bags) scaling the cotangent row before
+    the VMEM pre-reduction.  ``dY`` [NB, E].  Returns the updated (hi, lo);
+    rows not named in ``sorted_rows`` are untouched (aliased buffers, no
+    shard copy).  E must be lane-aligned on the TPU target (ops.py pads).
     """
     M, E = hi.shape
     L = sorted_rows.shape[0]
@@ -141,7 +152,7 @@ def fused_update_split_pallas(hi: jax.Array, lo: jax.Array,
     return pl.pallas_call(
         _kernel_split,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=4,
+            num_scalar_prefetch=5,
             grid=(L,),
             in_specs=[row, row, bag],
             out_specs=outs,
@@ -149,18 +160,18 @@ def fused_update_split_pallas(hi: jax.Array, lo: jax.Array,
         ),
         out_shape=[jax.ShapeDtypeStruct((M, E), jnp.bfloat16),
                    jax.ShapeDtypeStruct((M, E), jnp.uint16)],
-        # args: (rows, bags, msk, lr, hi, lo, dY) -> alias hi->out0, lo->out1
-        input_output_aliases={4: 0, 5: 1},
+        # args: (rows, bags, msk, lr, wgt, hi, lo, dY) -> alias hi/lo->outs
+        input_output_aliases={5: 0, 6: 1},
         interpret=interpret,
-    )(sorted_rows, sorted_bags, sorted_msk, lr_arr, hi, lo, dY)
+    )(sorted_rows, sorted_bags, sorted_msk, lr_arr, sorted_wgt, hi, lo, dY)
 
 
 def fused_update_fp32_pallas(W: jax.Array, sorted_rows: jax.Array,
                              sorted_bags: jax.Array, sorted_msk: jax.Array,
-                             dY: jax.Array, lr, interpret: bool = False
-                             ) -> jax.Array:
+                             sorted_wgt: jax.Array, dY: jax.Array, lr,
+                             interpret: bool = False) -> jax.Array:
     """fp32/bf16-storage variant of :func:`fused_update_split_pallas`:
-    ``W[r] -= lr * sum(dY[bags of r])`` on the touched rows only."""
+    ``W[r] -= lr * sum(wgt * dY[bags of r])`` on the touched rows only."""
     M, E = W.shape
     L = sorted_rows.shape[0]
     row, bag, outs = _row_specs(E, 1)
@@ -168,30 +179,32 @@ def fused_update_fp32_pallas(W: jax.Array, sorted_rows: jax.Array,
     return pl.pallas_call(
         _kernel_fp32,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=4,
+            num_scalar_prefetch=5,
             grid=(L,),
             in_specs=[row, bag],
             out_specs=outs,
             scratch_shapes=[pltpu.VMEM((1, E), jnp.float32)],
         ),
         out_shape=[jax.ShapeDtypeStruct((M, E), W.dtype)],
-        # args: (rows, bags, msk, lr, W, dY) -> alias W->out0
-        input_output_aliases={4: 0},
+        # args: (rows, bags, msk, lr, wgt, W, dY) -> alias W->out0
+        input_output_aliases={5: 0},
         interpret=interpret,
-    )(sorted_rows, sorted_bags, sorted_msk, lr_arr, W, dY)[0]
+    )(sorted_rows, sorted_bags, sorted_msk, lr_arr, sorted_wgt, W, dY)[0]
 
 
 def sort_lookups(tgt: jax.Array, valid: jax.Array | None, num_rows: int,
-                 pooling: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+                 pooling: int, weights: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Host/XLA-side prep: sort flat lookups by row so duplicates form runs.
 
     ``tgt`` [L] int32 local row ids (may be out of range where invalid);
     ``valid`` [L] bool or None; flat lookup ``i`` reads bag ``i // pooling``.
+    ``weights`` [L] fp32 per-lookup bag weights or None (sum bags).
     Invalid/padding lookups are sorted to the tail as a zero-contribution
     run on the last row (a bit-exact no-op rewrite of that row).  Returns
-    (sorted_rows, sorted_bags, sorted_msk) — int32 each, ready for the
-    kernels above.  Only int32 is sorted; the [*, E] gradient data is never
-    permuted or expanded.
+    (sorted_rows, sorted_bags, sorted_msk, sorted_wgt) — ready for the
+    kernels above.  Only scalars are sorted; the [*, E] gradient data is
+    never permuted or expanded.
     """
     valid = ((tgt >= 0) & (tgt < num_rows)) if valid is None else (
         valid & (tgt >= 0) & (tgt < num_rows))
@@ -201,4 +214,6 @@ def sort_lookups(tgt: jax.Array, valid: jax.Array | None, num_rows: int,
     sorted_rows = jnp.minimum(sorted_key, num_rows - 1)
     sorted_bags = (order // pooling).astype(jnp.int32)
     sorted_msk = (sorted_key < num_rows).astype(jnp.int32)
-    return sorted_rows, sorted_bags, sorted_msk
+    sorted_wgt = (jnp.ones(tgt.shape, jnp.float32) if weights is None
+                  else jnp.take(weights.astype(jnp.float32), order))
+    return sorted_rows, sorted_bags, sorted_msk, sorted_wgt

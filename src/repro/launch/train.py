@@ -24,6 +24,13 @@ from repro.launch.mesh import make_mesh
 from repro.train import TrainLoop, TrainLoopConfig
 
 
+def _bspec_shardings(mesh, bspecs):
+    """NamedShardings for a batch-spec tree, so the prefetch iterator's
+    device_put lands each batch directly in the step's input placement."""
+    from repro.dist import sharding
+    return sharding.named(mesh, bspecs)
+
+
 def local_mesh():
     n = len(jax.devices())
     if n >= 8:
@@ -83,19 +90,27 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--alpha", type=float, default=0.0,
                     help="index-skew for sparse streams (paper Fig. 8)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="staged-pipeline microbatches (core/pipeline.py): "
+                         "double-buffered index exchange overlap")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="host-side device_put-ahead window (0 = off)")
     args = ap.parse_args()
 
     mesh = local_mesh()
     print(f"[train] devices={len(jax.devices())} mesh={dict(mesh.shape)}")
     key = jax.random.PRNGKey(0)
+    batch_shardings = None
 
     if args.arch.startswith("dlrm"):
         from repro.core import dlrm as D
         from repro.data.synthetic import dlrm_stream
         cfg = dataclasses.replace(reduced_dlrm(args.arch, args.batch),
-                                  lr=args.lr)
+                                  lr=args.lr,
+                                  microbatches=args.microbatches)
         state, layout = D.init_state(key, cfg, mesh)
         step, shardings, bspecs, _ = D.make_train_step(cfg, mesh)
+        batch_shardings = _bspec_shardings(mesh, bspecs)
         stream = ({k: jax.numpy.asarray(v) for k, v in b.items()}
                   for b in dlrm_stream(0, cfg, args.alpha))
         n_params = cfg.spec.total_rows * cfg.emb_dim
@@ -104,14 +119,21 @@ def main():
         from repro.core import hybrid as H
         from repro.data.synthetic import hybrid_stream
         mdef = dataclasses.replace(reduced_hybrid(args.arch, args.batch),
-                                   lr=args.lr, emb_lr=args.lr)
+                                   lr=args.lr, emb_lr=args.lr,
+                                   microbatches=args.microbatches)
         state, layout = H.init_state(key, mdef, mesh)
         step, shardings, bspecs, _ = H.make_train_step(mdef, mesh)
+        batch_shardings = _bspec_shardings(mesh, bspecs)
         stream = ({k: jax.numpy.asarray(v) for k, v in b.items()}
                   for b in hybrid_stream(0, mdef, args.alpha))
     else:
         from repro.models import lm_steps
         from repro.data.synthetic import token_stream
+        if args.microbatches != 1:
+            raise SystemExit(
+                "--microbatches applies to the recsys hybrid pipeline "
+                "(dlrm/fm/bst/sasrec/din); LM archs microbatch via "
+                "TransformerConfig.microbatch instead")
         cfg, B, L = reduced_lm(args.arch, args.batch, args.seq)
         state = lm_steps.init_lm_state(key, cfg, mesh)
         step, structs, shardings = lm_steps.make_lm_train_step(
@@ -121,9 +143,11 @@ def main():
                   for b in token_stream(0, cfg.vocab, B, L))
 
     loop = TrainLoop(
-        TrainLoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir),
+        TrainLoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                        prefetch=args.prefetch),
         step, state, stream,
-        state_shardings=shardings if args.ckpt_dir else None)
+        state_shardings=shardings if args.ckpt_dir else None,
+        batch_shardings=batch_shardings)
     loop.run()
     print(f"[train] done: first loss {loop.losses[0]:.4f} "
           f"-> last {loop.losses[-1]:.4f}")

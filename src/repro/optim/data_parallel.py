@@ -35,13 +35,21 @@ def _axis_size(axis_name) -> int:
     return compat.axis_size(axis_name)
 
 
-def _axis_index(axis_name) -> jax.Array:
+def combined_axis_index(axis_name) -> jax.Array:
+    """Flattened device index over a (tuple of) mesh axes, first axis
+    major — the order a P(axes) sharding lays blocks out in.  Shared by
+    the RS+AG optimizer below and the pipeline's table-mode index slice
+    (repro/core/pipeline.py); the flattening rule must stay single-sourced
+    or the two would silently disagree on block routing."""
     if isinstance(axis_name, (tuple, list)):
         idx = jnp.zeros((), jnp.int32)
         for a in axis_name:
             idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
         return idx
     return jax.lax.axis_index(axis_name)
+
+
+_axis_index = combined_axis_index
 
 
 def _pad_to(x: jax.Array, mult: int) -> jax.Array:

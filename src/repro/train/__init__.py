@@ -1,1 +1,2 @@
-from repro.train.loop import TrainLoop, TrainLoopConfig, StragglerMonitor  # noqa: F401
+from repro.train.loop import (TrainLoop, TrainLoopConfig, StragglerMonitor,  # noqa: F401
+                              prefetch_to_device)

@@ -14,7 +14,11 @@ local device set):
 * elastic restart — on device-count change, states are restored through
   CheckpointManager with the NEW mesh's shardings (global-array format; see
   repro/checkpoint/manager.py), embeddings re-laid-out via
-  ``reshard_embedding``.
+  ``reshard_embedding``;
+* host-side prefetch — :func:`prefetch_to_device` keeps ``size`` batches
+  in flight (``jax.device_put`` is async), so the H2D transfer of batch
+  n+1 overlaps step n's device compute — the host-side leg of the staged
+  pipeline's comm/compute overlap (repro/core/pipeline.py).
 """
 
 from __future__ import annotations
@@ -30,6 +34,44 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 
 
+def prefetch_to_device(batches: Iterator[Any], size: int = 2,
+                       shardings: Any = None) -> Iterator[Any]:
+    """Wrap a host batch iterator so the next ``size`` batches are already
+    submitted to the devices (``jax.device_put`` returns immediately with
+    the transfer in flight) while the current step runs.
+
+    ``shardings``: optional pytree of shardings matching each batch (the
+    ``bspecs``-derived NamedShardings of the step factory); None keeps the
+    default placement.  Order is preserved exactly; the wrapper only pulls
+    ahead of the consumer by ``size`` batches."""
+    import jax
+
+    if size < 1:
+        raise ValueError(f"prefetch size must be >= 1, got {size}")
+
+    def put(b):
+        return jax.device_put(b, shardings) if shardings is not None \
+            else jax.device_put(b)
+
+    def gen():
+        buf: deque[Any] = deque()
+        it = iter(batches)
+        try:
+            while len(buf) < size:
+                buf.append(put(next(it)))
+        except StopIteration:
+            pass
+        while buf:
+            nxt = buf.popleft()
+            try:
+                buf.append(put(next(it)))
+            except StopIteration:
+                pass
+            yield nxt
+
+    return gen()
+
+
 @dataclasses.dataclass
 class TrainLoopConfig:
     steps: int = 100
@@ -39,6 +81,7 @@ class TrainLoopConfig:
     log_every: int = 10
     straggler_threshold: float = 2.0   # step > thr x median -> straggler
     straggler_window: int = 50
+    prefetch: int = 0                  # >0: device_put-ahead window
 
 
 class StragglerMonitor:
@@ -93,10 +136,13 @@ class DataRebalancer:
 class TrainLoop:
     def __init__(self, cfg: TrainLoopConfig, step_fn: Callable,
                  state: Any, batches: Iterator[Any],
-                 state_shardings: Any = None):
+                 state_shardings: Any = None, batch_shardings: Any = None):
         self.cfg = cfg
         self.step_fn = step_fn
         self.state = state
+        if cfg.prefetch > 0:
+            batches = prefetch_to_device(batches, size=cfg.prefetch,
+                                         shardings=batch_shardings)
         self.batches = batches
         self.monitor = StragglerMonitor(cfg.straggler_window,
                                         cfg.straggler_threshold)

@@ -157,7 +157,8 @@ def test_bag_update_dispatch():
 
 def test_sort_lookups_properties():
     tgt = jnp.asarray([5, 2, 9, 2, 100, -1, 5], jnp.int32)
-    rows, bags, msk = EU.sort_lookups(tgt, None, 10, 1)
+    w = jnp.asarray([0.5, 1.5, 2.0, 3.0, 4.0, 5.0, 6.0], jnp.float32)
+    rows, bags, msk, wgt = EU.sort_lookups(tgt, None, 10, 1, weights=w)
     rn = np.asarray(rows)
     assert (np.diff(rn) >= 0).all()                 # sorted
     assert np.asarray(msk).sum() == 5               # 100 and -1 dropped
@@ -165,6 +166,80 @@ def test_sort_lookups_properties():
     # bag ids of the valid positions point at the original flat slots
     mb = np.asarray(bags)[np.asarray(msk) == 1]
     assert set(mb.tolist()) == {0, 1, 2, 3, 6}
+    # weights ride the same permutation as the bag ids
+    np.testing.assert_array_equal(np.asarray(wgt),
+                                  np.asarray(w)[np.asarray(bags)])
+    # no weights -> exact ones
+    _, _, _, w1 = EU.sort_lookups(tgt, None, 10, 1)
+    np.testing.assert_array_equal(np.asarray(w1), np.ones(7, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Weighted bags (per-lookup weights) on the fused path
+# ---------------------------------------------------------------------------
+
+def test_weighted_split_matches_scaled_reference():
+    """Fused weighted update vs jitted reference on pre-scaled grads: the
+    kernel scales each lookup's dY row by its weight inside the sorted-
+    order pre-reduction.  The compiler contracts scale+accumulate into an
+    FMA (one rounding instead of two per lookup), so the weighted result
+    is within 1 ulp/step of the pre-scaled reference — NOT bitwise (the
+    unweighted path multiplies by exactly 1.0 and keeps its bit-identity
+    contract, enforced by the tests above).  Untouched rows stay bitwise
+    intact."""
+    M, E_, L = 60, 16, 48
+    W, hi, lo, tgt, dY = _mk(M, E_, L, 1, dup_vocab=7, seed=3)
+    w = jnp.asarray(RNG.standard_normal(L).astype(np.float32))
+    nh, nl = ops.fused_embedding_update(hi, lo, tgt, dY, 0.05, weights=w,
+                                        pooling=1, interpret=True)
+    rh, rl = _ref_split(hi, lo, tgt, dY * w[:, None], 0.05)
+    np.testing.assert_allclose(np.asarray(combine_split(nh, nl)),
+                               np.asarray(combine_split(rh, rl)),
+                               rtol=1e-6, atol=1e-6)
+    untouched = np.setdiff1d(np.arange(M), np.asarray(tgt))
+    np.testing.assert_array_equal(
+        np.asarray(combine_split(nh, nl))[untouched],
+        np.asarray(W)[untouched])
+
+
+def test_weighted_fused_bag_update_matches_scatter():
+    """bag_update(method='fused') now accepts per-lookup weights and
+    matches the weighted scatter-add reference."""
+    B, S, P, E_, M = 5, 3, 4, 8, 40
+    W = jnp.asarray(RNG.standard_normal((M, E_)), jnp.float32)
+    g = jnp.asarray(RNG.integers(0, M // 4, (B, S, P)), jnp.int32)
+    dY = jnp.asarray(RNG.standard_normal((B, S, E_)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((B, S, P)), jnp.float32)
+    w_f = E.bag_update(W, g, dY, 0.1, weights=w, method="fused")
+    w_s = E.bag_update(W, g, dY, 0.1, weights=w, method="scatter")
+    np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_s),
+                               rtol=1e-5, atol=1e-6)
+    # rows untouched by any lookup stay bitwise intact
+    untouched = np.setdiff1d(np.arange(M), np.asarray(g).ravel())
+    np.testing.assert_array_equal(np.asarray(w_f)[untouched],
+                                  np.asarray(W)[untouched])
+
+
+def test_weighted_split_bag_update():
+    """bag_update_split with weights: pooled (P>1) weighted bags, fused vs
+    reference on the weighted grad expansion (1-ulp FMA tolerance)."""
+    B, S, P, E_, M = 4, 2, 3, 8, 30
+    W = jnp.asarray(RNG.standard_normal((M, E_)), jnp.float32)
+    hi, lo = split_fp32(W)
+    g = jnp.asarray(RNG.integers(0, M // 3, (B, S, P)), jnp.int32)
+    dY = jnp.asarray(RNG.standard_normal((B, S, E_)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((B, S, P)), jnp.float32)
+    nh, nl = E.bag_update_split(hi, lo, g, dY, 0.1, weights=w)
+    grad = jnp.broadcast_to(dY[:, :, None, :], (B, S, P, E_)) \
+        * w[..., None]
+    rh, rl = _ref_split(hi, lo, g.reshape(-1), grad.reshape(-1, E_), 0.1)
+    np.testing.assert_allclose(np.asarray(combine_split(nh, nl)),
+                               np.asarray(combine_split(rh, rl)),
+                               rtol=1e-6, atol=1e-6)
+    untouched = np.setdiff1d(np.arange(M), np.asarray(g).ravel())
+    np.testing.assert_array_equal(
+        np.asarray(combine_split(nh, nl))[untouched],
+        np.asarray(W)[untouched])
 
 
 # ---------------------------------------------------------------------------

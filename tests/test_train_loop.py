@@ -1,9 +1,11 @@
 """Train loop fault tolerance: straggler detection, data rebalancing,
-checkpoint/restore mid-run."""
+checkpoint/restore mid-run; host-side prefetch iterator ordering."""
 
 import numpy as np
+import pytest
 
-from repro.train import StragglerMonitor, TrainLoop, TrainLoopConfig
+from repro.train import (StragglerMonitor, TrainLoop, TrainLoopConfig,
+                         prefetch_to_device)
 from repro.train.loop import DataRebalancer
 
 
@@ -37,6 +39,58 @@ def test_rebalancer_conserves_batch():
     for _ in range(50):
         rb.penalize(2)
     assert rb.rows_per_host(1024)[2] >= int(0.5 / 4 * 1024) - 1
+
+
+class _RecordingIter:
+    """Source iterator that records how far the consumer has pulled."""
+
+    def __init__(self, n):
+        self.n = n
+        self.pulled = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self.pulled >= self.n:
+            raise StopIteration
+        self.pulled += 1
+        return {"x": np.full((2,), self.pulled - 1, np.int32)}
+
+
+def test_prefetch_preserves_order_and_pulls_ahead():
+    src = _RecordingIter(10)
+    it = prefetch_to_device(src, size=3)
+    first = next(it)
+    # the wrapper filled its window (3) plus the replacement for the one
+    # yielded -> the source is ahead of the consumer
+    assert src.pulled == 4
+    got = [int(np.asarray(first["x"])[0])]
+    got += [int(np.asarray(b["x"])[0]) for b in it]
+    assert got == list(range(10))           # order preserved exactly
+    assert src.pulled == 10
+
+
+def test_prefetch_short_stream_and_validation():
+    # stream shorter than the window still yields everything, in order
+    src = _RecordingIter(2)
+    got = [int(np.asarray(b["x"])[0]) for b in prefetch_to_device(src, 5)]
+    assert got == [0, 1]
+    with pytest.raises(ValueError, match="size"):
+        list(prefetch_to_device(iter([]), size=0))
+
+
+def test_loop_uses_prefetch():
+    seen = []
+
+    def step(state, batch):
+        seen.append(int(np.asarray(batch["x"])[0]))
+        return state + 1, float(state)
+
+    loop = TrainLoop(TrainLoopConfig(steps=6, log_every=100, prefetch=2),
+                     step, 0, _RecordingIter(100))
+    loop.run()
+    assert seen == list(range(6))
 
 
 def test_loop_checkpoint_restore(tmp_path):
