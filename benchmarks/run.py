@@ -14,7 +14,7 @@ import sys
 import traceback
 
 
-SECTIONS = ("ops", "comm", "scaling", "split")
+SECTIONS = ("ops", "comm", "scaling", "split", "ingest")
 
 
 def _call_main(m) -> None:
@@ -41,6 +41,8 @@ def main() -> None:
                 from benchmarks import bench_comm_model as m
             elif sec == "scaling":
                 from benchmarks import bench_scaling as m
+            elif sec == "ingest":
+                from benchmarks import bench_ingest as m
             else:
                 from benchmarks import bench_split_sgd as m
             _call_main(m)

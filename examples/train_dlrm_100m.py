@@ -6,6 +6,14 @@
 
 Uses the skewed (zipf) index stream — the regime where the paper's race-free
 ownership update matters (Fig. 8's contention analysis).
+
+With ``--data-dir DIR`` the same stream is PACKED into shard files on
+first run and training streams from disk through the full ingestion
+chain (docs/data.md): mmap reader -> threaded HostPipeline ->
+prefetch_to_device.  ``--host-presort`` additionally moves the
+sparse-update index sort onto the loader thread (row mode; the
+compiled-kernel win — on this CPU container it runs the interpret-mode
+kernel, which is validation-speed only).
 """
 
 import argparse
@@ -24,17 +32,41 @@ from repro.launch.mesh import make_mesh
 from repro.train import TrainLoop, TrainLoopConfig
 
 
+def packed_stream(cfg, data_dir, steps, host_presort, layout):
+    """Pack (first run) + stream the packed dataset (docs/data.md)."""
+    from repro.data.format import DatasetSpec, write_shards
+    from repro.data.pipeline import HostPipeline
+    from repro.data.reader import ShardedReader
+    if not os.path.exists(os.path.join(data_dir, "dataset.json")):
+        n = max(steps * cfg.batch // 4, cfg.batch)   # ~4 epochs of reuse
+        print(f"packing {n} synthetic samples into {data_dir} ...")
+        spec = DatasetSpec(table_rows=cfg.table_rows, pooling=cfg.pooling,
+                           num_dense=cfg.num_dense)
+        write_shards(dlrm_stream(0, cfg, alpha=0.8), data_dir, spec, n,
+                     samples_per_shard=8192)
+    reader = ShardedReader(data_dir, batch=cfg.batch, seed=0, shuffle=True)
+    reader.spec.check(cfg.table_rows, cfg.pooling, num_dense=cfg.num_dense)
+    return HostPipeline(reader, layout=layout, presort=host_presort)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--data-dir", default=None,
+                    help="train from packed shards (packed on first run)")
+    ap.add_argument("--host-presort", action="store_true",
+                    help="pre-sort the update index stream on the loader "
+                         "thread (requires --data-dir)")
     args = ap.parse_args()
+    if args.host_presort and not args.data_dir:
+        ap.error("--host-presort requires --data-dir")
 
     n = len(jax.devices())
     mesh = make_mesh((max(1, n // 4), min(4, n)), ("data", "model"))
     cfg = D.DLRMConfig(
         name="dlrm-100m", num_dense=64, bottom=(128, 64), top=(256, 128),
         table_rows=(200_000,) * 8, emb_dim=64, pooling=20, batch=256,
-        lr=0.03)
+        lr=0.03, host_presort=args.host_presort)
     emb_params = cfg.spec.total_rows * cfg.emb_dim
     dense_params = sum(a * b for a, b in zip(cfg.bottom_sizes[:-1],
                                              cfg.bottom_sizes[1:]))
@@ -43,13 +75,26 @@ def main():
     print(f"~{(emb_params + dense_params)/1e6:.1f}M params "
           f"({emb_params/1e6:.1f}M embedding) on mesh {dict(mesh.shape)}")
 
-    state, _ = D.init_state(jax.random.PRNGKey(0), cfg, mesh)
-    step, shardings, _, _ = D.make_train_step(cfg, mesh)
-    stream = ({k: jnp.asarray(v) for k, v in b.items()}
-              for b in dlrm_stream(0, cfg, alpha=0.8))
-    loop = TrainLoop(TrainLoopConfig(steps=args.steps, log_every=25),
-                     step, state, stream)
-    loop.run()
+    state, layout = D.init_state(jax.random.PRNGKey(0), cfg, mesh)
+    step, shardings, bspecs, _ = D.make_train_step(cfg, mesh)
+    if args.data_dir:
+        from repro.dist import sharding
+        stream = packed_stream(cfg, args.data_dir, args.steps,
+                               args.host_presort, layout)
+        loop = TrainLoop(TrainLoopConfig(steps=args.steps, log_every=25,
+                                         prefetch=2),
+                         step, state, stream,
+                         batch_shardings=sharding.named(mesh, bspecs))
+    else:
+        stream = ({k: jnp.asarray(v) for k, v in b.items()}
+                  for b in dlrm_stream(0, cfg, alpha=0.8))
+        loop = TrainLoop(TrainLoopConfig(steps=args.steps, log_every=25),
+                         step, state, stream)
+    try:
+        loop.run()
+    finally:
+        if hasattr(stream, "close"):
+            stream.close()        # release the HostPipeline worker
     first = np.mean(loop.losses[:10])
     last = np.mean(loop.losses[-10:])
     print(f"mean loss first-10 {first:.4f} -> last-10 {last:.4f}")

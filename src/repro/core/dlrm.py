@@ -67,6 +67,11 @@ class DLRMConfig:
     microbatches: int = 1
     # index-exchange lowering: 'fused' one all_gather, 'ring' ppermute chunks
     exchange_impl: str = "fused"
+    # weighted bags: batch carries 'weights' [B, S, P] in the idx layout
+    weighted: bool = False
+    # host-pre-sorted sparse update (repro/data/pipeline.py): the loader
+    # ships psort_* fields, the step drops the on-device sort (row mode)
+    host_presort: bool = False
 
     @property
     def spec(self) -> EmbeddingSpec:
@@ -200,27 +205,15 @@ def init_state(key: jax.Array, cfg: DLRMConfig, mesh) -> dict:
     return jax.device_put(state, shardings), layout
 
 
-def batch_struct(cfg: DLRMConfig, mesh, layout) -> tuple[dict, dict]:
-    """(ShapeDtypeStructs, PartitionSpecs) for one global batch."""
-    all_axes, model, batch_axes = mesh_axes(mesh)
-    B, S, Pq = cfg.batch, cfg.spec.num_tables, cfg.pooling
-    if cfg.emb_mode == "row" or cfg.idx_input == "sharded":
-        # sharded table mode feeds ORIGINAL-slot indices; the exchange
-        # stage permutes to padded order on chip (no host-side permute).
-        idx = jax.ShapeDtypeStruct((B, S, Pq), jnp.int32)
-        idx_spec = (P(None, None, None) if cfg.idx_input == "replicated"
-                    else P(all_axes, None, None))
-    else:
-        idx = jax.ShapeDtypeStruct((B, layout.num_padded_slots, Pq),
-                                   jnp.int32)
-        idx_spec = P(batch_axes if batch_axes else None, model, None)
-    structs = {"idx": idx,
-               "dense_x": jax.ShapeDtypeStruct((B, cfg.num_dense),
-                                               jnp.bfloat16),
-               "labels": jax.ShapeDtypeStruct((B,), jnp.float32)}
-    specs = {"idx": idx_spec, "dense_x": P(all_axes, None),
-             "labels": P(all_axes)}
-    return structs, specs
+def batch_struct(cfg: DLRMConfig, mesh, layout, *,
+                 include_presort: bool | None = None) -> tuple[dict, dict]:
+    """(ShapeDtypeStructs, PartitionSpecs) for one global batch.  Kept as
+    the DLRM-named entry for the bench/dry-run paths; delegates to the
+    generic hybrid builder so the weighted / host-pre-sorted fields stay
+    single-sourced."""
+    from repro.core import hybrid as H
+    return H.batch_struct(as_hybrid_def(cfg), mesh, layout,
+                          include_presort=include_presort)
 
 
 def dlrm_dense_loss(cfg: DLRMConfig):
@@ -256,7 +249,8 @@ def as_hybrid_def(cfg: DLRMConfig):
         fused_update=cfg.fused_update, compress_grads=cfg.compress_grads,
         num_buckets=cfg.num_buckets, lr=cfg.lr, emb_lr=cfg.lr,
         idx_input=cfg.idx_input, microbatches=cfg.microbatches,
-        exchange_impl=cfg.exchange_impl)
+        exchange_impl=cfg.exchange_impl, weighted=cfg.weighted,
+        host_presort=cfg.host_presort)
 
 
 def make_train_step(cfg: DLRMConfig, mesh, microbatches: int | None = None):
@@ -278,14 +272,19 @@ def make_eval_step(cfg: DLRMConfig, mesh):
     Reuses the pipeline's index_exchange + embedding_fwd stages."""
     from repro.core import pipeline
     structs, specs, shardings, layout = state_struct(cfg, mesh)
-    bstructs, bspecs = batch_struct(cfg, mesh, layout)
+    bstructs, bspecs = batch_struct(cfg, mesh, layout,
+                                    include_presort=False)
     all_axes, model, batch_axes = mesh_axes(mesh)
     stages = pipeline.build_stages(as_hybrid_def(cfg), mesh, layout)
 
     def eval_local(state, batch):
         W_fwd = state["emb"]["hi"] if cfg.split_sgd else state["emb"]["w"]
         idx_fwd, _ = stages.index_exchange(batch["idx"], fwd_only=True)
-        emb_out = stages.embedding_fwd(W_fwd, idx_fwd)
+        wgt_fwd = None
+        if cfg.weighted:
+            wgt_fwd, _ = stages.index_exchange(batch["weights"],
+                                               fwd_only=True)
+        emb_out = stages.embedding_fwd(W_fwd, idx_fwd, wgt_fwd)
         logits = forward_local(state["dense"]["hi"], emb_out,
                                batch["dense_x"], cfg.mlp_impl)
         return jax.nn.sigmoid(logits)

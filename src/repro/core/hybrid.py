@@ -78,6 +78,16 @@ class HybridDef:
     # 'fused': one all_gather per exchange; 'ring': ppermute-chunked (finer
     # units for the latency-hiding scheduler; bit-identical result).
     exchange_impl: str = "fused"
+    # weighted bags: the batch carries a 'weights' field in the exact
+    # layout of 'idx' ([B, S, P] per-lookup bag weights); the forward
+    # computes sum(w * row) and the sparse update scales dY per lookup.
+    # All-ones weights are bit-identical to unweighted.
+    weighted: bool = False
+    # host-pre-sorted sparse update (repro/data/pipeline.py): the loader
+    # ships per-shard sorted lookup streams as psort_* batch fields and
+    # the fused kernel consumes them directly — no on-device sort in the
+    # step.  Row mode only; always the fused kernel on the update path.
+    host_presort: bool = False
 
 
 # stage-shaped mesh helpers live in pipeline.py; re-exported for callers
@@ -135,7 +145,16 @@ def state_struct(mdef: HybridDef, mesh):
     return structs, specs, shardings, layout
 
 
-def batch_struct(mdef: HybridDef, mesh, layout, batch: int | None = None):
+def batch_struct(mdef: HybridDef, mesh, layout, batch: int | None = None,
+                 *, include_presort: bool | None = None):
+    """(ShapeDtypeStructs, PartitionSpecs) for one global batch.
+
+    ``weighted`` models add a ``weights`` field in the exact shape/spec of
+    ``idx``.  ``host_presort`` models add the four ``psort_*`` fields of
+    ``repro.data.pipeline.presort_batch`` — ``[ns_emb, B*S*P]`` sharded
+    over the embedding axes, so each shard receives its own pre-sorted
+    update stream.  ``include_presort`` overrides the mdef default (the
+    forward-only serve/eval steps never consume the update stream)."""
     all_axes, model, batch_axes = _mesh_axes(mesh)
     B = batch or mdef.batch
     S, Pq = layout.num_orig_slots, mdef.pooling
@@ -158,10 +177,41 @@ def batch_struct(mdef: HybridDef, mesh, layout, batch: int | None = None):
         idx_spec = P(batch_axes if batch_axes else None, model, None)
     structs = {"idx": idx}
     specs = {"idx": idx_spec}
+    if mdef.weighted:
+        structs["weights"] = jax.ShapeDtypeStruct(idx.shape, jnp.float32)
+        specs["weights"] = idx_spec
+    include_presort = (mdef.host_presort if include_presort is None
+                       else include_presort)
+    if include_presort:
+        emb_ax, _ = _emb_axes(mdef, mesh)
+        axes = emb_ax if isinstance(emb_ax, tuple) else (emb_ax,)
+        ns_emb = int(np.prod([mesh.shape[a] for a in axes]))
+        L = B * S * Pq
+        for name, dt in (("psort_rows", jnp.int32),
+                         ("psort_bags", jnp.int32),
+                         ("psort_msk", jnp.int32),
+                         ("psort_wgt", jnp.float32)):
+            structs[name] = jax.ShapeDtypeStruct((ns_emb, L), dt)
+            specs[name] = P(emb_ax, None)
     for name, (shape, dtype) in mdef.extras.items():
         structs[name] = jax.ShapeDtypeStruct((B, *shape), dtype)
         specs[name] = P(all_axes, *([None] * len(shape)))
     return structs, specs
+
+
+def batch_struct_from_spec(mdef: HybridDef, mesh, layout, dataset_spec,
+                           batch: int | None = None):
+    """Batch struct derived from (and validated against) a packed-dataset
+    :class:`repro.data.format.DatasetSpec` — the loader-facing entry: a
+    spec/model mismatch fails here, at wiring time, with a field-by-field
+    message instead of a shape error inside shard_map."""
+    dataset_spec.check_model(mdef)
+    if dataset_spec.weighted and not mdef.weighted:
+        # legal (weights are simply not read) but worth rejecting loudly:
+        # the reader WILL yield a weights field the struct won't declare.
+        raise ValueError("dataset is weighted but mdef.weighted=False; "
+                         "set weighted=True (or strip the weights field)")
+    return batch_struct(mdef, mesh, layout, batch)
 
 
 def init_state(key, mdef: HybridDef, mesh):
@@ -199,14 +249,19 @@ def make_score_step(mdef: HybridDef, mesh, batch: int | None = None):
     pipeline's index_exchange + embedding_fwd stages — the serve path sees
     every placement/exchange improvement the train path gets."""
     structs, specs, shardings, layout = state_struct(mdef, mesh)
-    bstructs, bspecs = batch_struct(mdef, mesh, layout, batch)
+    bstructs, bspecs = batch_struct(mdef, mesh, layout, batch,
+                                    include_presort=False)
     all_axes, model, batch_axes = _mesh_axes(mesh)
     stages = pipeline.build_stages(mdef, mesh, layout)
 
     def score_local(state, batch_d):
         W_fwd = state["emb"]["hi"] if mdef.split_sgd else state["emb"]["w"]
         idx_fwd, _ = stages.index_exchange(batch_d["idx"], fwd_only=True)
-        emb_out = stages.embedding_fwd(W_fwd, idx_fwd)
+        wgt_fwd = None
+        if mdef.weighted:
+            wgt_fwd, _ = stages.index_exchange(batch_d["weights"],
+                                               fwd_only=True)
+        emb_out = stages.embedding_fwd(W_fwd, idx_fwd, wgt_fwd)
         return mdef.dense_score(state["dense"]["hi"], emb_out, batch_d)
 
     sc = compat.shard_map(score_local, mesh=mesh, in_specs=(specs, bspecs),
@@ -224,8 +279,14 @@ def make_retrieval_step(mdef: HybridDef, mesh, n_candidates: int,
     substituted with each local candidate, the dense scorer runs batched
     over the local chunk, and a distributed top-k merge produces the global
     result.  Never a loop over candidates."""
+    if mdef.weighted:
+        raise ValueError("retrieval scores a single replicated query "
+                         "against a prebuilt candidate matrix; weighted "
+                         "bags are not supported on this path — replace "
+                         "the mdef with weighted=False for retrieval")
     structs, specs, shardings, layout = state_struct(mdef, mesh)
-    bstructs, bspecs = batch_struct(mdef, mesh, layout, batch=1)
+    bstructs, bspecs = batch_struct(mdef, mesh, layout, batch=1,
+                                    include_presort=False)
     bspecs = jax.tree.map(lambda s: P(*([None] * len(s))), bspecs,
                           is_leaf=lambda x: isinstance(x, P))  # B=1: replicate
     all_axes, model, batch_axes = _mesh_axes(mesh)

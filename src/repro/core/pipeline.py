@@ -60,6 +60,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import sharded_embedding as se
+from repro.data.pipeline import PSORT_KEYS
 from repro.optim import data_parallel as dp
 
 
@@ -134,6 +135,11 @@ def validate_pipeline(mdef, mesh, microbatches: int) -> None:
         raise ValueError(
             f"global batch {mdef.batch} must be divisible by microbatches "
             f"* mesh size = {microbatches} * {ns}")
+    if getattr(mdef, "host_presort", False) and mdef.emb_mode != "row":
+        raise ValueError(
+            "host_presort=True requires emb_mode='row' (the host pre-sort "
+            "of repro.data.pipeline targets the row-partitioned update "
+            f"stream); got emb_mode={mdef.emb_mode!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -230,8 +236,8 @@ def build_stages(mdef, mesh, layout) -> PipelineStages:
                    if replica_ax is not None else idx_mb)
         return idx_mb, idx_upd
 
-    def embedding_fwd(W_fwd, idx_fwd):
-        return se.sharded_bag_fwd(layout, W_fwd, idx_fwd, emb_ax)
+    def embedding_fwd(W_fwd, idx_fwd, wgt_fwd=None):
+        return se.sharded_bag_fwd(layout, W_fwd, idx_fwd, emb_ax, wgt_fwd)
 
     def dense_fwd_bwd(dense_hi, emb_out, batch_mb):
         def loss_fn(hi, e):
@@ -243,19 +249,32 @@ def build_stages(mdef, mesh, layout) -> PipelineStages:
     def dY_exchange(d_emb):
         return se.gather_dY(layout, d_emb, emb_ax, replica_ax)
 
-    def sparse_update(emb_store, idx_upd, dY):
+    def sparse_update(emb_store, idx_upd, dY, weights=None, presort=None):
+        if presort is not None:
+            # host-pre-sorted stream (repro/data/pipeline.py): the kernel
+            # consumes the shipped (rows, bags, msk, wgt) directly — no
+            # on-device sort, and bag weights are already baked into wgt.
+            if mdef.split_sgd:
+                hi2, lo2 = se.apply_update_presorted(
+                    layout, (emb_store["hi"], emb_store["lo"]), presort,
+                    dY, mdef.emb_lr, split=True)
+                return {"hi": hi2, "lo": lo2}
+            w2 = se.apply_update_presorted(layout, emb_store["w"], presort,
+                                           dY, mdef.emb_lr, split=False)
+            return {"w": w2}
         if mdef.split_sgd:
             hi2, lo2 = se.apply_update_scan(
                 layout, (emb_store["hi"], emb_store["lo"]), idx_upd, dY,
                 mdef.emb_lr, emb_ax, split=True, replica_axes=None,
-                fused=fused)
+                fused=fused, weights=weights)
             return {"hi": hi2, "lo": lo2}
         # NB: the fused fp32 kernel pre-reduces duplicates (one rounding
         # per row) where the reference scatter-adds per lookup, so the
         # two non-split paths are close but not bit-identical.
         w2 = se.apply_update_scan(layout, emb_store["w"], idx_upd, dY,
                                   mdef.emb_lr, emb_ax, split=False,
-                                  replica_axes=None, fused=fused)
+                                  replica_axes=None, fused=fused,
+                                  weights=weights)
         return {"w": w2}
 
     def dense_update(dense_state, g_dense):
@@ -348,33 +367,55 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
     repl_width = ns if mdef.emb_mode == "row" else nm
     perm = (jnp.asarray(_interleave_perm(mdef.batch, M, ns))
             if M > 1 else None)
+    weighted = getattr(mdef, "weighted", False)
+    presorted = getattr(mdef, "host_presort", False)
 
     def step_local(state, batch):
         emb_store = state["emb"]
         W_fwd = emb_store["hi"] if mdef.split_sgd else emb_store["w"]
         dense_hi = state["dense"]["hi"]
+        # host-pre-sorted update stream: each shard's [1, L] block of the
+        # psort_* batch fields (leading dim = combined mesh index, the
+        # same device-major order the restored idx stream carries).  The
+        # fields describe the FULL batch, so they bypass microbatching
+        # and feed the single epilogue sparse_update.
+        presort = (tuple(batch[k][0] for k in PSORT_KEYS)
+                   if presorted else None)
 
         def microbatch(i):
-            mb = {k: (_slice_idx(v, i, M, mdef, repl_width) if k == "idx"
-                      else _slice_local(v, i, M))
-                  for k, v in batch.items()} if M > 1 else batch
-            return mb
+            items = ((k, v) for k, v in batch.items()
+                     if k not in PSORT_KEYS)
+            if M == 1:
+                return dict(items)
+            # weights ride the exact layout of idx -> same slicing rule
+            return {k: (_slice_idx(v, i, M, mdef, repl_width)
+                        if k in ("idx", "weights")
+                        else _slice_local(v, i, M))
+                    for k, v in items}
 
         # -- prologue: microbatch 0's index exchange ----------------------
         ex = [None] * M
+        exw = [None] * M
         ex[0] = stages.index_exchange(microbatch(0)["idx"])
+        if weighted:
+            # the weight stream undergoes the IDENTICAL layout switch
+            exw[0] = stages.index_exchange(microbatch(0)["weights"])
 
         loss_acc = None
         g_acc = None
-        idx_parts, dY_parts = [], []
+        idx_parts, dY_parts, wgt_parts = [], [], []
         for i in range(M):
             if i + 1 < M:
                 # double buffer: issue microbatch i+1's exchange BEFORE
                 # microbatch i's compute — no data dependence between the
                 # two, so the scheduler can overlap collective and compute.
                 ex[i + 1] = stages.index_exchange(microbatch(i + 1)["idx"])
+                if weighted:
+                    exw[i + 1] = stages.index_exchange(
+                        microbatch(i + 1)["weights"])
             idx_fwd, idx_upd = ex[i]
-            emb_out = stages.embedding_fwd(W_fwd, idx_fwd)
+            wgt_fwd, wgt_upd = exw[i] if weighted else (None, None)
+            emb_out = stages.embedding_fwd(W_fwd, idx_fwd, wgt_fwd)
             loss, g_dense, d_emb = stages.dense_fwd_bwd(
                 dense_hi, emb_out, microbatch(i))
             dY = stages.dY_exchange(d_emb)
@@ -383,16 +424,19 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
                      else jax.tree.map(jnp.add, g_acc, g_dense))
             idx_parts.append(idx_upd)
             dY_parts.append(dY)
+            if weighted:
+                wgt_parts.append(wgt_upd)
 
         # -- epilogue: one sparse update on the order-restored stream -----
-        if M == 1:
-            idx_full, dY_full = idx_parts[0], dY_parts[0]
-        else:
-            idx_full = jnp.take(jnp.concatenate(idx_parts, axis=0), perm,
-                                axis=0)
-            dY_full = jnp.take(jnp.concatenate(dY_parts, axis=0), perm,
-                               axis=0)
-        new_emb = stages.sparse_update(emb_store, idx_full, dY_full)
+        def restore(parts):
+            if M == 1:
+                return parts[0]
+            return jnp.take(jnp.concatenate(parts, axis=0), perm, axis=0)
+
+        idx_full, dY_full = restore(idx_parts), restore(dY_parts)
+        wgt_full = restore(wgt_parts) if weighted else None
+        new_emb = stages.sparse_update(emb_store, idx_full, dY_full,
+                                       weights=wgt_full, presort=presort)
         new_dense = stages.dense_update(state["dense"], g_acc)
         return ({"emb": new_emb, "dense": new_dense},
                 jax.lax.psum(loss_acc, all_axes))

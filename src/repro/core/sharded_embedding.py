@@ -149,9 +149,15 @@ def permute_indices(layout: ShardedEmbeddingLayout, idx: jax.Array
 # ---------------------------------------------------------------------------
 
 def _partial_bag_masked(W_local: jax.Array, local_rows: jax.Array,
-                        valid: jax.Array) -> jax.Array:
+                        valid: jax.Array,
+                        weights: Optional[jax.Array] = None) -> jax.Array:
     rows = jnp.take(W_local, jnp.clip(local_rows, 0, W_local.shape[0] - 1),
                     axis=0).astype(jnp.float32)
+    if weights is not None:
+        # weighted bag: Y = sum_p w_p * W[g_p].  w == 1.0 multiplies
+        # exactly, so an all-ones weight stream keeps the unweighted
+        # bit-identity contract.
+        rows = rows * weights[..., None].astype(jnp.float32)
     rows = jnp.where(valid[..., None], rows, 0.0)
     return rows.sum(axis=2)  # [B, S, E] fp32
 
@@ -177,11 +183,13 @@ def _batch_chunks(B: int, S: int, P: int, E: int,
 
 
 def row_sharded_bag_fwd(layout: ShardedEmbeddingLayout, W_local: jax.Array,
-                        idx: jax.Array, axis_name) -> jax.Array:
+                        idx: jax.Array, axis_name,
+                        weights: Optional[jax.Array] = None) -> jax.Array:
     """Row mode forward.  ``axis_name`` may be a TUPLE of mesh axes — the
     production config shards the row space over the FULL mesh (the paper's
     pure model-parallel embedding, scaled past the table count).  ``idx``
-    [B, S, P] is replicated over ``axis_name``; output is
+    [B, S, P] is replicated over ``axis_name``; ``weights`` [B, S, P]
+    optional per-lookup bag weights (same layout as ``idx``); output is
     [B/num_shards, S, E] (reduce-scatter over the batch dim).
 
     The gather+bag is scanned over batch chunks so the [chunk,S,P,E]
@@ -194,13 +202,17 @@ def row_sharded_bag_fwd(layout: ShardedEmbeddingLayout, W_local: jax.Array,
     n = _batch_chunks(B, S, P, E)
     if n == 1:
         valid = (local >= 0) & (local < layout.rows_per_shard)
-        part = _partial_bag_masked(W_local, local, valid)
+        part = _partial_bag_masked(W_local, local, valid, weights)
     else:
-        def body(_, loc_c):
+        def body(_, inp):
+            loc_c = inp[0]
+            w_c = inp[1] if weights is not None else None
             valid = (loc_c >= 0) & (loc_c < layout.rows_per_shard)
-            return None, _partial_bag_masked(W_local, loc_c, valid)
-        _, part = jax.lax.scan(body, None,
-                               local.reshape(n, B // n, S, P))
+            return None, _partial_bag_masked(W_local, loc_c, valid, w_c)
+        xs = (local.reshape(n, B // n, S, P),)
+        if weights is not None:
+            xs += (weights.reshape(n, B // n, S, P),)
+        _, part = jax.lax.scan(body, None, xs)
         part = part.reshape(B, S, E)
     # bf16 wire (HC3): the reduce-scatter is the dominant collective of the
     # hybrid step and the bag output feeds a bf16 dense net anyway.
@@ -210,10 +222,12 @@ def row_sharded_bag_fwd(layout: ShardedEmbeddingLayout, W_local: jax.Array,
 
 
 def table_sharded_bag_fwd(layout: ShardedEmbeddingLayout, W_local: jax.Array,
-                          idx_slots_local: jax.Array, axis_name
+                          idx_slots_local: jax.Array, axis_name,
+                          weights: Optional[jax.Array] = None
                           ) -> jax.Array:
     """Table mode forward.  ``idx_slots_local`` [B, slots_per_shard, P] is
-    the padded-slot index array already sharded over the model axis.  Output
+    the padded-slot index array already sharded over the model axis;
+    ``weights`` optional per-lookup bag weights in the same layout.  Output
     is [B/num_shards, S_orig, E] in ORIGINAL slot order."""
     K = layout.slots_per_shard
     shard = jax.lax.axis_index(axis_name)
@@ -225,16 +239,22 @@ def table_sharded_bag_fwd(layout: ShardedEmbeddingLayout, W_local: jax.Array,
     E = W_local.shape[1]
     n = _batch_chunks(B, K, P, E)
 
-    def bag(loc):
+    def bag(loc, w=None):
         rows = jnp.take(W_local, jnp.clip(loc, 0, W_local.shape[0] - 1),
                         axis=0).astype(jnp.float32)
+        if w is not None:
+            rows = rows * w[..., None].astype(jnp.float32)
         return rows.sum(axis=2)
 
     if n == 1:
-        part = bag(local)                        # [B, K, E] full local batch
+        part = bag(local, weights)               # [B, K, E] full local batch
     else:
-        _, part = jax.lax.scan(lambda c, l: (None, bag(l)), None,
-                               local.reshape(n, B // n, K, P))
+        xs = (local.reshape(n, B // n, K, P),)
+        if weights is not None:
+            xs += (weights.reshape(n, B // n, K, P),)
+        _, part = jax.lax.scan(
+            lambda c, inp: (None, bag(inp[0], inp[1] if weights is not None
+                                      else None)), None, xs)
         part = part.reshape(B, K, E)
     out = jax.lax.all_to_all(part, axis_name, split_axis=0, concat_axis=1,
                              tiled=True)         # [B/ns, num_padded, E]
@@ -243,10 +263,13 @@ def table_sharded_bag_fwd(layout: ShardedEmbeddingLayout, W_local: jax.Array,
 
 
 def sharded_bag_fwd(layout: ShardedEmbeddingLayout, W_local: jax.Array,
-                    idx_local: jax.Array, axis_name) -> jax.Array:
+                    idx_local: jax.Array, axis_name,
+                    weights: Optional[jax.Array] = None) -> jax.Array:
     if layout.mode == "row":
-        return row_sharded_bag_fwd(layout, W_local, idx_local, axis_name)
-    return table_sharded_bag_fwd(layout, W_local, idx_local, axis_name)
+        return row_sharded_bag_fwd(layout, W_local, idx_local, axis_name,
+                                   weights)
+    return table_sharded_bag_fwd(layout, W_local, idx_local, axis_name,
+                                 weights)
 
 
 def row_bag_fwd_replicated(layout: ShardedEmbeddingLayout, W_local, idx,
@@ -313,15 +336,18 @@ def apply_rows_sgd(W_local: jax.Array, tgt: jax.Array, grad: jax.Array,
 
 def apply_update_scan(layout: ShardedEmbeddingLayout, W_local, idx_local,
                       dY: jax.Array, lr, axis_name, split: bool = False,
-                      replica_axes=None, fused: bool = False):
+                      replica_axes=None, fused: bool = False,
+                      weights: Optional[jax.Array] = None):
     """Fused sparse bwd+SGD, scanned over batch chunks (bounded transients;
     paper configs reach P=100 where the naive [B,S,P,E] expansion is tens
     of GB).
 
     ``W_local``: [rows, E] array, or a (hi, lo) pair when ``split``.
     ``idx_local``: [B, S_or_K, P]; ``dY``: matching [B, S_or_K, E] (already
-    passed through :func:`gather_dY`).  In table mode with replica axes the
-    index array is gathered the same way as dY.
+    passed through :func:`gather_dY`).  ``weights``: optional [B, S_or_K,
+    P] per-lookup bag weights in the same layout as ``idx_local`` (the
+    weighted-bag cotangent is ``w * dY``).  In table mode with replica
+    axes the index (and weight) arrays are gathered the same way as dY.
 
     ``fused=True`` routes each chunk through the Pallas fused kernel
     (:mod:`repro.kernels.embedding_update`): the [cb,S,P,E] gradient
@@ -331,26 +357,34 @@ def apply_update_scan(layout: ShardedEmbeddingLayout, W_local, idx_local,
     if layout.mode == "table" and replica_axes is not None:
         idx_local = jax.lax.all_gather(idx_local, replica_axes, axis=0,
                                        tiled=True)
+        if weights is not None:
+            weights = jax.lax.all_gather(weights, replica_axes, axis=0,
+                                         tiled=True)
     local, valid = _local_rows(layout, idx_local, axis_name)
     B, S, P = local.shape
     E = dY.shape[-1]
     n = _batch_chunks(B, S, P, E)
     cb = B // n
 
-    def chunk_update(W, loc_c, val_c, dY_c):
+    def chunk_update(W, loc_c, val_c, dY_c, wgt_c=None):
         if fused:
             from repro.kernels import ops
             tgt = loc_c.reshape(-1)
             val = val_c.reshape(-1)
             dYr = dY_c.reshape(cb * S, E)
+            w = None if wgt_c is None else wgt_c.reshape(-1)
             if split:
                 hi, lo = W
                 return ops.fused_embedding_update(hi, lo, tgt, dYr, lr,
-                                                  valid=val, pooling=P)
+                                                  valid=val, weights=w,
+                                                  pooling=P)
             return ops.fused_embedding_update_fp32(W, tgt, dYr, lr,
-                                                   valid=val, pooling=P)
+                                                   valid=val, weights=w,
+                                                   pooling=P)
         grad = jnp.broadcast_to(dY_c[:, :, None, :],
                                 (cb, S, P, E)).astype(jnp.float32)
+        if wgt_c is not None:
+            grad = grad * wgt_c[..., None].astype(jnp.float32)
         grad = jnp.where(val_c[..., None], grad, 0.0).reshape(-1, E)
         tgt = jnp.where(val_c, loc_c, 0).reshape(-1)
         if split:
@@ -359,15 +393,44 @@ def apply_update_scan(layout: ShardedEmbeddingLayout, W_local, idx_local,
         return apply_rows_sgd(W, tgt, grad, lr)
 
     if n == 1:
-        return chunk_update(W_local, local, valid, dY)
+        return chunk_update(W_local, local, valid, dY, weights)
 
     def body(W, inp):
         return chunk_update(W, *inp), None
 
     xs = (local.reshape(n, cb, S, P), valid.reshape(n, cb, S, P),
           dY.reshape(n, cb, S, E))
+    if weights is not None:
+        xs += (weights.reshape(n, cb, S, P),)
     W_out, _ = jax.lax.scan(body, W_local, xs)
     return W_out
+
+
+def apply_update_presorted(layout: ShardedEmbeddingLayout, W_local,
+                           presort: tuple, dY: jax.Array, lr,
+                           split: bool = False):
+    """Sparse bwd+SGD on a HOST-PRE-SORTED lookup stream — the fast path
+    fed by ``repro.data.pipeline.presort_batch`` (row mode).
+
+    ``presort``: this shard's ``(sorted_rows, sorted_bags, sorted_msk,
+    sorted_wgt)`` [L] arrays (bag weights, if any, are already baked into
+    ``sorted_wgt``).  ``dY``: [B, S, E] full-batch cotangent from
+    :func:`gather_dY`.  Always the fused Pallas kernel — nothing to sort
+    and only scalars were shipped, so no batch chunking is needed (the
+    kernel never builds a [B,S,P,E] expansion).  Bit-identical to the
+    sorting path whenever that path runs unchunked (``_batch_chunks`` ==
+    1); a chunked reference applies per-chunk partial updates whose
+    per-row rounding differs from the single pre-reduction here."""
+    srows, sbags, smsk, swgt = presort
+    from repro.kernels import ops
+    E = dY.shape[-1]
+    dYr = dY.reshape(-1, E)
+    if split:
+        hi, lo = W_local
+        return ops.fused_embedding_update_presorted(hi, lo, srows, sbags,
+                                                    smsk, swgt, dYr, lr)
+    return ops.fused_embedding_update_fp32_presorted(W_local, srows, sbags,
+                                                     smsk, swgt, dYr, lr)
 
 
 def row_grad_rows(layout: ShardedEmbeddingLayout, idx: jax.Array,

@@ -1,1 +1,4 @@
-from repro.data import graph, synthetic  # noqa: F401
+from repro.data import format, graph, pipeline, reader, synthetic  # noqa: F401
+from repro.data.format import DatasetSpec, ShardWriter  # noqa: F401
+from repro.data.pipeline import HostPipeline, presort_batch  # noqa: F401
+from repro.data.reader import ShardedReader  # noqa: F401

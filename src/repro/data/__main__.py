@@ -1,0 +1,6 @@
+"""CLI entry: ``python -m repro.data synthetic|criteo ...`` (see
+repro/data/format.py for the subcommands)."""
+
+from repro.data.format import main
+
+main()

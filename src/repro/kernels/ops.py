@@ -108,6 +108,43 @@ def fused_embedding_update(hi, lo, tgt, dY, lr, valid=None, weights=None, *,
     return nh[:, :E], nl[:, :E]
 
 
+@partial(jax.jit, static_argnames=("interpret",))
+def fused_embedding_update_presorted(hi, lo, srows, sbags, smsk, swgt, dY,
+                                     lr, interpret: bool | None = None):
+    """:func:`fused_embedding_update` with the sort done ON THE HOST: the
+    caller supplies the ``(sorted_rows, sorted_bags, sorted_msk,
+    sorted_wgt)`` arrays of ``sort_lookups`` (produced per shard by
+    ``repro.data.pipeline.presort_batch`` while the previous step runs on
+    device) and the per-step XLA argsort disappears from the hot path.
+    Bit-identical to the sorting entry point — a stable sort's
+    permutation is unique, so host and device sorts agree exactly."""
+    interpret = _default_interpret() if interpret is None else interpret
+    if interpret:
+        return fused_update_split_pallas(hi, lo, srows, sbags, smsk, swgt,
+                                         dY, lr, interpret=True)
+    hip, E = _pad_dim(hi, 1, 128)
+    lop, _ = _pad_dim(lo, 1, 128)
+    dYp, _ = _pad_dim(dY, 1, 128)
+    nh, nl = fused_update_split_pallas(hip, lop, srows, sbags, smsk, swgt,
+                                       dYp, lr, interpret=interpret)
+    return nh[:, :E], nl[:, :E]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fused_embedding_update_fp32_presorted(W, srows, sbags, smsk, swgt, dY,
+                                          lr, interpret: bool | None = None):
+    """Non-split variant of :func:`fused_embedding_update_presorted`."""
+    interpret = _default_interpret() if interpret is None else interpret
+    if interpret:
+        return fused_update_fp32_pallas(W, srows, sbags, smsk, swgt, dY, lr,
+                                        interpret=True)
+    Wp, E = _pad_dim(W, 1, 128)
+    dYp, _ = _pad_dim(dY, 1, 128)
+    out = fused_update_fp32_pallas(Wp, srows, sbags, smsk, swgt, dYp, lr,
+                                   interpret=interpret)
+    return out[:, :E]
+
+
 @partial(jax.jit, static_argnames=("pooling", "interpret"))
 def fused_embedding_update_fp32(W, tgt, dY, lr, valid=None, weights=None, *,
                                 pooling: int = 1,

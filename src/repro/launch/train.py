@@ -10,6 +10,17 @@ device set (the full configs are exercised via the dry-run).  Examples:
 
 With XLA_FLAGS=--xla_force_host_platform_device_count=8 the hybrid-parallel
 paths run on a real (2, 4) mesh; single-device otherwise.
+
+Recsys archs can stream a PACKED dataset (docs/data.md) instead of the
+in-process synthetic generator:
+
+    python -m repro.data.format synthetic --out /data/ds \
+        --tables 5000,...x8 --pooling 10 --num-dense 64 --num-samples 65536
+    python -m repro.launch.train --arch dlrm-small --data-dir /data/ds \
+        --data-format packed --host-presort
+
+``--host-presort`` moves the sparse-update index sort off the device and
+into the loader's worker thread (row mode; see repro/data/pipeline.py).
 """
 
 from __future__ import annotations
@@ -38,6 +49,39 @@ def local_mesh():
     if n > 1:
         return make_mesh((1, n), ("data", "model"))
     return make_mesh((1, 1), ("data", "model"))
+
+
+def packed_stream(args, expect, layout, host_presort: bool):
+    """Build the packed-shard loader chain for a recsys arch: ShardedReader
+    (mmap + two-level shuffle) -> HostPipeline (threaded decode + optional
+    per-batch pre-sort).  ``expect`` carries the model-side schema the
+    DatasetSpec must match (fail at wiring time, not inside shard_map)."""
+    from repro.data.pipeline import HostPipeline
+    from repro.data.reader import ShardedReader
+    unsupported = sorted(set(expect.get("extras", ()))
+                         - {"dense_x", "labels"})
+    if unsupported:
+        raise SystemExit(
+            f"--data-format packed cannot feed this arch: batch extras "
+            f"{unsupported} are not representable in the shard format "
+            "(dense_x/labels/sparse+weights only) — use the synthetic "
+            "stream for it")
+    reader = ShardedReader(args.data_dir, batch=expect["batch"],
+                           seed=args.seed, shuffle=True)
+    reader.spec.check(expect["table_rows"], expect["pooling"],
+                      num_dense=expect.get("num_dense", 0),
+                      labels=expect.get("labels", True),
+                      slot_to_table=expect.get("slot_to_table"),
+                      weighted=expect.get("weighted", False))
+    if reader.spec.weighted and not expect.get("weighted", False):
+        raise SystemExit("dataset carries per-lookup weights but the model "
+                         "is unweighted — pass --weighted (or repack "
+                         "without weights)")
+    print(f"[train] packed dataset: {reader.num_samples} samples in "
+          f"{len(reader.shards)} shard(s), "
+          f"{reader.batches_per_epoch()} batches/epoch"
+          + (", host pre-sort ON" if host_presort else ""))
+    return HostPipeline(reader, layout=layout, presort=host_presort)
 
 
 def reduced_dlrm(name: str, batch: int):
@@ -95,24 +139,60 @@ def main():
                          "double-buffered index exchange overlap")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="host-side device_put-ahead window (0 = off)")
+    ap.add_argument("--data-dir", default=None,
+                    help="packed-shard dataset directory (docs/data.md)")
+    ap.add_argument("--data-format", choices=("synthetic", "packed"),
+                    default=None,
+                    help="batch source; defaults to 'packed' when "
+                         "--data-dir is given, else 'synthetic'")
+    ap.add_argument("--host-presort", action="store_true",
+                    help="pre-sort the sparse-update index stream on the "
+                         "loader thread (row mode; drops the on-device "
+                         "sort from the step)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="data order seed (reader epoch shuffle)")
+    ap.add_argument("--weighted", action="store_true",
+                    help="weighted bags: consume the packed dataset's "
+                         "per-lookup weight arrays (recsys archs)")
     args = ap.parse_args()
+    if args.data_format is None:
+        args.data_format = "packed" if args.data_dir else "synthetic"
+    if args.data_format == "packed" and not args.data_dir:
+        raise SystemExit("--data-format packed requires --data-dir")
+    if args.weighted and args.data_format != "packed":
+        raise SystemExit("--weighted needs a weighted packed dataset "
+                         "(the synthetic streams carry no weights); pack "
+                         "one with `python -m repro.data synthetic "
+                         "--weighted ...`")
 
     mesh = local_mesh()
     print(f"[train] devices={len(jax.devices())} mesh={dict(mesh.shape)}")
     key = jax.random.PRNGKey(0)
     batch_shardings = None
 
+    if args.host_presort and args.data_format != "packed":
+        raise SystemExit("--host-presort rides the packed loader's worker "
+                         "thread; add --data-dir/--data-format packed")
+
     if args.arch.startswith("dlrm"):
         from repro.core import dlrm as D
         from repro.data.synthetic import dlrm_stream
         cfg = dataclasses.replace(reduced_dlrm(args.arch, args.batch),
                                   lr=args.lr,
-                                  microbatches=args.microbatches)
+                                  microbatches=args.microbatches,
+                                  host_presort=args.host_presort,
+                                  weighted=args.weighted)
         state, layout = D.init_state(key, cfg, mesh)
         step, shardings, bspecs, _ = D.make_train_step(cfg, mesh)
         batch_shardings = _bspec_shardings(mesh, bspecs)
-        stream = ({k: jax.numpy.asarray(v) for k, v in b.items()}
-                  for b in dlrm_stream(0, cfg, args.alpha))
+        if args.data_format == "packed":
+            stream = packed_stream(
+                args, dict(batch=cfg.batch, table_rows=cfg.table_rows,
+                           pooling=cfg.pooling, num_dense=cfg.num_dense,
+                           weighted=cfg.weighted),
+                layout, args.host_presort)
+        else:
+            stream = dlrm_stream(0, cfg, args.alpha)
         n_params = cfg.spec.total_rows * cfg.emb_dim
         print(f"[train] {args.arch}: ~{n_params/1e6:.1f}M embedding params")
     elif args.arch in ("fm", "bst", "sasrec", "din"):
@@ -120,15 +200,33 @@ def main():
         from repro.data.synthetic import hybrid_stream
         mdef = dataclasses.replace(reduced_hybrid(args.arch, args.batch),
                                    lr=args.lr, emb_lr=args.lr,
-                                   microbatches=args.microbatches)
+                                   microbatches=args.microbatches,
+                                   host_presort=args.host_presort,
+                                   weighted=args.weighted)
         state, layout = H.init_state(key, mdef, mesh)
         step, shardings, bspecs, _ = H.make_train_step(mdef, mesh)
         batch_shardings = _bspec_shardings(mesh, bspecs)
-        stream = ({k: jax.numpy.asarray(v) for k, v in b.items()}
-                  for b in hybrid_stream(0, mdef, args.alpha))
+        if args.data_format == "packed":
+            stream = packed_stream(
+                args, dict(batch=mdef.batch,
+                           table_rows=mdef.spec.table_rows,
+                           pooling=mdef.pooling,
+                           num_dense=(mdef.extras["dense_x"][0][0]
+                                      if "dense_x" in mdef.extras else 0),
+                           labels="labels" in mdef.extras,
+                           slot_to_table=mdef.slot_to_table,
+                           extras=tuple(mdef.extras),
+                           weighted=mdef.weighted),
+                layout, args.host_presort)
+        else:
+            stream = hybrid_stream(0, mdef, args.alpha)
     else:
         from repro.models import lm_steps
         from repro.data.synthetic import token_stream
+        if args.data_format == "packed":
+            raise SystemExit("--data-dir/--data-format packed is the recsys "
+                             "ingestion path (dlrm/fm/bst/sasrec/din); LM "
+                             "archs stream tokens")
         if args.microbatches != 1:
             raise SystemExit(
                 "--microbatches applies to the recsys hybrid pipeline "
@@ -148,7 +246,11 @@ def main():
         step, state, stream,
         state_shardings=shardings if args.ckpt_dir else None,
         batch_shardings=batch_shardings)
-    loop.run()
+    try:
+        loop.run()
+    finally:
+        if hasattr(stream, "close"):
+            stream.close()        # release the HostPipeline worker
     print(f"[train] done: first loss {loop.losses[0]:.4f} "
           f"-> last {loop.losses[-1]:.4f}")
     if loop.monitor.events:

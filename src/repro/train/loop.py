@@ -15,10 +15,14 @@ local device set):
   CheckpointManager with the NEW mesh's shardings (global-array format; see
   repro/checkpoint/manager.py), embeddings re-laid-out via
   ``reshard_embedding``;
-* host-side prefetch — :func:`prefetch_to_device` keeps ``size`` batches
-  in flight (``jax.device_put`` is async), so the H2D transfer of batch
-  n+1 overlaps step n's device compute — the host-side leg of the staged
-  pipeline's comm/compute overlap (repro/core/pipeline.py).
+* host-side prefetch — :func:`prefetch_to_device` runs a worker thread
+  keeping ``size`` batches submitted to the devices (``jax.device_put``
+  is async), so the loader's host work AND the H2D transfer of batch n+1
+  overlap step n's device compute — the host-side leg of the staged
+  pipeline's comm/compute overlap (repro/core/pipeline.py; the shard
+  decode + pre-sort leg lives in repro/data/pipeline.py).  Worker
+  failures poison the queue and re-raise at the consumer — a dead loader
+  fails the loop instead of hanging it.
 """
 
 from __future__ import annotations
@@ -32,6 +36,7 @@ from typing import Any, Callable, Iterator, Optional
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import ThreadedIterator
 
 
 def prefetch_to_device(batches: Iterator[Any], size: int = 2,
@@ -40,10 +45,22 @@ def prefetch_to_device(batches: Iterator[Any], size: int = 2,
     submitted to the devices (``jax.device_put`` returns immediately with
     the transfer in flight) while the current step runs.
 
+    A :class:`repro.data.pipeline.ThreadedIterator` worker pulls from
+    ``batches`` and device_puts into a bounded queue, so the HOST-side
+    cost of ``next(batches)`` (shard decode, pre-sort) also overlaps
+    device compute, not just the H2D transfer.  The worker stays at most
+    ``size`` batches ahead of the consumer (bounded-queue backpressure);
+    order is preserved exactly.  If the source iterator raises, the
+    exception is delivered through the queue as a poison sentinel and
+    re-raised to the consumer promptly — a loader failure fails the
+    training loop, it does not hang it.  Dropping the iterator (consumer
+    stops early, e.g. a step-bounded loop over an infinite stream)
+    closes the worker and releases its queued batches instead of leaking
+    a blocked thread.
+
     ``shardings``: optional pytree of shardings matching each batch (the
     ``bspecs``-derived NamedShardings of the step factory); None keeps the
-    default placement.  Order is preserved exactly; the wrapper only pulls
-    ahead of the consumer by ``size`` batches."""
+    default placement."""
     import jax
 
     if size < 1:
@@ -53,21 +70,14 @@ def prefetch_to_device(batches: Iterator[Any], size: int = 2,
         return jax.device_put(b, shardings) if shardings is not None \
             else jax.device_put(b)
 
+    tit = ThreadedIterator(batches, transform=put, depth=size,
+                           name="prefetch_to_device")
+
     def gen():
-        buf: deque[Any] = deque()
-        it = iter(batches)
         try:
-            while len(buf) < size:
-                buf.append(put(next(it)))
-        except StopIteration:
-            pass
-        while buf:
-            nxt = buf.popleft()
-            try:
-                buf.append(put(next(it)))
-            except StopIteration:
-                pass
-            yield nxt
+            yield from tit
+        finally:
+            tit.close()       # early exit / GC: unblock + drain the worker
 
     return gen()
 

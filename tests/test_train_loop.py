@@ -59,16 +59,84 @@ class _RecordingIter:
 
 
 def test_prefetch_preserves_order_and_pulls_ahead():
+    import time
+
     src = _RecordingIter(10)
     it = prefetch_to_device(src, size=3)
     first = next(it)
-    # the wrapper filled its window (3) plus the replacement for the one
-    # yielded -> the source is ahead of the consumer
-    assert src.pulled == 4
+    # the worker thread runs ahead of the consumer, but never further than
+    # the queue window (3) + the one batch it may hold while blocked on put
+    deadline = time.monotonic() + 5.0
+    while src.pulled < 4 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert src.pulled >= 4                  # pulled ahead of the consumer
+    assert src.pulled <= 1 + 3 + 1          # bounded-queue backpressure
     got = [int(np.asarray(first["x"])[0])]
     got += [int(np.asarray(b["x"])[0]) for b in it]
     assert got == list(range(10))           # order preserved exactly
     assert src.pulled == 10
+
+
+class _FailingIter:
+    """Yields ``good`` batches, then dies like a broken loader."""
+
+    def __init__(self, good):
+        self.good = good
+        self.pulled = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self.pulled >= self.good:
+            raise RuntimeError("shard decode failed")
+        self.pulled += 1
+        return {"x": np.full((2,), self.pulled - 1, np.int32)}
+
+
+def test_prefetch_propagates_worker_exception():
+    """Satellite: a loader failure is re-raised at the consumer promptly
+    (poisoned queue sentinel) instead of hanging the training loop."""
+    it = prefetch_to_device(_FailingIter(2), size=4)
+    assert int(np.asarray(next(it)["x"])[0]) == 0
+    assert int(np.asarray(next(it)["x"])[0]) == 1
+    with pytest.raises(RuntimeError, match="shard decode failed"):
+        next(it)
+
+
+def test_prefetch_early_exit_releases_worker():
+    """Abandoning the iterator mid-stream (a step-bounded loop over an
+    infinite source) closes the worker thread instead of leaking it
+    blocked on the queue with device-resident batches."""
+    import threading
+    import time
+
+    src = _RecordingIter(10_000)            # effectively endless
+    it = prefetch_to_device(src, size=2)
+    next(it), next(it)
+    it.close()                              # generator finally -> close()
+    deadline = time.monotonic() + 5.0
+    while (any(t.name == "prefetch_to_device" and t.is_alive()
+               for t in threading.enumerate())
+           and time.monotonic() < deadline):
+        time.sleep(0.01)
+    assert not any(t.name == "prefetch_to_device" and t.is_alive()
+                   for t in threading.enumerate())
+    pulled = src.pulled
+    time.sleep(0.05)
+    assert src.pulled == pulled             # source is no longer drained
+
+
+def test_loop_surfaces_loader_failure():
+    """End-to-end: TrainLoop with prefetch fails fast on a dead loader."""
+    def step(state, batch):
+        return state + 1, float(state)
+
+    loop = TrainLoop(TrainLoopConfig(steps=10, log_every=100, prefetch=2),
+                     step, 0, _FailingIter(3))
+    with pytest.raises(RuntimeError, match="shard decode failed"):
+        loop.run()
+    assert len(loop.losses) == 3            # the good batches did run
 
 
 def test_prefetch_short_stream_and_validation():
