@@ -15,8 +15,8 @@ import numpy as np
 
 from repro.core.embedding import EmbeddingSpec, bag_lookup, bag_update, \
     globalize
-from repro.core.sharded_embedding import apply_rows_split_sgd
 from repro.data.synthetic import zipf_indices
+from repro.optim.row import apply_rows_split_sgd
 from repro.optim.split_sgd import split_fp32
 
 
@@ -69,8 +69,9 @@ def rows() -> list[tuple[str, float, str]]:
         Mm = 5_000
         Lm = (256 // P) * P          # keep L a multiple of P: bag ids of
         us = timeit(jax.jit(          # lookups [0, Lm) must index dY[:Lm//P]
-            lambda h, l, t, d: kops.fused_embedding_update(
-                h, l, t, d, 0.1, pooling=P, interpret=True)),
+            lambda h, l, t, d: kops.fused_row_update(
+                "split_sgd", {"hi": h, "lo": l}, t, d, 0.1, pooling=P,
+                interpret=True)),
             hi[:Mm], lo[:Mm], jnp.minimum(flat_g[:Lm], Mm - 1),
             dY.reshape(-1, 64)[:Lm // P], iters=1)
         out.append((f"embed_update_fused_split_{tag}", us,

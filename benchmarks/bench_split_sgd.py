@@ -1,15 +1,21 @@
 """Paper Fig. 16 + Sect. VII accounting: Split-SGD-BF16 convergence parity,
 capacity/bandwidth table, and the fused-vs-reference embedding update
-roofline (kernels/embedding_update.py).
+roofline (kernels/embedding_update.py) — now swept over every registered
+sparse RowOptimizer (repro/optim/row.py).
 
     PYTHONPATH=src python benchmarks/bench_split_sgd.py [--fused|--reference]
-        [--json BENCH_embedding_update.json]
+        [--optimizer sgd|split_sgd|momentum|adagrad_rowwise|adagrad|all]
+        [--smoke] [--json BENCH_embedding_update.json]
 
 The update section reports THEORETICAL bytes/step for both paths (the
-acceptance metric: the fused path touches O(unique_rows) data, the
-reference path O(shard_rows)) plus measured wall-clock.  The fused kernel
-runs in Pallas interpret mode on CPU — its wall-clock is an emulation
-artifact; the bytes model is the TPU-relevant number.
+acceptance metric: the fused path touches O(unique_rows) data — weights
+AND per-row optimizer state — while the reference path touches
+O(shard_rows)) plus measured wall-clock.  ``--optimizer`` adds the named
+optimizer's state-slab traffic to the roofline and times its fused
+interpret-mode kernel on a tiny shard; ``all`` sweeps the registry.
+``--smoke`` skips the 120-step convergence study (the CI sweep).  The
+fused kernel runs in Pallas interpret mode on CPU — its wall-clock is an
+emulation artifact; the bytes model is the TPU-relevant number.
 """
 
 import argparse
@@ -57,10 +63,32 @@ def _timeit(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6   # us
 
 
+def optimizer_bytes_row(name: str, U: int, E: int, NB: int, L: int) -> dict:
+    """Roofline bytes/step of one registered RowOptimizer's FUSED update:
+    touched weight rows in+out, per-row state slab in+out (the second
+    row-addressed operand of kernels/embedding_update.py), dY once, and
+    the int32 index sort.  State traffic per touched row: momentum /
+    elementwise adagrad E fp32 lanes, row-wise adagrad ONE fp32 scalar,
+    the stateless kinds zero."""
+    from repro.optim import row as row_optim
+    opt = row_optim.get(name)
+    state_elems = sum((w or E) for _, w in opt.state)
+    b = {
+        "touched_rows_rw": 2 * U * E * 4,
+        "state_rows_rw": 2 * U * state_elems * 4,
+        "dY_read": NB * E * 4,
+        "index_sort": 3 * L * 4,
+    }
+    return {"bytes_per_step": sum(b.values()), "bytes_breakdown": b,
+            "state_bytes_per_row": state_elems * 4,
+            "touches": "O(unique_rows)"}
+
+
 def embedding_update_bench(modes=("reference", "fused"),
                            M=200_000, E=64, B=512, S=8, P=4, zipf=1.05,
-                           measure_fused=False):
-    """Fused vs reference sparse Split-SGD update on one shard.
+                           measure_fused=False, optimizers=()):
+    """Fused vs reference sparse Split-SGD update on one shard, plus the
+    per-RowOptimizer bytes/step roofline rows (``optimizers``).
 
     Returns a JSON-able dict with the bytes/step roofline model and
     measured wall-clock per requested mode."""
@@ -68,9 +96,10 @@ def embedding_update_bench(modes=("reference", "fused"),
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core.sharded_embedding import apply_rows_split_sgd
     from repro.data.synthetic import zipf_indices
     from repro.kernels import ops
+    from repro.optim import row as row_optim
+    from repro.optim.row import apply_rows_split_sgd
     from repro.optim.split_sgd import split_fp32
 
     rng = np.random.default_rng(0)
@@ -115,6 +144,28 @@ def embedding_update_bench(modes=("reference", "fused"),
     result["model_speedup"] = (result["reference"]["bytes_per_step"]
                                / result["fused"]["bytes_per_step"])
 
+    # --- per-RowOptimizer roofline rows --------------------------------
+    if optimizers:
+        result["optimizers"] = {}
+        for name in optimizers:
+            r = optimizer_bytes_row(name, U, E, NB, L)
+            if measure_fused:
+                # tiny shard, one iteration: interpret-mode emulation is
+                # O(shard) per grid step (see the note below); the bytes
+                # model is the hardware-relevant number
+                Mm, Lm = 5_000, 256
+                opt = row_optim.get(name)
+                store = opt.init_store(W[:Mm])
+                f = jax.jit(lambda s, t, d: opt.apply_sparse(
+                    s, row_optim.SparseStream(
+                        idx=t.reshape(-1, 1, P),
+                        dY=d.reshape(-1, 1, E)), 0.05,
+                    fused=True, interpret=True))
+                r["us_measured_interpret"] = _timeit(
+                    f, store, jnp.minimum(tgt[:Lm], Mm - 1),
+                    dY[:Lm // P], iters=1)
+            result["optimizers"][name] = r
+
     # --- measured wall-clock -------------------------------------------
     if "reference" in modes:
         f = jax.jit(apply_rows_split_sgd)
@@ -127,8 +178,9 @@ def embedding_update_bench(modes=("reference", "fused"),
         # So: opt-in (--fused), tiny shard, one iteration.  The bytes model
         # above is the hardware-relevant number.
         Mm, Lm = 5_000, 256
-        f = jax.jit(lambda h, l, t, d: ops.fused_embedding_update(
-            h, l, t, d, 0.05, pooling=P, interpret=True))
+        f = jax.jit(lambda h, l, t, d: ops.fused_row_update(
+            "split_sgd", {"hi": h, "lo": l}, t, d, 0.05, pooling=P,
+            interpret=True))
         us = _timeit(f, hi[:Mm], lo[:Mm],
                      jnp.minimum(tgt[:Lm], Mm - 1), dY[:Lm // P], iters=1)
         result["fused"]["us_measured_interpret"] = us
@@ -144,22 +196,38 @@ def main(argv=None):
                    help="measure only the fused Pallas path")
     g.add_argument("--reference", action="store_true",
                    help="measure only the segment_sum reference path")
+    ap.add_argument("--optimizer", default="all",
+                    help="RowOptimizer(s) for the per-optimizer roofline "
+                         "rows: a registry name, or 'all' (default) for "
+                         "the full registered sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="skip the 120-step convergence study; emit only "
+                         "the bytes/step roofline rows (the CI sweep)")
     ap.add_argument("--json", default="BENCH_embedding_update.json",
                     help="where to write the update-bench JSON")
     args, _ = ap.parse_known_args(argv)
 
-    for name, val, derived in rows():
-        print(f"{name},{val:.2f},{derived}")
+    if not args.smoke:
+        for name, val, derived in rows():
+            print(f"{name},{val:.2f},{derived}")
 
+    from repro.optim import row as row_optim
+    optimizers = (row_optim.names() if args.optimizer == "all"
+                  else (args.optimizer,))
     modes = (("fused",) if args.fused else
              ("reference",) if args.reference else ("reference", "fused"))
-    res = embedding_update_bench(modes, measure_fused=args.fused)
+    res = embedding_update_bench(modes, measure_fused=args.fused,
+                                 optimizers=optimizers)
     for path in ("reference", "fused"):
         b = res[path]["bytes_per_step"]
         print(f"embed_update_{path}_bytes_per_step,{b:.0f},"
               f"{res[path]['touches']}")
     print(f"embed_update_model_speedup,{res['model_speedup']:.1f},"
           f"bytes(ref)/bytes(fused) at U={res['config']['unique_rows']}")
+    for name, r in res.get("optimizers", {}).items():
+        print(f"embed_update_opt_{name}_bytes_per_step,"
+              f"{r['bytes_per_step']:.0f},"
+              f"state {r['state_bytes_per_row']}B/row, {r['touches']}")
     for path in ("reference", "fused"):
         for k in ("us_measured", "us_measured_interpret"):
             if k in res[path]:

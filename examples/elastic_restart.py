@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.checkpoint.manager import reshard_embedding
+from repro.checkpoint.manager import reshard_store
 from repro.core import dlrm as D
 from repro.core import sharded_embedding as se
 from repro.data.synthetic import dlrm_stream
@@ -57,11 +57,11 @@ def main():
         state2, layout_small, step2, shardings2 = make(cfg, small)
         _, restored = mgr.restore(jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state))
-        # embedding row space re-layout (shard count 8 -> 4)
-        for leaf in ("hi", "lo"):
-            W_old = np.asarray(restored["emb"][leaf])
-            restored["emb"][leaf] = jnp.asarray(
-                reshard_embedding(layout_big, layout_small, W_old))
+        # embedding row space re-layout (shard count 8 -> 4): every slab
+        # of the EmbeddingStore — weights AND per-row optimizer state —
+        # reshards the same way (repro/optim/row.py store contract)
+        restored["emb"] = {k: jnp.asarray(v) for k, v in reshard_store(
+            layout_big, layout_small, restored["emb"]).items()}
         # dense lo shard layout is bucket-major per shard count: rebuild it
         from repro.optim import data_parallel as dp
         from repro.optim.split_sgd import combine_split, split_fp32

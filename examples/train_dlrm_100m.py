@@ -57,6 +57,12 @@ def main():
     ap.add_argument("--host-presort", action="store_true",
                     help="pre-sort the update index stream on the loader "
                          "thread (requires --data-dir)")
+    ap.add_argument("--optimizer", default="adagrad_rowwise",
+                    help="sparse RowOptimizer for the embedding path "
+                         "(docs/optim.md); production DLRM default is "
+                         "row-wise Adagrad — O(rows) optimizer state")
+    ap.add_argument("--eps", type=float, default=None,
+                    help="adagrad denominator floor override")
     args = ap.parse_args()
     if args.host_presort and not args.data_dir:
         ap.error("--host-presort requires --data-dir")
@@ -66,7 +72,9 @@ def main():
     cfg = D.DLRMConfig(
         name="dlrm-100m", num_dense=64, bottom=(128, 64), top=(256, 128),
         table_rows=(200_000,) * 8, emb_dim=64, pooling=20, batch=256,
-        lr=0.03, host_presort=args.host_presort)
+        lr=0.03, sparse_optimizer=args.optimizer, opt_eps=args.eps,
+        host_presort=args.host_presort)
+    print(f"sparse optimizer: {args.optimizer}")
     emb_params = cfg.spec.total_rows * cfg.emb_dim
     dense_params = sum(a * b for a, b in zip(cfg.bottom_sizes[:-1],
                                              cfg.bottom_sizes[1:]))

@@ -154,3 +154,13 @@ def reshard_embedding(old_layout, new_layout, W_old: np.ndarray
         dst = table_base(new_layout, t)
         W_new[dst:dst + rows] = W_old[src:src + rows]
     return W_new
+
+
+def reshard_store(old_layout, new_layout, store: dict) -> dict:
+    """Re-lay-out a full EmbeddingStore (repro/optim/row.py) across an
+    elastic restart: every slab — weight halves AND per-row optimizer
+    state (momentum rows, Adagrad accumulators) — is row-aligned on the
+    same layout, so each one reshards exactly like the weights.  Slabs
+    keep their dtypes (bf16 hi / uint16 lo / fp32 state)."""
+    return {k: reshard_embedding(old_layout, new_layout, np.asarray(v))
+            for k, v in store.items()}

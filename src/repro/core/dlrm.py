@@ -31,7 +31,7 @@ from repro.core import sharded_embedding as se
 from repro.core.interaction import dot_interaction, interaction_output_dim
 from repro.models.mlp import init_mlp, mlp_forward
 from repro.optim import data_parallel as dp
-from repro.optim.split_sgd import split_fp32
+from repro.optim import row as row_optim
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,11 +45,19 @@ class DLRMConfig:
     pooling: int                    # P look-ups per table (paper's P)
     batch: int = 2048               # global minibatch
     emb_mode: str = "row"           # 'row' | 'table'  (C3 placement)
-    split_sgd: bool = True          # C5 on/off
-    # Pallas fused sparse-bwd + Split-SGD update (bit-identical to the
-    # reference).  None = on where the kernel compiles (TPU), off elsewhere
-    # (CPU interpret emulation pays O(shard) per grid step); True/False
-    # forces the choice for A/B benchmarking and tests.
+    # sparse RowOptimizer for the embedding path (repro/optim/row.py):
+    # 'sgd' | 'split_sgd' | 'momentum' | 'adagrad_rowwise' | 'adagrad' (or
+    # a RowOptimizer instance).  None/'' falls back to the legacy
+    # ``split_sgd`` bool.  opt_beta / opt_eps override the registered
+    # hyperparameter defaults (momentum coefficient, adagrad floor).
+    sparse_optimizer: Optional[str] = None
+    opt_beta: Optional[float] = None
+    opt_eps: Optional[float] = None
+    split_sgd: bool = True          # C5 on/off (legacy optimizer sugar)
+    # Pallas fused sparse-bwd + row-optimizer update (the split path is
+    # bit-identical to the reference).  None = on where the kernel compiles
+    # (TPU), off elsewhere (CPU interpret emulation pays O(shard) per grid
+    # step); True/False forces the choice for A/B benchmarking and tests.
     fused_update: Optional[bool] = None
     compress_grads: bool = False    # bf16 wire + error feedback
     num_buckets: int = 4            # C4 bucketing
@@ -70,7 +78,8 @@ class DLRMConfig:
     # weighted bags: batch carries 'weights' [B, S, P] in the idx layout
     weighted: bool = False
     # host-pre-sorted sparse update (repro/data/pipeline.py): the loader
-    # ships psort_* fields, the step drops the on-device sort (row mode)
+    # ships psort_* fields, the step drops the on-device sort (row and
+    # table mode — the table host sort folds the padded-slot permute in)
     host_presort: bool = False
 
     @property
@@ -155,10 +164,7 @@ def state_struct(cfg: DLRMConfig, mesh, rngs: bool = True):
     emb_spec = P(emb_ax, None)
 
     structs = {
-        "emb": ({"hi": jax.ShapeDtypeStruct((emb_rows, E), jnp.bfloat16),
-                 "lo": jax.ShapeDtypeStruct((emb_rows, E), jnp.uint16)}
-                if cfg.split_sgd else
-                {"w": jax.ShapeDtypeStruct((emb_rows, E), jnp.float32)}),
+        "emb": row_optim.resolve(cfg).store_struct(emb_rows, E),
         "dense": {
             "hi": jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
@@ -194,11 +200,7 @@ def init_state(key: jax.Array, cfg: DLRMConfig, mesh) -> dict:
     arrays = dp.dp_global_arrays(dense, ns_total,
                                  compress=cfg.compress_grads,
                                  num_buckets=cfg.num_buckets)
-    if cfg.split_sgd:
-        hi, lo = split_fp32(W)
-        emb = {"hi": hi, "lo": lo}
-    else:
-        emb = {"w": W}
+    emb = row_optim.resolve(cfg).init_store(W)
     state = {"emb": emb,
              "dense": {"hi": arrays["hi"], "lo": arrays["lo"],
                        "err": arrays["err"]}}
@@ -245,7 +247,8 @@ def as_hybrid_def(cfg: DLRMConfig):
         dense_score=dlrm_dense_score(cfg),
         extras={"dense_x": ((cfg.num_dense,), jnp.bfloat16),
                 "labels": ((), jnp.float32)},
-        emb_mode=cfg.emb_mode, split_sgd=cfg.split_sgd,
+        emb_mode=cfg.emb_mode, sparse_optimizer=cfg.sparse_optimizer,
+        opt_beta=cfg.opt_beta, opt_eps=cfg.opt_eps, split_sgd=cfg.split_sgd,
         fused_update=cfg.fused_update, compress_grads=cfg.compress_grads,
         num_buckets=cfg.num_buckets, lr=cfg.lr, emb_lr=cfg.lr,
         idx_input=cfg.idx_input, microbatches=cfg.microbatches,
@@ -276,9 +279,10 @@ def make_eval_step(cfg: DLRMConfig, mesh):
                                     include_presort=False)
     all_axes, model, batch_axes = mesh_axes(mesh)
     stages = pipeline.build_stages(as_hybrid_def(cfg), mesh, layout)
+    opt = row_optim.resolve(cfg)
 
     def eval_local(state, batch):
-        W_fwd = state["emb"]["hi"] if cfg.split_sgd else state["emb"]["w"]
+        W_fwd = opt.fwd_weights(state["emb"])
         idx_fwd, _ = stages.index_exchange(batch["idx"], fwd_only=True)
         wgt_fwd = None
         if cfg.weighted:

@@ -165,11 +165,11 @@ def bag_update(W: jax.Array, g: jax.Array, dY: jax.Array, lr,
     B, S, P = g.shape
     E = W.shape[1]
     if method == "fused":
-        from repro.kernels import ops
-        w_flat = None if weights is None else weights.reshape(-1)
-        return ops.fused_embedding_update_fp32(
-            W, g.reshape(-1), dY.reshape(B * S, E), lr, weights=w_flat,
-            pooling=P)
+        from repro.optim import row
+        out = row.get("sgd").apply_sparse(
+            {"w": W}, row.SparseStream(idx=g, dY=dY, weights=weights), lr,
+            fused=True)
+        return out["w"]
     upd = jnp.broadcast_to(dY[:, :, None, :], (B, S, P, E))
     if weights is not None:
         upd = upd * weights[..., None]
@@ -184,13 +184,12 @@ def bag_update_split(hi: jax.Array, lo: jax.Array, g: jax.Array,
     (paper Alg. 3 + C5): only the rows named by ``g`` are reconstructed,
     stepped and re-split — in VMEM, via the Pallas fused kernel.
     ``weights`` [B, S, P]: optional per-lookup bag weights."""
-    from repro.kernels import ops
-    B, S, P = g.shape
-    E = hi.shape[1]
-    w_flat = None if weights is None else weights.reshape(-1)
-    return ops.fused_embedding_update(hi, lo, g.reshape(-1),
-                                      dY.reshape(B * S, E), lr,
-                                      weights=w_flat, pooling=P)
+    from repro.optim import row
+    out = row.get("split_sgd").apply_sparse(
+        {"hi": hi, "lo": lo}, row.SparseStream(idx=g, dY=dY,
+                                               weights=weights), lr,
+        fused=True)
+    return out["hi"], out["lo"]
 
 
 def bag_grad_rows(g: jax.Array, dY: jax.Array, num_rows: int) -> jax.Array:

@@ -39,7 +39,7 @@ from repro.core.embedding import EmbeddingSpec
 from repro.core import pipeline
 from repro.core import sharded_embedding as se
 from repro.optim import data_parallel as dp
-from repro.optim.split_sgd import split_fp32
+from repro.optim import row as row_optim
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,12 +59,26 @@ class HybridDef:
     # slot -> table map (sequence models share one item table across slots)
     slot_to_table: Optional[tuple] = None
     emb_mode: str = "row"
+    # sparse RowOptimizer (repro/optim/row.py): registry name ('sgd',
+    # 'split_sgd', 'momentum', 'adagrad_rowwise', 'adagrad') or a
+    # RowOptimizer instance.  Owns the embedding store layout (weight
+    # slab(s) + per-row state slabs) and the single fused apply the
+    # sparse_update stage dispatches through.  None/'' falls back to the
+    # legacy ``split_sgd`` bool below.
+    sparse_optimizer: Optional[Any] = None
+    # hyperparameter overrides for the registered optimizer (None = its
+    # registered default): momentum coefficient / adagrad denominator floor
+    opt_beta: Optional[float] = None
+    opt_eps: Optional[float] = None
+    # legacy sugar: True -> sparse_optimizer='split_sgd', False -> 'sgd'
+    # (only read when sparse_optimizer is unset)
     split_sgd: bool = True
-    # fused Pallas sparse-bwd + Split-SGD row update (kernels/embedding_update)
-    # — bit-identical to the reference path, touches O(touched rows) instead of
-    # O(shard rows).  None (default) = on where the kernel compiles (TPU);
-    # off elsewhere, because CPU interpret emulation pays O(shard) per grid
-    # step.  True/False forces the choice (A/B, tests).
+    # fused Pallas sparse-bwd + row-optimizer update (kernels/
+    # embedding_update) — the split path is bit-identical to the reference,
+    # touches O(touched rows) instead of O(shard rows).  None (default) =
+    # on where the kernel compiles (TPU); off elsewhere, because CPU
+    # interpret emulation pays O(shard) per grid step.  True/False forces
+    # the choice (A/B, tests).
     fused_update: Optional[bool] = None
     compress_grads: bool = False
     num_buckets: int = 4
@@ -86,7 +100,8 @@ class HybridDef:
     # host-pre-sorted sparse update (repro/data/pipeline.py): the loader
     # ships per-shard sorted lookup streams as psort_* batch fields and
     # the fused kernel consumes them directly — no on-device sort in the
-    # step.  Row mode only; always the fused kernel on the update path.
+    # step.  Row AND table mode (the table host sort folds the
+    # padded-slot permute in); always the fused kernel on the update path.
     host_presort: bool = False
 
 
@@ -117,11 +132,12 @@ def state_struct(mdef: HybridDef, mesh):
     padded = -(-n_dense // (ns_total * mdef.num_buckets)) * (
         ns_total * mdef.num_buckets)
     rows = layout.total_rows
+    opt = row_optim.resolve(mdef)
     structs = {
-        "emb": ({"hi": jax.ShapeDtypeStruct((rows, E), jnp.bfloat16),
-                 "lo": jax.ShapeDtypeStruct((rows, E), jnp.uint16)}
-                if mdef.split_sgd else
-                {"w": jax.ShapeDtypeStruct((rows, E), jnp.float32)}),
+        # the RowOptimizer owns the embedding store layout: weight slab(s)
+        # plus zero or more per-row state slabs, all sharded by the same
+        # row partition (so state persists/reshards next to weights)
+        "emb": opt.store_struct(rows, E),
         "dense": {
             "hi": jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
@@ -186,7 +202,11 @@ def batch_struct(mdef: HybridDef, mesh, layout, batch: int | None = None,
         emb_ax, _ = _emb_axes(mdef, mesh)
         axes = emb_ax if isinstance(emb_ax, tuple) else (emb_ax,)
         ns_emb = int(np.prod([mesh.shape[a] for a in axes]))
-        L = B * S * Pq
+        # flat lookup count of the per-shard sorted stream: row mode sorts
+        # the original-slot stream; table mode the padded-slot stream of
+        # each shard's slots (presort_batch folds the permute in)
+        slots = S if mdef.emb_mode == "row" else layout.slots_per_shard
+        L = B * slots * Pq
         for name, dt in (("psort_rows", jnp.int32),
                          ("psort_bags", jnp.int32),
                          ("psort_msk", jnp.int32),
@@ -225,8 +245,7 @@ def init_state(key, mdef: HybridDef, mesh):
     arrays = dp.dp_global_arrays(dense, ns_total,
                                  compress=mdef.compress_grads,
                                  num_buckets=mdef.num_buckets)
-    emb = ({"hi": split_fp32(W)[0], "lo": split_fp32(W)[1]}
-           if mdef.split_sgd else {"w": W})
+    emb = row_optim.resolve(mdef).init_store(W)
     state = {"emb": emb, "dense": {"hi": arrays["hi"], "lo": arrays["lo"],
                                    "err": arrays["err"]}}
     return jax.device_put(state, shardings), layout
@@ -253,9 +272,10 @@ def make_score_step(mdef: HybridDef, mesh, batch: int | None = None):
                                     include_presort=False)
     all_axes, model, batch_axes = _mesh_axes(mesh)
     stages = pipeline.build_stages(mdef, mesh, layout)
+    opt = row_optim.resolve(mdef)
 
     def score_local(state, batch_d):
-        W_fwd = state["emb"]["hi"] if mdef.split_sgd else state["emb"]["w"]
+        W_fwd = opt.fwd_weights(state["emb"])
         idx_fwd, _ = stages.index_exchange(batch_d["idx"], fwd_only=True)
         wgt_fwd = None
         if mdef.weighted:
@@ -302,6 +322,7 @@ def make_retrieval_step(mdef: HybridDef, mesh, n_candidates: int,
     ns = int(np.prod(list(mesh.shape.values())))
     per = n_candidates // ns
     E = mdef.spec.dim
+    opt = row_optim.resolve(mdef)
 
     def _normalize_batch(batch):
         """Schema-normalize the single-query batch BEFORE shard_map: every
@@ -329,7 +350,7 @@ def make_retrieval_step(mdef: HybridDef, mesh, n_candidates: int,
         return out
 
     def local(state, batch, cand):
-        W_fwd = state["emb"]["hi"] if mdef.split_sgd else state["emb"]["w"]
+        W_fwd = opt.fwd_weights(state["emb"])
         emb = se.row_bag_fwd_replicated(layout, W_fwd, batch["idx"], emb_ax)
         emb_c = jnp.broadcast_to(emb, (per,) + emb.shape[1:])
         emb_c = emb_c.at[:, target_slot].set(cand.astype(jnp.float32))

@@ -62,6 +62,7 @@ from repro import compat
 from repro.core import sharded_embedding as se
 from repro.data.pipeline import PSORT_KEYS
 from repro.optim import data_parallel as dp
+from repro.optim import row as row_optim
 
 
 # ---------------------------------------------------------------------------
@@ -135,11 +136,7 @@ def validate_pipeline(mdef, mesh, microbatches: int) -> None:
         raise ValueError(
             f"global batch {mdef.batch} must be divisible by microbatches "
             f"* mesh size = {microbatches} * {ns}")
-    if getattr(mdef, "host_presort", False) and mdef.emb_mode != "row":
-        raise ValueError(
-            "host_presort=True requires emb_mode='row' (the host pre-sort "
-            "of repro.data.pipeline targets the row-partitioned update "
-            f"stream); got emb_mode={mdef.emb_mode!r}")
+    row_optim.resolve(mdef)   # unknown sparse_optimizer fails here, loudly
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +195,7 @@ def build_stages(mdef, mesh, layout) -> PipelineStages:
     B = mdef.batch
     fused = (jax.default_backend() == "tpu" if mdef.fused_update is None
              else mdef.fused_update)
+    opt = row_optim.resolve(mdef)
 
     def exchange(idx_mb, fwd_only: bool = False):
         """Index stream: loader layout -> compute layout for one
@@ -250,32 +248,17 @@ def build_stages(mdef, mesh, layout) -> PipelineStages:
         return se.gather_dY(layout, d_emb, emb_ax, replica_ax)
 
     def sparse_update(emb_store, idx_upd, dY, weights=None, presort=None):
-        if presort is not None:
-            # host-pre-sorted stream (repro/data/pipeline.py): the kernel
-            # consumes the shipped (rows, bags, msk, wgt) directly — no
-            # on-device sort, and bag weights are already baked into wgt.
-            if mdef.split_sgd:
-                hi2, lo2 = se.apply_update_presorted(
-                    layout, (emb_store["hi"], emb_store["lo"]), presort,
-                    dY, mdef.emb_lr, split=True)
-                return {"hi": hi2, "lo": lo2}
-            w2 = se.apply_update_presorted(layout, emb_store["w"], presort,
-                                           dY, mdef.emb_lr, split=False)
-            return {"w": w2}
-        if mdef.split_sgd:
-            hi2, lo2 = se.apply_update_scan(
-                layout, (emb_store["hi"], emb_store["lo"]), idx_upd, dY,
-                mdef.emb_lr, emb_ax, split=True, replica_axes=None,
-                fused=fused, weights=weights)
-            return {"hi": hi2, "lo": lo2}
-        # NB: the fused fp32 kernel pre-reduces duplicates (one rounding
-        # per row) where the reference scatter-adds per lookup, so the
-        # two non-split paths are close but not bit-identical.
-        w2 = se.apply_update_scan(layout, emb_store["w"], idx_upd, dY,
-                                  mdef.emb_lr, emb_ax, split=False,
-                                  replica_axes=None, fused=fused,
-                                  weights=weights)
-        return {"w": w2}
+        # ONE dispatcher for every registered RowOptimizer: the presorted
+        # stream (repro/data/pipeline.py — no on-device sort, bag weights
+        # baked into sorted_wgt) and the sorting scan/fused paths all go
+        # through RowOptimizer.apply_sparse.  NB: the fused fp32 kernels
+        # pre-reduce duplicates (one rounding per row) where the sgd
+        # reference scatter-adds per lookup, so those two paths are close
+        # but not bit-identical; the split path is bitwise either way.
+        return se.apply_update(layout, emb_store, opt, idx_upd, dY,
+                               mdef.emb_lr, emb_ax, replica_axes=None,
+                               fused=fused, weights=weights,
+                               presort=presort)
 
     def dense_update(dense_state, g_dense):
         st = dp.DPState(hi=dense_state["hi"], lo_shard=dense_state["lo"],
@@ -369,10 +352,11 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
             if M > 1 else None)
     weighted = getattr(mdef, "weighted", False)
     presorted = getattr(mdef, "host_presort", False)
+    opt = row_optim.resolve(mdef)
 
     def step_local(state, batch):
         emb_store = state["emb"]
-        W_fwd = emb_store["hi"] if mdef.split_sgd else emb_store["w"]
+        W_fwd = opt.fwd_weights(emb_store)
         dense_hi = state["dense"]["hi"]
         # host-pre-sorted update stream: each shard's [1, L] block of the
         # psort_* batch fields (leading dim = combined mesh index, the

@@ -327,110 +327,181 @@ def gather_dY(layout: ShardedEmbeddingLayout, dY_mp: jax.Array, axis_name,
     return dY_local
 
 
-def apply_rows_sgd(W_local: jax.Array, tgt: jax.Array, grad: jax.Array,
-                   lr) -> jax.Array:
-    """Plain scatter-add SGD on local rows (duplicates accumulate) —
-    Alg. 3 with XLA's deterministic scatter supplying the atomicity."""
-    return W_local.at[tgt].add((-lr * grad).astype(W_local.dtype))
+def _row_sorted_streams(layout: ShardedEmbeddingLayout, g_flat: jax.Array,
+                        start, pooling: int,
+                        weights_flat: Optional[jax.Array] = None) -> tuple:
+    """Device-side sorted streams for the ROW-mode fused update, computed
+    from the GLOBAL row ids: one axis-INVARIANT stable argsort of the
+    global keys, then an elementwise localization into this shard's
+    window (subtract ``start``, mask, clip).  Three reasons this shape —
+    and not a per-shard sort of the axis-index-derived local rows:
+
+    * the global sort is computed once and identically on every shard
+      (the per-shard sorts were ns identical-cost argsorts of shifted
+      keys);
+    * per touched row the run holds the SAME lookups in the SAME stable
+      flat order as the per-shard local sort (shifting all keys by
+      ``start`` permutes nothing within the owned window), so the kernel
+      output is bit-identical to the host-pre-sorted stream;
+    * XLA CPU (jax<0.5) miscompiles the interpret-mode kernel under
+      jit+shard_map when its scalar-prefetch operands descend from an
+      axis_index-dependent argsort — the invariant sort + elementwise
+      localization is the formulation it compiles correctly (verified
+      against the pure-jnp oracle; see tests/test_row_optim.py).
+
+    Non-owned lookups keep ``msk == 0`` and clip to row 0 / R-1 — exact
+    no-op rewrites (stateless kinds) or flag-guarded write-throughs
+    (stateful kinds) under the kernel's liveness contract."""
+    G = layout.total_rows
+    R = layout.rows_per_shard
+    in_range = (g_flat >= 0) & (g_flat < G)
+    key = jnp.where(in_range, g_flat, G).astype(jnp.int32)
+    order = jnp.argsort(key)                 # stable: ties in flat order
+    skey = jnp.take(key, order)
+    bags = (order // pooling).astype(jnp.int32)
+    wgt = (jnp.ones(key.shape, jnp.float32) if weights_flat is None
+           else jnp.take(weights_flat.astype(jnp.float32), order))
+    local = skey - start
+    msk = ((skey < G) & (local >= 0) & (local < R)).astype(jnp.int32)
+    rows = jnp.clip(local, 0, R - 1)
+    return rows, bags, msk, wgt
 
 
-def apply_update_scan(layout: ShardedEmbeddingLayout, W_local, idx_local,
-                      dY: jax.Array, lr, axis_name, split: bool = False,
-                      replica_axes=None, fused: bool = False,
-                      weights: Optional[jax.Array] = None):
-    """Fused sparse bwd+SGD, scanned over batch chunks (bounded transients;
-    paper configs reach P=100 where the naive [B,S,P,E] expansion is tens
-    of GB).
+def apply_update(layout: ShardedEmbeddingLayout, store: dict, optimizer,
+                 idx_local, dY: jax.Array, lr, axis_name,
+                 replica_axes=None, fused: bool = False,
+                 weights: Optional[jax.Array] = None,
+                 presort: Optional[tuple] = None) -> dict:
+    """THE sparse update of the hybrid step: one entry point for every
+    registered :class:`repro.optim.row.RowOptimizer`, every placement mode
+    and every stream shape (replacing the former ``apply_update_scan`` /
+    ``apply_update_presorted`` / ``apply_rows_*`` surface).
 
-    ``W_local``: [rows, E] array, or a (hi, lo) pair when ``split``.
-    ``idx_local``: [B, S_or_K, P]; ``dY``: matching [B, S_or_K, E] (already
-    passed through :func:`gather_dY`).  ``weights``: optional [B, S_or_K,
-    P] per-lookup bag weights in the same layout as ``idx_local`` (the
-    weighted-bag cotangent is ``w * dY``).  In table mode with replica
-    axes the index (and weight) arrays are gathered the same way as dY.
+    ``store``: the optimizer's EmbeddingStore dict — this shard's weight
+    slab(s) plus per-row state slabs, all on the same row partition.
+    ``idx_local``: [B, S_or_K, P]; ``dY``: matching [B, S_or_K, E]
+    (already passed through :func:`gather_dY`).  ``weights``: optional
+    [B, S_or_K, P] per-lookup bag weights in the layout of ``idx_local``.
+    In table mode with replica axes the index (and weight) arrays are
+    gathered the same way as dY.
 
-    ``fused=True`` routes each chunk through the Pallas fused kernel
-    (:mod:`repro.kernels.embedding_update`): the [cb,S,P,E] gradient
-    expansion is never built (the kernel reads dY rows by bag id), duplicate
-    rows are pre-reduced in VMEM, and the shard is updated in place on the
-    touched rows only.  Split results are bit-identical to the reference."""
+    ``presort``: this shard's host-pre-sorted ``(sorted_rows, sorted_bags,
+    sorted_msk, sorted_wgt)`` [L] arrays (``repro.data.pipeline
+    .presort_batch``, row AND table mode; bag weights already baked into
+    ``sorted_wgt``) — always the fused Pallas kernel, no on-device sort,
+    no batch chunking (only scalars were shipped and the kernel never
+    builds a [B,S,P,E] expansion).  Bit-identical to the sorting path
+    whenever that path runs unchunked.
+
+    ``fused=True`` runs the Pallas kernel on the FULL stream, unchunked —
+    the kernel ships only [L] scalars and never builds a [B,S,P,E]
+    expansion (duplicates pre-reduced in VMEM, weights and state updated
+    in place on the touched rows only; split results bit-identical to
+    the reference).  ``fused=False`` runs the reference row math, chunked
+    over the batch to bound the gradient-expansion transients (paper
+    configs reach P=100 where the naive expansion is tens of GB); for
+    STATEFUL optimizers the chunked reference accumulates the per-row
+    gradient across chunks first and applies the optimizer transition
+    once — per-chunk transitions would compound the momentum decay /
+    Adagrad accumulate n times per step."""
+    from repro.optim.row import SparseStream
+    if presort is not None:
+        return optimizer.apply_sparse(store, SparseStream(presort=presort,
+                                                          dY=dY), lr,
+                                      fused=True)
     if layout.mode == "table" and replica_axes is not None:
         idx_local = jax.lax.all_gather(idx_local, replica_axes, axis=0,
                                        tiled=True)
         if weights is not None:
             weights = jax.lax.all_gather(weights, replica_axes, axis=0,
                                          tiled=True)
+    if fused and layout.mode == "row":
+        # device-sorted fused path: sort the global stream once
+        # (axis-invariant), localize elementwise, and feed the kernel's
+        # presorted entry — unchunked, like the host-pre-sorted path (the
+        # kernel ships only [L] scalars and never builds a [B,S,P,E]
+        # expansion), so the result is bit-identical to host_presort.
+        g = idx_local + jnp.asarray(layout.row_offsets,
+                                    idx_local.dtype)[None, :, None]
+        start = jax.lax.axis_index(axis_name) * layout.rows_per_shard
+        streams = _row_sorted_streams(
+            layout, g.reshape(-1), start, idx_local.shape[-1],
+            None if weights is None else weights.reshape(-1))
+        return optimizer.apply_sparse(store, SparseStream(presort=streams,
+                                                          dY=dY), lr)
+    if fused and layout.mode == "table" and layout.num_shards > 1 \
+            and jax.default_backend() != "tpu":
+        # KNOWN LIMITATION: XLA CPU (jax<0.5) miscompiles the
+        # interpret-mode kernel under jit+shard_map when the sorted
+        # streams descend from the axis-varying padded-slot offsets, and
+        # table mode has no axis-invariant sort formulation (each shard
+        # sorts genuinely different slot content).  Fall back to the
+        # reference math here — identical semantics (the split path is
+        # bit-identical to the kernel by contract); the multi-shard
+        # table KERNEL path is exercised via host_presort, and on TPU
+        # (compiled, non-interpret) the direct path stays on.
+        fused = False
     local, valid = _local_rows(layout, idx_local, axis_name)
     B, S, P = local.shape
     E = dY.shape[-1]
+    if fused:
+        # table-mode fused (TPU): the kernel ships only [L] scalars and
+        # reads dY rows by bag id — there is no [B,S,P,E] expansion to
+        # bound, so never chunk (chunking would also re-run stateful
+        # transitions per chunk; one apply keeps them once-per-step)
+        return optimizer.apply_sparse(
+            store, SparseStream(idx=local, dY=dY, valid=valid,
+                                weights=weights), lr, fused=True)
     n = _batch_chunks(B, S, P, E)
     cb = B // n
 
-    def chunk_update(W, loc_c, val_c, dY_c, wgt_c=None):
-        if fused:
-            from repro.kernels import ops
-            tgt = loc_c.reshape(-1)
-            val = val_c.reshape(-1)
-            dYr = dY_c.reshape(cb * S, E)
-            w = None if wgt_c is None else wgt_c.reshape(-1)
-            if split:
-                hi, lo = W
-                return ops.fused_embedding_update(hi, lo, tgt, dYr, lr,
-                                                  valid=val, weights=w,
-                                                  pooling=P)
-            return ops.fused_embedding_update_fp32(W, tgt, dYr, lr,
-                                                   valid=val, weights=w,
-                                                   pooling=P)
-        grad = jnp.broadcast_to(dY_c[:, :, None, :],
-                                (cb, S, P, E)).astype(jnp.float32)
-        if wgt_c is not None:
-            grad = grad * wgt_c[..., None].astype(jnp.float32)
-        grad = jnp.where(val_c[..., None], grad, 0.0).reshape(-1, E)
-        tgt = jnp.where(val_c, loc_c, 0).reshape(-1)
-        if split:
-            hi, lo = W
-            return apply_rows_split_sgd(hi, lo, tgt, grad, lr)
-        return apply_rows_sgd(W, tgt, grad, lr)
+    def chunk_update(st, loc_c, val_c, dY_c, wgt_c=None):
+        return optimizer.apply_sparse(
+            st, SparseStream(idx=loc_c, dY=dY_c, valid=val_c,
+                             weights=wgt_c), lr, fused=False)
 
     if n == 1:
-        return chunk_update(W_local, local, valid, dY, weights)
+        return chunk_update(store, local, valid, dY, weights)
+    if optimizer.state_keys:
+        # stateful reference, chunked: the optimizer transition (momentum
+        # decay, Adagrad accumulate) must run ONCE per touched row per
+        # step — re-running it per chunk compounds the decay beta^n-style
+        # and squares partial sums.  Two phases: scatter-accumulate the
+        # per-row gradient across chunks (the [cb,S,P,E] expansion stays
+        # chunk-bounded), then one reduced transition on the unique rows.
+        rows = optimizer.fwd_weights(store).shape[0]
 
-    def body(W, inp):
-        return chunk_update(W, *inp), None
+        def acc_chunk(dW, inp):
+            loc_c, val_c, dY_c = inp[0], inp[1], inp[2]
+            wgt_c = inp[3] if weights is not None else None
+            grad = jnp.broadcast_to(dY_c[:, :, None, :],
+                                    (cb, S, P, E)).astype(jnp.float32)
+            if wgt_c is not None:
+                grad = grad * wgt_c[..., None].astype(jnp.float32)
+            tgt_c = jnp.where(val_c, loc_c, rows)   # OOB -> scatter-drop
+            return dW.at[tgt_c.reshape(-1)].add(grad.reshape(-1, E)), None
+
+        xs = (local.reshape(n, cb, S, P), valid.reshape(n, cb, S, P),
+              dY.reshape(n, cb, S, E))
+        if weights is not None:
+            xs += (weights.reshape(n, cb, S, P),)
+        dW, _ = jax.lax.scan(acc_chunk, jnp.zeros((rows, E), jnp.float32),
+                             xs)
+        from repro.optim.row import dedup_targets
+        rep = dedup_targets(jnp.where(valid, local, rows).reshape(-1),
+                            rows)
+        summed = jnp.take(dW, jnp.minimum(rep, rows - 1), axis=0)
+        return optimizer.apply_rows_reduced(store, rep, summed, lr)
+
+    def body(st, inp):
+        return chunk_update(st, *inp), None
 
     xs = (local.reshape(n, cb, S, P), valid.reshape(n, cb, S, P),
           dY.reshape(n, cb, S, E))
     if weights is not None:
         xs += (weights.reshape(n, cb, S, P),)
-    W_out, _ = jax.lax.scan(body, W_local, xs)
-    return W_out
-
-
-def apply_update_presorted(layout: ShardedEmbeddingLayout, W_local,
-                           presort: tuple, dY: jax.Array, lr,
-                           split: bool = False):
-    """Sparse bwd+SGD on a HOST-PRE-SORTED lookup stream — the fast path
-    fed by ``repro.data.pipeline.presort_batch`` (row mode).
-
-    ``presort``: this shard's ``(sorted_rows, sorted_bags, sorted_msk,
-    sorted_wgt)`` [L] arrays (bag weights, if any, are already baked into
-    ``sorted_wgt``).  ``dY``: [B, S, E] full-batch cotangent from
-    :func:`gather_dY`.  Always the fused Pallas kernel — nothing to sort
-    and only scalars were shipped, so no batch chunking is needed (the
-    kernel never builds a [B,S,P,E] expansion).  Bit-identical to the
-    sorting path whenever that path runs unchunked (``_batch_chunks`` ==
-    1); a chunked reference applies per-chunk partial updates whose
-    per-row rounding differs from the single pre-reduction here."""
-    srows, sbags, smsk, swgt = presort
-    from repro.kernels import ops
-    E = dY.shape[-1]
-    dYr = dY.reshape(-1, E)
-    if split:
-        hi, lo = W_local
-        return ops.fused_embedding_update_presorted(hi, lo, srows, sbags,
-                                                    smsk, swgt, dYr, lr)
-    return ops.fused_embedding_update_fp32_presorted(W_local, srows, sbags,
-                                                     smsk, swgt, dYr, lr)
+    store_out, _ = jax.lax.scan(body, store, xs)
+    return store_out
 
 
 def row_grad_rows(layout: ShardedEmbeddingLayout, idx: jax.Array,
@@ -483,57 +554,11 @@ def replicate_grad_rows(tgt: jax.Array, grad: jax.Array, replica_axes
 
 
 # ---------------------------------------------------------------------------
-# Split-SGD-BF16 sparse row update (contribution C5 on the sparse path).
-# Gather-modify-scatter needs duplicate indices PRE-REDUCED (unlike
-# scatter-add); the reference path dedups with a sort + run-length
-# segment-sum, then applies an exact fp32 update on the touched rows — but
-# its functional scatter still copies the whole (hi, lo) shard every step.
-# The fused Pallas path (repro.kernels.embedding_update, ``fused=True``
-# here and in apply_update_scan) moves the dedup accumulation into VMEM and
-# updates the shard in place: bytes/step drops from O(shard_rows) to
-# O(unique_touched_rows) — see the table in that module's docstring and
-# benchmarks/bench_split_sgd.py for the roofline numbers.  Outputs are
-# bit-identical between the two paths (tests/test_embedding_update.py).
+# NOTE on the optimizer math: the per-row update rules (Split-SGD's
+# combine/step/split, momentum, row-wise Adagrad, ...) live in
+# ``repro.optim.row`` — this module owns only the PLACEMENT concerns
+# (layout -> local rows, replica gathers, batch chunking) and hands each
+# chunk to ``RowOptimizer.apply_sparse``.  The reference oracles
+# (``dedup_rows``, ``apply_rows_sgd``, ``apply_rows_split_sgd``) moved
+# there with it.
 # ---------------------------------------------------------------------------
-
-def dedup_rows(tgt: jax.Array, upd: jax.Array, num_rows: int
-               ) -> tuple[jax.Array, jax.Array]:
-    """Sum duplicate targets.  Returns (rep [n], summed [n, E]); positions
-    for empty run segments get rep == num_rows (out of bounds -> the
-    subsequent scatter DROPS them, JAX's default OOB-scatter mode)."""
-    order = jnp.argsort(tgt)
-    sg = jnp.take(tgt, order)
-    su = jnp.take(upd, order, axis=0)
-    newseg = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                              (sg[1:] != sg[:-1]).astype(jnp.int32)])
-    uid = jnp.cumsum(newseg)
-    n = tgt.shape[0]
-    summed = jax.ops.segment_sum(su, uid, num_segments=n)
-    rep = jnp.full((n,), num_rows, dtype=sg.dtype).at[uid].min(sg)
-    return rep, summed
-
-
-def apply_rows_split_sgd(hi: jax.Array, lo: jax.Array, tgt: jax.Array,
-                         grad: jax.Array, lr, fused: bool = False
-                         ) -> tuple[jax.Array, jax.Array]:
-    """Exact-fp32 sparse SGD on split-bf16 storage (see
-    repro.optim.split_sgd).  ``tgt`` may contain duplicates.
-
-    ``fused=False`` (reference): segment_sum the per-row gradients, gather
-    the touched rows, combine/step/split, and scatter back — the functional
-    scatter copies the whole shard.  ``fused=True``: one Pallas pass
-    (:mod:`repro.kernels.embedding_update`) that pre-reduces duplicates in
-    VMEM and rewrites only the touched rows in place; bit-identical output."""
-    if fused:
-        from repro.kernels import ops
-        return ops.fused_embedding_update(hi, lo, tgt, grad, lr, pooling=1)
-    from repro.optim.split_sgd import combine_split, split_fp32
-    rep, summed = dedup_rows(tgt, grad, hi.shape[0])
-    safe = jnp.minimum(rep, hi.shape[0] - 1)   # gather side must be in-bounds
-    h = jnp.take(hi, safe, axis=0)
-    l = jnp.take(lo, safe, axis=0)
-    w32 = combine_split(h, l)
-    w32 = w32 - lr * summed
-    nh, nl = split_fp32(w32)
-    # rep == num_rows rows (empty segments) are dropped by the scatter.
-    return hi.at[rep].set(nh), lo.at[rep].set(nl)

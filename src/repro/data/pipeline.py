@@ -40,40 +40,70 @@ PSORT_KEYS = ("psort_rows", "psort_bags", "psort_msk", "psort_wgt")
 
 def presort_batch(layout, idx: np.ndarray,
                   weights: Optional[np.ndarray] = None) -> dict:
-    """Per-shard sorted lookup streams for one global batch (row mode).
+    """Per-shard sorted lookup streams for one global batch (row AND table
+    sharding modes).
 
-    ``layout``: :class:`repro.core.sharded_embedding.ShardedEmbeddingLayout`
-    (mode 'row').  ``idx`` [B, S, P] original-slot per-table indices —
-    the SAME global-order stream the step's sparse update consumes (the
-    microbatch pipeline restores device-major == global order before the
-    one sparse update, so these fields are M-invariant).  ``weights``
-    [B, S, P] optional per-lookup bag weights.
+    ``layout``: :class:`repro.core.sharded_embedding.ShardedEmbeddingLayout`.
+    ``idx`` [B, S, P] ORIGINAL-SLOT per-table indices — the same
+    global-order stream the step's sparse update consumes (the microbatch
+    pipeline restores device-major == global order before the one sparse
+    update, so these fields are M-invariant).  ``weights`` [B, S, P]
+    optional per-lookup bag weights.
+
+    Row mode sorts each shard's owner-masked local-row stream
+    (``L = B*S*P``).  Table mode first folds in the padded-slot permute
+    the device-side exchange performs (``permute_indices``: original ->
+    padded order, dummy slots read index 0 / weight 0) and sorts each
+    shard's slot-offset stream (``L = B*slots_per_shard*P``) — so
+    ``host_presort=True`` works in both placement modes.
 
     Returns ``{psort_rows, psort_bags, psort_msk, psort_wgt}``, each
-    ``[num_shards, B*S*P]`` — row ``k`` belongs to the device with
-    combined mesh index ``k`` (shard the leading dim over the embedding
-    axes).  Bit-compatibility with the on-device path is structural:
-    same int32 key construction, and a stable argsort's permutation is
-    uniquely determined by the keys, so ``np.argsort(kind='stable')``
-    here equals ``jnp.argsort`` there.
+    ``[num_shards, L]`` — row ``k`` belongs to the shard with embedding-
+    axis index ``k`` (shard the leading dim over the embedding axes).
+    Bit-compatibility with the on-device ``sort_lookups`` path is
+    structural: same int32 key construction, and a stable argsort's
+    permutation is uniquely determined by the keys, so
+    ``np.argsort(kind='stable')`` here equals ``jnp.argsort`` there.
     """
-    if layout.mode != "row":
-        raise ValueError("host pre-sort supports emb_mode='row' only "
-                         f"(got {layout.mode!r})")
     B, S, P = idx.shape
-    L = B * S * P
     ns, R = layout.num_shards, layout.rows_per_shard
     # int32 end-to-end: the device computes local rows in the index dtype
-    off = np.asarray(layout.row_offsets, np.int32)
-    g = (np.asarray(idx, np.int32) + off[None, :, None]).reshape(-1)
-    wflat = (None if weights is None
-             else np.asarray(weights, np.float32).reshape(-1))
+    if layout.mode == "row":
+        off = np.asarray(layout.row_offsets, np.int32)
+        g = np.asarray(idx, np.int32) + off[None, :, None]
+        locals_ = [(g - np.int32(s * R)).reshape(-1) for s in range(ns)]
+        wflat = (None if weights is None
+                 else [np.asarray(weights, np.float32).reshape(-1)] * ns)
+    elif layout.mode == "table":
+        # fold the device-side padded-slot permute into the host sort:
+        # original slots -> padded (bin-major) order, dummy slots read
+        # index 0 (the scratch row) with weight 0 — exactly the
+        # permute_indices + zeroed-weights stream the exchange ships
+        src = np.where(layout.padded_slots >= 0, layout.padded_slots, 0)
+        dummy = layout.padded_slots < 0
+        padded = np.asarray(idx, np.int32)[:, src, :]
+        padded[:, dummy, :] = 0
+        if weights is not None:
+            wp = np.asarray(weights, np.float32)[:, src, :]
+            wp[:, dummy, :] = 0.0
+        K = layout.slots_per_shard
+        off = np.asarray(layout.slot_local_offsets,
+                         np.int32).reshape(ns, K)
+        locals_ = [(padded[:, s * K:(s + 1) * K, :]
+                    + off[s][None, :, None]).reshape(-1)
+                   for s in range(ns)]
+        wflat = (None if weights is None
+                 else [wp[:, s * K:(s + 1) * K, :].reshape(-1)
+                       for s in range(ns)])
+    else:
+        raise ValueError(f"unknown layout mode {layout.mode!r}")
+    L = locals_[0].shape[0]
     rows = np.empty((ns, L), np.int32)
     bags = np.empty((ns, L), np.int32)
     msk = np.empty((ns, L), np.int32)
     wgt = np.empty((ns, L), np.float32)
     for s in range(ns):
-        local = g - np.int32(s * R)
+        local = locals_[s]
         valid = (local >= 0) & (local < R)
         key = np.where(valid, local, R).astype(np.int32)
         order = np.argsort(key, kind="stable")
@@ -81,7 +111,7 @@ def presort_batch(layout, idx: np.ndarray,
         rows[s] = np.minimum(skey, R - 1)
         bags[s] = (order // P).astype(np.int32)
         msk[s] = (skey < R).astype(np.int32)
-        wgt[s] = 1.0 if wflat is None else wflat[order]
+        wgt[s] = 1.0 if wflat is None else wflat[s][order]
     return {"psort_rows": rows, "psort_bags": bags, "psort_msk": msk,
             "psort_wgt": wgt}
 

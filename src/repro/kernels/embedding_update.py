@@ -39,7 +39,19 @@ Numerics: duplicate contributions are pre-reduced in fp32 in sorted order —
 the same order ``jax.ops.segment_sum`` uses on sorted segments — and the
 step is applied once per row, so the result is bit-identical to the
 ``dedup_rows`` + ``combine_split`` reference path
-(:func:`repro.core.sharded_embedding.apply_rows_split_sgd`).
+(:func:`repro.optim.row.apply_rows_split_sgd`).
+
+Stateful row optimizers (momentum / Adagrad; :mod:`repro.optim.row`) ride
+the SAME machinery with one extra row-addressed operand: the per-row
+optimizer-state slab (a momentum row, an elementwise accumulator row, or a
+per-row scalar lane) is DMA'd by the same ``rows[i]`` index map as the
+weight row, updated once at the run end, and written back through its own
+``input_output_aliases`` entry — state traffic stays O(touched rows) per
+step, exactly like the weights.  A run consisting ONLY of masked padding
+lookups (the sorted tail) must not touch state (``beta * m`` is not a
+no-op the way ``w - lr * 0`` is), so the stateful kernels carry a 1-word
+SMEM liveness flag per run and write the operand back unchanged when no
+valid lookup contributed.
 """
 
 from __future__ import annotations
@@ -116,6 +128,93 @@ def _kernel_fp32(rows_ref, bags_ref, msk_ref, lr_ref, wgt_ref, w_ref,
         nw_ref[...] = w32.astype(nw_ref.dtype)
 
 
+def _accumulate_run(rows_ref, msk_ref, wgt_ref, dY_ref, acc_ref, flg_ref,
+                    i):
+    """Shared preamble of the stateful kernels: zero the VMEM accumulator
+    and the SMEM liveness flag at a run start, masked-accumulate this
+    lookup's weighted cotangent row, and OR its validity into the flag.
+    Returns (is_end, run-liveness-so-far is in ``flg_ref``)."""
+    is_start, is_end = _run_bounds(rows_ref, i)
+
+    @pl.when(is_start)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        flg_ref[0] = 0
+
+    g = dY_ref[...].astype(jnp.float32) * wgt_ref[i]
+    acc_ref[...] += jnp.where(msk_ref[i] != 0, g, 0.0)
+    flg_ref[0] = flg_ref[0] | msk_ref[i]
+    return is_end
+
+
+def _kernel_momentum(rows_ref, bags_ref, msk_ref, hp_ref, wgt_ref, w_ref,
+                     m_ref, dY_ref, nw_ref, nm_ref, acc_ref, flg_ref):
+    """fp32 weights + fp32 momentum row.  hp = [lr, beta, eps]."""
+    i = pl.program_id(0)
+    is_end = _accumulate_run(rows_ref, msk_ref, wgt_ref, dY_ref, acc_ref,
+                             flg_ref, i)
+
+    @pl.when(is_end)
+    def _apply():
+        live = flg_ref[0] != 0
+        m_old = m_ref[...].astype(jnp.float32)
+        m_new = hp_ref[1] * m_old + acc_ref[...]
+        w_old = w_ref[...].astype(jnp.float32)
+        w_new = w_old - hp_ref[0] * m_new
+        nm_ref[...] = jnp.where(live, m_new, m_old).astype(nm_ref.dtype)
+        nw_ref[...] = jnp.where(live, w_new, w_old).astype(nw_ref.dtype)
+
+
+def _kernel_adagrad(rows_ref, bags_ref, msk_ref, hp_ref, wgt_ref, w_ref,
+                    s_ref, dY_ref, nw_ref, ns_ref, acc_ref, flg_ref):
+    """fp32 weights + fp32 elementwise accumulator row.  hp = [lr, beta,
+    eps]; ``s += g^2``, ``w -= lr * g / (sqrt(s) + eps)`` per touched row
+    on the pre-reduced gradient."""
+    i = pl.program_id(0)
+    is_end = _accumulate_run(rows_ref, msk_ref, wgt_ref, dY_ref, acc_ref,
+                             flg_ref, i)
+
+    @pl.when(is_end)
+    def _apply():
+        live = flg_ref[0] != 0
+        acc = acc_ref[...]
+        s_old = s_ref[...].astype(jnp.float32)
+        s_new = s_old + acc * acc
+        w_old = w_ref[...].astype(jnp.float32)
+        w_new = w_old - hp_ref[0] * acc / (jnp.sqrt(s_new) + hp_ref[2])
+        ns_ref[...] = jnp.where(live, s_new, s_old).astype(ns_ref.dtype)
+        nw_ref[...] = jnp.where(live, w_new, w_old).astype(nw_ref.dtype)
+
+
+def _make_kernel_adagrad_rowwise(e_real: int):
+    """Row-wise Adagrad (Naumov et al. 2019): ONE accumulator scalar per
+    row — ``s += mean_e(g^2)``, ``w -= lr * g / (sqrt(s) + eps)``.  The
+    state operand is a (1, Ws) lane block whose lanes all carry the same
+    scalar (lane 0 is authoritative); ``e_real`` is the unpadded embedding
+    width so the mean ignores lane padding (padded dY lanes are zero)."""
+
+    def kernel(rows_ref, bags_ref, msk_ref, hp_ref, wgt_ref, w_ref, s_ref,
+               dY_ref, nw_ref, ns_ref, acc_ref, flg_ref):
+        i = pl.program_id(0)
+        is_end = _accumulate_run(rows_ref, msk_ref, wgt_ref, dY_ref,
+                                 acc_ref, flg_ref, i)
+
+        @pl.when(is_end)
+        def _apply():
+            live = flg_ref[0] != 0
+            acc = acc_ref[...]
+            s_old = s_ref[0, 0]
+            s_new = s_old + jnp.sum(acc * acc) / e_real
+            w_old = w_ref[...].astype(jnp.float32)
+            w_new = w_old - hp_ref[0] * acc / (jnp.sqrt(s_new) + hp_ref[2])
+            s_out = jnp.where(live, s_new, s_old)
+            ns_ref[...] = jnp.broadcast_to(s_out, ns_ref.shape
+                                           ).astype(ns_ref.dtype)
+            nw_ref[...] = jnp.where(live, w_new, w_old).astype(nw_ref.dtype)
+
+    return kernel
+
+
 def _row_specs(E, n_out):
     """(in_specs tail, out_specs) for the row-addressed operands.  The
     scalar-prefetch refs (rows, bags, msk, lr, wgt — lr/wgt live in SMEM,
@@ -190,6 +289,81 @@ def fused_update_fp32_pallas(W: jax.Array, sorted_rows: jax.Array,
         input_output_aliases={5: 0},
         interpret=interpret,
     )(sorted_rows, sorted_bags, sorted_msk, lr_arr, sorted_wgt, W, dY)[0]
+
+
+def _state_spec(Ws):
+    """Row-addressed (1, Ws) BlockSpec for a per-row optimizer-state slab —
+    the same ``rows[i]`` index map as the weight row, at the slab's own
+    width (E for momentum / elementwise Adagrad, the padded scalar lane
+    for row-wise Adagrad)."""
+    return pl.BlockSpec((1, Ws),
+                        lambda i, rows, bags, msk, hp, wgt: (rows[i], 0))
+
+
+def _stateful_call(kernel, w: jax.Array, s: jax.Array, sorted_rows,
+                   sorted_bags, sorted_msk, sorted_wgt, dY, hp,
+                   interpret: bool):
+    """Shared pallas_call plumbing for the (weights, state) kernels:
+    scalar-prefetch stream + two row-addressed aliased operands + the VMEM
+    accumulator and the SMEM run-liveness flag."""
+    M, E = w.shape
+    Ws = s.shape[1]
+    L = sorted_rows.shape[0]
+    row, bag, _ = _row_specs(E, 0)
+    st = _state_spec(Ws)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=(L,),
+            in_specs=[row, st, bag],
+            out_specs=[row, st],
+            scratch_shapes=[pltpu.VMEM((1, E), jnp.float32),
+                            pltpu.SMEM((1,), jnp.int32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((M, E), w.dtype),
+                   jax.ShapeDtypeStruct((M, Ws), s.dtype)],
+        # args: (rows, bags, msk, hp, wgt, w, s, dY) -> alias w/s -> outs
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(sorted_rows, sorted_bags, sorted_msk, hp, sorted_wgt, w, s, dY)
+
+
+def fused_update_momentum_pallas(w: jax.Array, mom: jax.Array, sorted_rows,
+                                 sorted_bags, sorted_msk, sorted_wgt, dY,
+                                 lr, beta, interpret: bool = False
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """Fused sparse-backward + heavy-ball momentum update, in place on
+    ``(w, mom)``: per touched row ``m = beta * m + sum(wgt * dY)``,
+    ``w -= lr * m``.  ``mom`` [M, E] fp32 rides the same sorted-index
+    scalar prefetch as the weight row; untouched rows' weights AND state
+    are never read or written."""
+    hp = jnp.stack([jnp.asarray(lr, jnp.float32),
+                    jnp.asarray(beta, jnp.float32),
+                    jnp.zeros((), jnp.float32)])
+    return _stateful_call(_kernel_momentum, w, mom, sorted_rows, sorted_bags,
+                          sorted_msk, sorted_wgt, dY, hp, interpret)
+
+
+def fused_update_adagrad_pallas(w: jax.Array, acc: jax.Array, sorted_rows,
+                                sorted_bags, sorted_msk, sorted_wgt, dY,
+                                lr, eps, rowwise: bool, e_real: int,
+                                interpret: bool = False
+                                ) -> tuple[jax.Array, jax.Array]:
+    """Fused sparse-backward + Adagrad update, in place on ``(w, acc)``.
+
+    ``rowwise=False``: ``acc`` [M, E] elementwise second-moment sum.
+    ``rowwise=True``: ``acc`` [M, Ws] per-row scalar lane (every lane
+    carries the row's accumulator; lane 0 authoritative) and the squared
+    gradient is averaged over ``e_real`` embedding lanes before the
+    accumulate — O(M) state instead of O(M*E)."""
+    hp = jnp.stack([jnp.asarray(lr, jnp.float32),
+                    jnp.zeros((), jnp.float32),
+                    jnp.asarray(eps, jnp.float32)])
+    kernel = (_make_kernel_adagrad_rowwise(e_real) if rowwise
+              else _kernel_adagrad)
+    return _stateful_call(kernel, w, acc, sorted_rows, sorted_bags,
+                          sorted_msk, sorted_wgt, dY, hp, interpret)
 
 
 def sort_lookups(tgt: jax.Array, valid: jax.Array | None, num_rows: int,

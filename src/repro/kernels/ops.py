@@ -15,7 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.embedding_bag import embedding_bag_pallas
-from repro.kernels.embedding_update import (fused_update_fp32_pallas,
+from repro.kernels.embedding_update import (fused_update_adagrad_pallas,
+                                            fused_update_fp32_pallas,
+                                            fused_update_momentum_pallas,
                                             fused_update_split_pallas,
                                             sort_lookups)
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -71,100 +73,109 @@ def embedding_bag(W, idx, bags_per_block: int = 8,
     return out[:N, :E]
 
 
-@partial(jax.jit, static_argnames=("pooling", "interpret"))
-def fused_embedding_update(hi, lo, tgt, dY, lr, valid=None, weights=None, *,
-                           pooling: int = 1, interpret: bool | None = None):
-    """Fused sparse-backward + Split-SGD-BF16 update (paper Alg. 3 + C5).
+# ---------------------------------------------------------------------------
+# Fused sparse row-optimizer update — ONE entry point for every registered
+# RowOptimizer (repro/optim/row.py), replacing the former 4-way
+# fused_embedding_update{,_fp32}{,_presorted} surface.  Nothing outside
+# repro.optim.row should call these: model/pipeline code goes through
+# ``RowOptimizer.apply_sparse``, which owns the store layout and the
+# reference-path parity contracts.
+# ---------------------------------------------------------------------------
 
-    ``hi``/``lo`` [M, E]: split table shard.  ``tgt`` [L] int32 local row
+ROW_KINDS = ("sgd", "split_sgd", "momentum", "adagrad", "adagrad_rowwise")
+
+
+def _call_row_kernel(kind, store, srows, sbags, smsk, swgt, dY, lr, beta,
+                     eps, e_real, interpret):
+    """Invoke the kind's Pallas entry on (already lane-aligned) slabs."""
+    if kind == "split_sgd":
+        nh, nl = fused_update_split_pallas(store["hi"], store["lo"], srows,
+                                           sbags, smsk, swgt, dY, lr,
+                                           interpret=interpret)
+        return {"hi": nh, "lo": nl}
+    if kind == "sgd":
+        return {"w": fused_update_fp32_pallas(store["w"], srows, sbags,
+                                              smsk, swgt, dY, lr,
+                                              interpret=interpret)}
+    if kind == "momentum":
+        nw, nm = fused_update_momentum_pallas(store["w"], store["mom"],
+                                              srows, sbags, smsk, swgt, dY,
+                                              lr, beta, interpret=interpret)
+        return {"w": nw, "mom": nm}
+    if kind in ("adagrad", "adagrad_rowwise"):
+        nw, ns = fused_update_adagrad_pallas(
+            store["w"], store["acc"], srows, sbags, smsk, swgt, dY, lr,
+            eps, kind == "adagrad_rowwise", e_real, interpret=interpret)
+        return {"w": nw, "acc": ns}
+    raise ValueError(f"unknown row-optimizer kind {kind!r}; "
+                     f"expected one of {ROW_KINDS}")
+
+
+def _dispatch_row_kernel(kind, store, srows, sbags, smsk, swgt, dY, lr,
+                         beta, eps, interpret):
+    """Pad every slab's lane dim to a 128 multiple (compiled path), run
+    the kind's Pallas kernel on the sorted stream, and slice the padding
+    back off per slab.  On the compiled TPU path a non-128-multiple width
+    is padded, which copies the slab and forfeits the O(unique_rows)
+    traffic — production shards keep E % 128 == 0 so the pad is a no-op
+    (the adagrad_rowwise [M, 1] scalar lane always pads; its per-row
+    traffic is one fp32 either way).  Interpret mode (the CPU validation
+    path) has no lane constraint and never pads."""
+    e_real = (store["hi"] if kind == "split_sgd" else store["w"]).shape[1]
+    if interpret:
+        return _call_row_kernel(kind, store, srows, sbags, smsk, swgt, dY,
+                                lr, beta, eps, e_real, True)
+    widths = {k: v.shape[1] for k, v in store.items()}
+    padded = {k: _pad_dim(v, 1, 128)[0] for k, v in store.items()}
+    dYp, _ = _pad_dim(dY, 1, 128)
+    out = _call_row_kernel(kind, padded, srows, sbags, smsk, swgt, dYp,
+                           lr, beta, eps, e_real, interpret)
+    return {k: v[:, :widths[k]] for k, v in out.items()}
+
+
+@partial(jax.jit, static_argnames=("kind", "pooling", "interpret"))
+def fused_row_update(kind, store, tgt, dY, lr, beta=0.0, eps=0.0,
+                     valid=None, weights=None, *, pooling: int = 1,
+                     interpret: bool | None = None):
+    """Fused sparse-backward + row-optimizer update (paper Alg. 3 + C5,
+    generalized to pluggable per-row state).
+
+    ``kind``: one of :data:`ROW_KINDS`.  ``store``: the optimizer's
+    EmbeddingStore dict — weight slab(s) (``hi``/``lo`` split-bf16 or
+    ``w`` fp32) plus zero or more per-row state slabs (``mom``/``acc``),
+    all row-aligned on the same shard layout.  ``tgt`` [L] int32 local row
     per flat lookup (out-of-range or ``valid == False`` entries contribute
     nothing).  ``dY`` [L // pooling, E]: bag cotangents — flat lookup ``i``
     reads ``dY[i // pooling]``; the [L, E] per-lookup gradient expansion of
     the reference path is never materialized.  ``weights`` [L] optional
-    per-lookup bag weights (weighted bags): each lookup's cotangent row is
-    scaled by its weight before the in-VMEM duplicate pre-reduction.
-    Returns the updated (hi, lo): only touched rows are read/written
-    (in-place via aliasing), and the unweighted result is bit-identical to
-    the jitted ``apply_rows_split_sgd`` reference.  The WEIGHTED
-    accumulation is FMA-contracted (one rounding per lookup instead of
-    two) and sits within 1 ulp/step of the pre-scaled reference, not
-    bitwise on it.  On the compiled TPU path E must be lane-aligned: a
-    non-128-multiple E is padded, which copies the shard and forfeits the
-    O(unique_rows) traffic — production shards keep E % 128 == 0 so the pad
-    is a no-op.  Interpret mode (the CPU validation path) has no lane
-    constraint and never pads.
-    """
+    per-lookup bag weights scaling each cotangent row before the in-VMEM
+    duplicate pre-reduction.  Returns the updated store: only touched rows
+    (weights AND state) are read/written, in place via aliasing.  The
+    unweighted ``split_sgd`` result is bit-identical to the jitted
+    ``apply_rows_split_sgd`` reference; the WEIGHTED accumulation is
+    FMA-contracted and sits within 1 ulp/step of the pre-scaled
+    reference."""
     interpret = _default_interpret() if interpret is None else interpret
-    M = hi.shape[0]
+    M = (store["hi"] if kind == "split_sgd" else store["w"]).shape[0]
     srows, sbags, smsk, swgt = sort_lookups(tgt, valid, M, pooling, weights)
-    if interpret:
-        return fused_update_split_pallas(hi, lo, srows, sbags, smsk, swgt,
-                                         dY, lr, interpret=True)
-    hip, E = _pad_dim(hi, 1, 128)
-    lop, _ = _pad_dim(lo, 1, 128)
-    dYp, _ = _pad_dim(dY, 1, 128)
-    nh, nl = fused_update_split_pallas(hip, lop, srows, sbags, smsk, swgt,
-                                       dYp, lr, interpret=interpret)
-    return nh[:, :E], nl[:, :E]
+    return _dispatch_row_kernel(kind, store, srows, sbags, smsk, swgt, dY,
+                                lr, beta, eps, interpret)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def fused_embedding_update_presorted(hi, lo, srows, sbags, smsk, swgt, dY,
-                                     lr, interpret: bool | None = None):
-    """:func:`fused_embedding_update` with the sort done ON THE HOST: the
-    caller supplies the ``(sorted_rows, sorted_bags, sorted_msk,
-    sorted_wgt)`` arrays of ``sort_lookups`` (produced per shard by
+@partial(jax.jit, static_argnames=("kind", "interpret"))
+def fused_row_update_presorted(kind, store, srows, sbags, smsk, swgt, dY,
+                               lr, beta=0.0, eps=0.0, *,
+                               interpret: bool | None = None):
+    """:func:`fused_row_update` with the sort done ON THE HOST: the caller
+    supplies the ``(sorted_rows, sorted_bags, sorted_msk, sorted_wgt)``
+    arrays of ``sort_lookups`` (produced per shard by
     ``repro.data.pipeline.presort_batch`` while the previous step runs on
     device) and the per-step XLA argsort disappears from the hot path.
-    Bit-identical to the sorting entry point — a stable sort's
-    permutation is unique, so host and device sorts agree exactly."""
+    Bit-identical to the sorting entry point — a stable sort's permutation
+    is unique, so host and device sorts agree exactly."""
     interpret = _default_interpret() if interpret is None else interpret
-    if interpret:
-        return fused_update_split_pallas(hi, lo, srows, sbags, smsk, swgt,
-                                         dY, lr, interpret=True)
-    hip, E = _pad_dim(hi, 1, 128)
-    lop, _ = _pad_dim(lo, 1, 128)
-    dYp, _ = _pad_dim(dY, 1, 128)
-    nh, nl = fused_update_split_pallas(hip, lop, srows, sbags, smsk, swgt,
-                                       dYp, lr, interpret=interpret)
-    return nh[:, :E], nl[:, :E]
-
-
-@partial(jax.jit, static_argnames=("interpret",))
-def fused_embedding_update_fp32_presorted(W, srows, sbags, smsk, swgt, dY,
-                                          lr, interpret: bool | None = None):
-    """Non-split variant of :func:`fused_embedding_update_presorted`."""
-    interpret = _default_interpret() if interpret is None else interpret
-    if interpret:
-        return fused_update_fp32_pallas(W, srows, sbags, smsk, swgt, dY, lr,
-                                        interpret=True)
-    Wp, E = _pad_dim(W, 1, 128)
-    dYp, _ = _pad_dim(dY, 1, 128)
-    out = fused_update_fp32_pallas(Wp, srows, sbags, smsk, swgt, dYp, lr,
-                                   interpret=interpret)
-    return out[:, :E]
-
-
-@partial(jax.jit, static_argnames=("pooling", "interpret"))
-def fused_embedding_update_fp32(W, tgt, dY, lr, valid=None, weights=None, *,
-                                pooling: int = 1,
-                                interpret: bool | None = None):
-    """Non-split variant of :func:`fused_embedding_update`:
-    ``W[r] -= lr * sum(wgt * dY of lookups hitting r)`` on touched rows
-    only.  Note the pre-reduced semantics (sum grads, one multiply) —
-    mathematically the scatter-add of ``bag_update`` but with a single
-    rounding per row."""
-    interpret = _default_interpret() if interpret is None else interpret
-    M = W.shape[0]
-    srows, sbags, smsk, swgt = sort_lookups(tgt, valid, M, pooling, weights)
-    if interpret:
-        return fused_update_fp32_pallas(W, srows, sbags, smsk, swgt, dY, lr,
-                                        interpret=True)
-    Wp, E = _pad_dim(W, 1, 128)
-    dYp, _ = _pad_dim(dY, 1, 128)
-    out = fused_update_fp32_pallas(Wp, srows, sbags, smsk, swgt, dYp, lr,
-                                   interpret=interpret)
-    return out[:, :E]
+    return _dispatch_row_kernel(kind, store, srows, sbags, smsk, swgt, dY,
+                                lr, beta, eps, interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

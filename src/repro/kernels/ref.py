@@ -43,14 +43,14 @@ def split_sgd_update(hi: jax.Array, lo: jax.Array, g: jax.Array, lr
     return split_fp32(w32)
 
 
-def fused_embedding_update(hi: jax.Array, lo: jax.Array, tgt: jax.Array,
+def fused_row_update_split(hi: jax.Array, lo: jax.Array, tgt: jax.Array,
                            dY: jax.Array, lr, pooling: int = 1
                            ) -> tuple[jax.Array, jax.Array]:
     """Oracle for kernels/embedding_update: expand dY to per-lookup rows,
     dedup duplicates via sort + segment-sum, exact-fp32 step on touched
     rows.  Run it JITTED when asserting bit-equality (XLA contracts the
     mul+sub of the update the same way in both paths only under jit)."""
-    from repro.core.sharded_embedding import apply_rows_split_sgd
+    from repro.optim.row import apply_rows_split_sgd
     grad = jnp.take(dY, jnp.arange(tgt.shape[0]) // pooling, axis=0)
     return apply_rows_split_sgd(hi, lo, tgt, grad, lr)
 

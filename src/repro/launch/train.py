@@ -20,7 +20,9 @@ in-process synthetic generator:
         --data-format packed --host-presort
 
 ``--host-presort`` moves the sparse-update index sort off the device and
-into the loader's worker thread (row mode; see repro/data/pipeline.py).
+into the loader's worker thread (row and table mode; see
+repro/data/pipeline.py), and ``--optimizer`` selects the sparse
+RowOptimizer of the embedding path (docs/optim.md).
 """
 
 from __future__ import annotations
@@ -131,6 +133,16 @@ def main():
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--optimizer", default=None,
+                    help="sparse RowOptimizer for the embedding path "
+                         "(repro/optim/row.py): sgd | split_sgd | momentum "
+                         "| adagrad_rowwise | adagrad; default keeps the "
+                         "arch's configured optimizer (split_sgd)")
+    ap.add_argument("--beta", type=float, default=None,
+                    help="momentum coefficient override for --optimizer")
+    ap.add_argument("--eps", type=float, default=None,
+                    help="adagrad denominator floor override for "
+                         "--optimizer")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--alpha", type=float, default=0.0,
                     help="index-skew for sparse streams (paper Fig. 8)")
@@ -147,8 +159,8 @@ def main():
                          "--data-dir is given, else 'synthetic'")
     ap.add_argument("--host-presort", action="store_true",
                     help="pre-sort the sparse-update index stream on the "
-                         "loader thread (row mode; drops the on-device "
-                         "sort from the step)")
+                         "loader thread (row and table mode; drops the "
+                         "on-device sort from the step)")
     ap.add_argument("--seed", type=int, default=0,
                     help="data order seed (reader epoch shuffle)")
     ap.add_argument("--weighted", action="store_true",
@@ -173,12 +185,21 @@ def main():
     if args.host_presort and args.data_format != "packed":
         raise SystemExit("--host-presort rides the packed loader's worker "
                          "thread; add --data-dir/--data-format packed")
+    if ((args.beta is not None or args.eps is not None)
+            and args.optimizer is None):
+        raise SystemExit("--beta/--eps tune a sparse optimizer; name one "
+                         "with --optimizer")
+    if args.optimizer is not None:
+        from repro.optim import row as row_optim
+        row_optim.get(args.optimizer)   # unknown name fails here, loudly
 
     if args.arch.startswith("dlrm"):
         from repro.core import dlrm as D
         from repro.data.synthetic import dlrm_stream
         cfg = dataclasses.replace(reduced_dlrm(args.arch, args.batch),
                                   lr=args.lr,
+                                  sparse_optimizer=args.optimizer,
+                                  opt_beta=args.beta, opt_eps=args.eps,
                                   microbatches=args.microbatches,
                                   host_presort=args.host_presort,
                                   weighted=args.weighted)
@@ -200,6 +221,8 @@ def main():
         from repro.data.synthetic import hybrid_stream
         mdef = dataclasses.replace(reduced_hybrid(args.arch, args.batch),
                                    lr=args.lr, emb_lr=args.lr,
+                                   sparse_optimizer=args.optimizer,
+                                   opt_beta=args.beta, opt_eps=args.eps,
                                    microbatches=args.microbatches,
                                    host_presort=args.host_presort,
                                    weighted=args.weighted)
@@ -232,6 +255,11 @@ def main():
                 "--microbatches applies to the recsys hybrid pipeline "
                 "(dlrm/fm/bst/sasrec/din); LM archs microbatch via "
                 "TransformerConfig.microbatch instead")
+        if args.optimizer is not None:
+            raise SystemExit(
+                "--optimizer selects the sparse embedding RowOptimizer of "
+                "the recsys hybrid step (dlrm/fm/bst/sasrec/din); LM archs "
+                "use the dense Split-SGD path")
         cfg, B, L = reduced_lm(args.arch, args.batch, args.seq)
         state = lm_steps.init_lm_state(key, cfg, mesh)
         step, structs, shardings = lm_steps.make_lm_train_step(

@@ -1,3 +1,4 @@
-from repro.optim import adamw, data_parallel, sgd, split_sgd  # noqa: F401
+from repro.optim import adamw, data_parallel, row, sgd, split_sgd  # noqa: F401
+from repro.optim.row import RowOptimizer, SparseStream  # noqa: F401
 from repro.optim.split_sgd import (combine_split, split_fp32,  # noqa: F401
                                    SplitParams)

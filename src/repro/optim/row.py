@@ -1,0 +1,386 @@
+"""Pluggable sparse RowOptimizer API — ONE update surface for the
+embedding path (SGD / Split-SGD / momentum / row-wise Adagrad / Adagrad).
+
+The paper's Split-SGD trick (Sect. V) makes the sparse update O(unique
+rows) per step; production DLRM training additionally wants momentum and
+row-wise Adagrad on the embeddings (Naumov et al. 2019), and the optimizer
+must stay FUSED and ROW-ADDRESSED — a dense optax-style update would
+materialize the O(M x E) state/gradient the whole design avoids.  This
+module is the plug-in point:
+
+* A :class:`RowOptimizer` owns (a) an **EmbeddingStore** — a flat dict
+  pytree of row-aligned slabs: the weight slab(s) (``hi``/``lo`` split
+  bf16+uint16, or ``w`` fp32) plus zero or more per-row optimizer-state
+  slabs (``mom`` [M, E] fp32, ``acc`` [M, E] or [M, 1] fp32), all sharded
+  by the same ``ShardedEmbeddingLayout`` row partition — and (b) a single
+  fused apply, :meth:`RowOptimizer.apply_sparse`, which every path
+  (reference scan, fused Pallas kernel, host-pre-sorted stream) goes
+  through.
+
+* The registry (:func:`register` / :func:`get` / :func:`make`) names the
+  built-ins: ``sgd``, ``split_sgd``, ``momentum``, ``adagrad_rowwise``,
+  ``adagrad``.  :func:`resolve` maps a model definition
+  (``HybridDef``/``DLRMConfig``: ``sparse_optimizer=`` + optional
+  ``opt_beta``/``opt_eps``, with the legacy ``split_sgd`` bool as
+  fallback sugar) to an optimizer instance.
+
+Determinism / parity contracts (tests/test_row_optim.py):
+
+* ``split_sgd``: fused == the jitted ``split_fp32``/``combine_split``
+  reference, BITWISE (inherited from the PR-1 kernel, pinned).
+* ``momentum(beta=0)``: bitwise == ``sgd`` on the fused path (both
+  pre-reduce duplicates; ``0 * m + acc`` is an exact fp32 identity).
+* ``adagrad`` / ``adagrad_rowwise`` first step from zero state == SGD
+  scaled by ``1 / (sqrt(acc_1) + eps)`` (per element / per row) to fp32
+  tolerance — one extra division per touched row vs the closed form.
+* State is touched ONLY for rows receiving at least one valid lookup —
+  padding/masked streams never decay momentum or inflate accumulators.
+
+Nothing outside this module calls the ``kernels.ops.fused_row_update*``
+entry points; checkpointing, serving snapshots and elastic restarts all
+see the store as an opaque dict of row-aligned slabs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.split_sgd import combine_split, split_fp32
+
+
+# ---------------------------------------------------------------------------
+# Reference helpers (the scan/oracle path; moved here from
+# core.sharded_embedding so the optimizer owns BOTH implementations)
+# ---------------------------------------------------------------------------
+
+def dedup_rows(tgt: jax.Array, upd: jax.Array, num_rows: int
+               ) -> tuple[jax.Array, jax.Array]:
+    """Sum duplicate targets.  Returns (rep [n], summed [n, E]); positions
+    for empty run segments get rep == num_rows (out of bounds -> the
+    subsequent scatter DROPS them, JAX's default OOB-scatter mode)."""
+    order = jnp.argsort(tgt)
+    sg = jnp.take(tgt, order)
+    su = jnp.take(upd, order, axis=0)
+    newseg = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              (sg[1:] != sg[:-1]).astype(jnp.int32)])
+    uid = jnp.cumsum(newseg)
+    n = tgt.shape[0]
+    summed = jax.ops.segment_sum(su, uid, num_segments=n)
+    rep = jnp.full((n,), num_rows, dtype=sg.dtype).at[uid].min(sg)
+    return rep, summed
+
+
+def dedup_targets(tgt: jax.Array, num_rows: int) -> jax.Array:
+    """Scalar-only half of :func:`dedup_rows`: the unique in-range targets
+    of ``tgt`` (one per sorted run), padded with ``num_rows`` fillers that
+    a subsequent scatter drops."""
+    order = jnp.argsort(tgt)
+    sg = jnp.take(tgt, order)
+    newseg = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              (sg[1:] != sg[:-1]).astype(jnp.int32)])
+    uid = jnp.cumsum(newseg)
+    return jnp.full(tgt.shape, num_rows, dtype=sg.dtype).at[uid].min(sg)
+
+
+def apply_rows_sgd(W_local: jax.Array, tgt: jax.Array, grad: jax.Array,
+                   lr) -> jax.Array:
+    """Plain scatter-add SGD on local rows (duplicates accumulate) —
+    Alg. 3 with XLA's deterministic scatter supplying the atomicity."""
+    return W_local.at[tgt].add((-lr * grad).astype(W_local.dtype))
+
+
+def apply_rows_split_sgd(hi: jax.Array, lo: jax.Array, tgt: jax.Array,
+                         grad: jax.Array, lr, fused: bool = False
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Exact-fp32 sparse SGD on split-bf16 storage (see
+    repro.optim.split_sgd).  ``tgt`` may contain duplicates.
+
+    ``fused=False`` (reference): segment_sum the per-row gradients, gather
+    the touched rows, combine/step/split, and scatter back — the functional
+    scatter copies the whole shard.  ``fused=True``: one Pallas pass
+    (:mod:`repro.kernels.embedding_update`) that pre-reduces duplicates in
+    VMEM and rewrites only the touched rows in place; bit-identical output."""
+    if fused:
+        from repro.kernels import ops
+        out = ops.fused_row_update("split_sgd", {"hi": hi, "lo": lo}, tgt,
+                                   grad, lr, pooling=1)
+        return out["hi"], out["lo"]
+    rep, summed = dedup_rows(tgt, grad, hi.shape[0])
+    safe = jnp.minimum(rep, hi.shape[0] - 1)   # gather side must be in-bounds
+    h = jnp.take(hi, safe, axis=0)
+    l = jnp.take(lo, safe, axis=0)
+    w32 = combine_split(h, l)
+    w32 = w32 - lr * summed
+    nh, nl = split_fp32(w32)
+    # rep == num_rows rows (empty segments) are dropped by the scatter.
+    return hi.at[rep].set(nh), lo.at[rep].set(nl)
+
+
+# ---------------------------------------------------------------------------
+# The update stream
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SparseStream:
+    """One sparse-update stream for :meth:`RowOptimizer.apply_sparse`.
+
+    Either the UNSORTED shaped stream — ``idx`` [..., P] LOCAL row ids,
+    ``dY`` [..., E] bag cotangents over the matching leading dims,
+    optional ``valid``/``weights`` in the layout of ``idx`` — or the
+    HOST-PRE-SORTED stream: ``presort = (sorted_rows, sorted_bags,
+    sorted_msk, sorted_wgt)`` [L] arrays (``repro.data.pipeline
+    .presort_batch`` / ``kernels.embedding_update.sort_lookups``) with
+    ``dY`` whose flattened leading dims give the bag table."""
+
+    idx: Optional[jax.Array] = None
+    dY: Optional[jax.Array] = None
+    valid: Optional[jax.Array] = None
+    weights: Optional[jax.Array] = None
+    presort: Optional[tuple] = None
+
+
+# ---------------------------------------------------------------------------
+# RowOptimizer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RowOptimizer:
+    """A sparse embedding optimizer: store layout + one fused apply.
+
+    ``kind`` selects the kernel/reference math; ``split`` says whether the
+    master weights live as (hi bf16, lo uint16) or one fp32 ``w`` slab;
+    ``state`` lists the per-row state slabs as (key, width) pairs, width 0
+    meaning the embedding dim E (``mom``/``acc`` rows) and any other value
+    a fixed per-row lane count (1 = the row-wise Adagrad scalar).
+    Hashable and jit-static-friendly."""
+
+    name: str
+    kind: str
+    split: bool = False
+    state: tuple = ()            # ((slab_key, width), ...); width 0 => E
+    beta: float = 0.0            # momentum coefficient
+    eps: float = 1e-8            # adagrad denominator floor
+
+    # ---------------------------------------------------------- store --
+    @property
+    def weight_keys(self) -> tuple:
+        return ("hi", "lo") if self.split else ("w",)
+
+    @property
+    def state_keys(self) -> tuple:
+        return tuple(k for k, _ in self.state)
+
+    def store_struct(self, rows: int, E: int) -> dict:
+        """ShapeDtypeStructs of the EmbeddingStore for a [rows, E] slab —
+        weights first, then state, all row-aligned (shard the leading dim
+        by the embedding layout)."""
+        out = ({"hi": jax.ShapeDtypeStruct((rows, E), jnp.bfloat16),
+                "lo": jax.ShapeDtypeStruct((rows, E), jnp.uint16)}
+               if self.split else
+               {"w": jax.ShapeDtypeStruct((rows, E), jnp.float32)})
+        for key, width in self.state:
+            out[key] = jax.ShapeDtypeStruct((rows, width or E), jnp.float32)
+        return out
+
+    def init_store(self, W: jax.Array) -> dict:
+        """EmbeddingStore from fp32 master weights [rows, E]; state slabs
+        zero-initialized."""
+        rows, E = W.shape
+        if self.split:
+            hi, lo = split_fp32(W)
+            out = {"hi": hi, "lo": lo}
+        else:
+            out = {"w": W.astype(jnp.float32)}
+        for key, width in self.state:
+            out[key] = jnp.zeros((rows, width or E), jnp.float32)
+        return out
+
+    def fwd_weights(self, store: dict) -> jax.Array:
+        """The slab the forward/backward passes read (bf16 hi or fp32 w)."""
+        return store["hi"] if self.split else store["w"]
+
+    def materialize_fp32(self, store: dict) -> jax.Array:
+        """Exact fp32 master weights (eval / serving snapshots)."""
+        if self.split:
+            return combine_split(store["hi"], store["lo"])
+        return store["w"]
+
+    # ---------------------------------------------------------- apply --
+    def apply_sparse(self, store: dict, stream: SparseStream, lr, *,
+                     fused: bool = False,
+                     interpret: Optional[bool] = None) -> dict:
+        """THE sparse update dispatcher: new store from one stream.
+
+        ``fused=True`` (and always for pre-sorted streams) runs the Pallas
+        fused kernel — per-row VMEM pre-reduction, weights AND state
+        updated in place on the touched rows only.  ``fused=False`` runs
+        the reference math (scatter / dedup + functional scatter) with
+        identical optimizer semantics; the split path is bit-identical
+        between the two, the fp32 paths match to the documented
+        pre-reduction rounding."""
+        from repro.kernels import ops
+        if stream.presort is not None:
+            dY = stream.dY
+            dYr = dY.reshape(-1, dY.shape[-1]) if dY.ndim != 2 else dY
+            return ops.fused_row_update_presorted(
+                self.kind, store, *stream.presort, dYr, lr,
+                self.beta, self.eps, interpret=interpret)
+        idx, dY = stream.idx, stream.dY
+        P = idx.shape[-1]
+        E = dY.shape[-1]
+        if fused:
+            tgt = idx.reshape(-1)
+            val = None if stream.valid is None else stream.valid.reshape(-1)
+            w = (None if stream.weights is None
+                 else stream.weights.reshape(-1))
+            dYr = dY.reshape(-1, E)
+            return ops.fused_row_update(self.kind, store, tgt, dYr, lr,
+                                        self.beta, self.eps, valid=val,
+                                        weights=w, pooling=P,
+                                        interpret=interpret)
+        # reference: expand dY to per-lookup grads (the thing the fused
+        # kernel never materializes), zero the masked entries, and apply
+        # the per-kind row math
+        grad = jnp.broadcast_to(dY[..., None, :],
+                                idx.shape + (E,)).astype(jnp.float32)
+        if stream.weights is not None:
+            grad = grad * stream.weights[..., None].astype(jnp.float32)
+        valid = stream.valid
+        if valid is not None:
+            grad = jnp.where(valid[..., None], grad, 0.0)
+        grad = grad.reshape(-1, E)
+        num_rows = self.fwd_weights(store).shape[0]
+        if self.kind in ("sgd", "split_sgd"):
+            # legacy contract: masked lookups become zero-grad entries on
+            # row 0 (a bit-exact no-op for the stateless kinds)
+            tgt = (idx if valid is None
+                   else jnp.where(valid, idx, 0)).reshape(-1)
+        else:
+            # stateful kinds must DROP masked lookups entirely (a zero
+            # gradient still decays momentum / rewrites the accumulator):
+            # key them out of range so dedup's scatter drops the segment
+            tgt = (idx if valid is None
+                   else jnp.where(valid, idx, num_rows)).reshape(-1)
+        return self._apply_rows_ref(store, tgt, grad, lr)
+
+    def _apply_rows_ref(self, store: dict, tgt: jax.Array, grad: jax.Array,
+                        lr) -> dict:
+        """Reference row math on a flat (tgt [L], grad [L, E]) stream."""
+        if self.kind == "sgd":
+            return {"w": apply_rows_sgd(store["w"], tgt, grad, lr)}
+        if self.kind == "split_sgd":
+            nh, nl = apply_rows_split_sgd(store["hi"], store["lo"], tgt,
+                                          grad, lr)
+            return {"hi": nh, "lo": nl}
+        rep, summed = dedup_rows(tgt, grad, store["w"].shape[0])
+        return self.apply_rows_reduced(store, rep, summed, lr)
+
+    def apply_rows_reduced(self, store: dict, rep: jax.Array,
+                           summed: jax.Array, lr) -> dict:
+        """Stateful reference transition on a PRE-REDUCED stream: ``rep``
+        [n] unique touched rows (``num_rows`` fillers are dropped by the
+        scatter), ``summed`` [n, E] their per-row gradient sums.  Applied
+        exactly ONCE per row per step — the contract a batch-chunked
+        caller must preserve by accumulating gradients across chunks
+        first (``se.apply_update``) instead of re-running the momentum
+        decay / Adagrad accumulate per chunk."""
+        W = store["w"]
+        M = W.shape[0]
+        safe = jnp.minimum(rep, M - 1)
+        w_rows = jnp.take(W, safe, axis=0)
+        if self.kind == "momentum":
+            m_rows = jnp.take(store["mom"], safe, axis=0)
+            m_new = self.beta * m_rows + summed
+            w_new = w_rows - lr * m_new
+            return {"w": W.at[rep].set(w_new),
+                    "mom": store["mom"].at[rep].set(m_new)}
+        if self.kind == "adagrad":
+            s_rows = jnp.take(store["acc"], safe, axis=0)
+            s_new = s_rows + summed * summed
+            w_new = w_rows - lr * summed / (jnp.sqrt(s_new) + self.eps)
+            return {"w": W.at[rep].set(w_new),
+                    "acc": store["acc"].at[rep].set(s_new)}
+        if self.kind == "adagrad_rowwise":
+            s_rows = jnp.take(store["acc"], safe, axis=0)       # [n, 1]
+            ms = jnp.mean(summed * summed, axis=1, keepdims=True)
+            s_new = s_rows + ms
+            w_new = w_rows - lr * summed / (jnp.sqrt(s_new) + self.eps)
+            return {"w": W.at[rep].set(w_new),
+                    "acc": store["acc"].at[rep].set(s_new)}
+        raise ValueError(f"unknown row-optimizer kind {self.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, RowOptimizer] = {}
+
+
+def register(opt: RowOptimizer) -> RowOptimizer:
+    if opt.name in _REGISTRY:
+        raise ValueError(f"row optimizer {opt.name!r} already registered")
+    _REGISTRY[opt.name] = opt
+    return opt
+
+
+def names() -> tuple:
+    return tuple(_REGISTRY)
+
+
+def get(name: str, *, beta: Optional[float] = None,
+        eps: Optional[float] = None) -> RowOptimizer:
+    """Look a registered optimizer up by name, optionally overriding its
+    hyperparameters."""
+    try:
+        opt = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown sparse optimizer {name!r}; registered: "
+                         f"{sorted(_REGISTRY)}") from None
+    repl = {}
+    if beta is not None:
+        repl["beta"] = float(beta)
+    if eps is not None:
+        repl["eps"] = float(eps)
+    return dataclasses.replace(opt, **repl) if repl else opt
+
+
+def make(spec: Any, *, beta: Optional[float] = None,
+         eps: Optional[float] = None) -> RowOptimizer:
+    """Coerce a config value (name string or RowOptimizer) to an instance."""
+    if isinstance(spec, RowOptimizer):
+        repl = {}
+        if beta is not None:
+            repl["beta"] = float(beta)
+        if eps is not None:
+            repl["eps"] = float(eps)
+        return dataclasses.replace(spec, **repl) if repl else spec
+    return get(str(spec), beta=beta, eps=eps)
+
+
+def resolve(mdef: Any) -> RowOptimizer:
+    """RowOptimizer for a model definition (``HybridDef``, ``DLRMConfig``,
+    or anything with the same fields).  ``sparse_optimizer`` (name or
+    instance) wins; a falsy value falls back to the legacy ``split_sgd``
+    bool (True -> 'split_sgd', False -> 'sgd').  ``opt_beta``/``opt_eps``
+    override the registered defaults."""
+    spec = getattr(mdef, "sparse_optimizer", None)
+    if not spec:
+        spec = "split_sgd" if getattr(mdef, "split_sgd", True) else "sgd"
+    return make(spec, beta=getattr(mdef, "opt_beta", None),
+                eps=getattr(mdef, "opt_eps", None))
+
+
+register(RowOptimizer(name="sgd", kind="sgd", split=False))
+register(RowOptimizer(name="split_sgd", kind="split_sgd", split=True))
+register(RowOptimizer(name="momentum", kind="momentum", split=False,
+                      state=(("mom", 0),), beta=0.9))
+register(RowOptimizer(name="adagrad_rowwise", kind="adagrad_rowwise",
+                      split=False, state=(("acc", 1),), eps=1e-8))
+register(RowOptimizer(name="adagrad", kind="adagrad", split=False,
+                      state=(("acc", 0),), eps=1e-8))

@@ -11,7 +11,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import embedding as E
 from repro.core.interaction import dot_interaction, interaction_output_dim
-from repro.core.sharded_embedding import dedup_rows
+from repro.optim.row import dedup_rows
 
 RNG = np.random.default_rng(0)
 

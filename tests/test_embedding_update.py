@@ -11,9 +11,9 @@ import numpy as np
 import pytest
 
 from repro.core import embedding as E
-from repro.core.sharded_embedding import apply_rows_split_sgd
 from repro.kernels import ops, ref
 from repro.kernels import embedding_update as EU
+from repro.optim.row import apply_rows_split_sgd
 from repro.optim.split_sgd import combine_split, split_fp32
 
 RNG = np.random.default_rng(7)
@@ -22,6 +22,21 @@ RNG = np.random.default_rng(7)
 # (XLA contracts the mul+sub of the update identically in both paths;
 # the eager op-by-op dispatch of the same expression does not contract)
 _ref_split = jax.jit(apply_rows_split_sgd)
+
+
+def _fused_split(hi, lo, tgt, dY, lr, valid=None, weights=None, pooling=1):
+    """Kernel-level helper: the split_sgd kind of the collapsed
+    ``fused_row_update`` surface (the former fused_embedding_update)."""
+    out = ops.fused_row_update("split_sgd", {"hi": hi, "lo": lo}, tgt, dY,
+                               lr, valid=valid, weights=weights,
+                               pooling=pooling, interpret=True)
+    return out["hi"], out["lo"]
+
+
+def _fused_fp32(W, tgt, dY, lr, valid=None, weights=None, pooling=1):
+    return ops.fused_row_update("sgd", {"w": W}, tgt, dY, lr, valid=valid,
+                                weights=weights, pooling=pooling,
+                                interpret=True)["w"]
 
 
 def _mk(M, E_, L, P, dup_vocab=None, seed=0):
@@ -39,8 +54,7 @@ def _mk(M, E_, L, P, dup_vocab=None, seed=0):
 def test_fused_split_bit_exact_duplicate_heavy(M, E_, L, P):
     """Duplicate-heavy zipf-like targets: fused == jitted reference, bitwise."""
     W, hi, lo, tgt, dY = _mk(M, E_, L, P, dup_vocab=max(2, M // 10))
-    nh, nl = ops.fused_embedding_update(hi, lo, tgt, dY, 0.05, pooling=P,
-                                        interpret=True)
+    nh, nl = _fused_split(hi, lo, tgt, dY, 0.05, pooling=P)
     grad = jnp.take(dY, jnp.arange(L) // P, axis=0)
     rh, rl = _ref_split(hi, lo, tgt, grad, 0.05)
     np.testing.assert_array_equal(np.asarray(combine_split(nh, nl)),
@@ -65,8 +79,7 @@ def test_duplicate_accumulation_explicit():
     hi, lo = split_fp32(W)
     tgt = jnp.full((12,), 3, jnp.int32)
     dY = jnp.asarray(RNG.standard_normal((12, E_)), jnp.float32)
-    nh, nl = ops.fused_embedding_update(hi, lo, tgt, dY, 0.5, pooling=1,
-                                        interpret=True)
+    nh, nl = _fused_split(hi, lo, tgt, dY, 0.5, pooling=1)
     got = np.asarray(combine_split(nh, nl))
     want = np.asarray(W).copy()
     acc = np.zeros(E_, np.float32)
@@ -81,7 +94,7 @@ def test_duplicate_accumulation_explicit():
 
 def test_untouched_rows_never_modified():
     W, hi, lo, tgt, dY = _mk(500, 16, 32, 1, dup_vocab=20)
-    nh, nl = ops.fused_embedding_update(hi, lo, tgt, dY, 0.1, interpret=True)
+    nh, nl = _fused_split(hi, lo, tgt, dY, 0.1)
     got = np.asarray(combine_split(nh, nl))
     untouched = np.setdiff1d(np.arange(500), np.asarray(tgt))
     np.testing.assert_array_equal(got[untouched], np.asarray(W)[untouched])
@@ -96,8 +109,7 @@ def test_ragged_padded_bags_masked_out():
     tgt = jnp.asarray(RNG.integers(0, M, (L,)), jnp.int32)
     dY = jnp.asarray(RNG.standard_normal((L, E_)), jnp.float32)
     valid = jnp.asarray(RNG.integers(0, 2, (L,)).astype(bool))
-    nh, nl = ops.fused_embedding_update(hi, lo, tgt, dY, 0.1, valid=valid,
-                                        interpret=True)
+    nh, nl = _fused_split(hi, lo, tgt, dY, 0.1, valid=valid)
     # reference on the VALID subset only (invalid -> zero grads at tgt 0)
     grad = jnp.where(valid[:, None], dY, 0.0)
     rh, rl = _ref_split(hi, lo, jnp.where(valid, tgt, 0), grad, 0.1)
@@ -105,8 +117,7 @@ def test_ragged_padded_bags_masked_out():
                                   np.asarray(combine_split(rh, rl)))
     # out-of-range targets are dropped, not clamped into real rows
     tgt_oob = jnp.where(valid, tgt, M + 1000)
-    nh2, nl2 = ops.fused_embedding_update(hi, lo, tgt_oob, dY, 0.1,
-                                          interpret=True)
+    nh2, nl2 = _fused_split(hi, lo, tgt_oob, dY, 0.1)
     np.testing.assert_array_equal(np.asarray(combine_split(nh2, nl2)),
                                   np.asarray(combine_split(rh, rl)))
 
@@ -114,8 +125,7 @@ def test_ragged_padded_bags_masked_out():
 def test_all_invalid_is_noop():
     W, hi, lo, tgt, dY = _mk(30, 8, 16, 1)
     valid = jnp.zeros((16,), bool)
-    nh, nl = ops.fused_embedding_update(hi, lo, tgt, dY, 0.1, valid=valid,
-                                        interpret=True)
+    nh, nl = _fused_split(hi, lo, tgt, dY, 0.1, valid=valid)
     np.testing.assert_array_equal(np.asarray(combine_split(nh, nl)),
                                   np.asarray(W))
 
@@ -123,8 +133,7 @@ def test_all_invalid_is_noop():
 def test_fused_fp32_variant_matches_dedup_semantics():
     M, E_, L, P = 80, 8, 60, 3
     W, _, _, tgt, dY = _mk(M, E_, L, P, dup_vocab=11)
-    out = ops.fused_embedding_update_fp32(W, tgt, dY, 0.1, pooling=P,
-                                          interpret=True)
+    out = _fused_fp32(W, tgt, dY, 0.1, pooling=P)
     want = np.asarray(W).copy()
     dyn = np.asarray(dY)
     for r in np.unique(np.asarray(tgt)):
@@ -190,8 +199,7 @@ def test_weighted_split_matches_scaled_reference():
     M, E_, L = 60, 16, 48
     W, hi, lo, tgt, dY = _mk(M, E_, L, 1, dup_vocab=7, seed=3)
     w = jnp.asarray(RNG.standard_normal(L).astype(np.float32))
-    nh, nl = ops.fused_embedding_update(hi, lo, tgt, dY, 0.05, weights=w,
-                                        pooling=1, interpret=True)
+    nh, nl = _fused_split(hi, lo, tgt, dY, 0.05, weights=w, pooling=1)
     rh, rl = _ref_split(hi, lo, tgt, dY * w[:, None], 0.05)
     np.testing.assert_allclose(np.asarray(combine_split(nh, nl)),
                                np.asarray(combine_split(rh, rl)),

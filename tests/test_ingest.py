@@ -196,9 +196,42 @@ def test_presort_matches_device_sort_lookups():
         assert np.array_equal(np.asarray(sw), ps["psort_wgt"][s])
 
 
-def test_presort_rejects_table_mode():
+def test_presort_table_mode_folds_padded_permute():
+    """Table-mode host pre-sort (ROADMAP leftover): presort_batch folds
+    the padded-slot permute in and matches the device-side
+    permute_indices + sort_lookups stream, bitwise, per model shard."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.kernels.embedding_update import sort_lookups
     layout = se.make_layout(EmbeddingSpec(TABLES, 8), 4, "table")
-    with pytest.raises(ValueError, match="row"):
+    rng = np.random.default_rng(1)
+    idx = np.stack([rng.integers(0, m, (16, 3)) for m in TABLES],
+                   1).astype(np.int32)
+    wgt = rng.uniform(0.5, 1.5, idx.shape).astype(np.float32)
+    ps = presort_batch(layout, idx, wgt)
+    K, R = layout.slots_per_shard, layout.rows_per_shard
+    assert ps["psort_rows"].shape == (4, 16 * K * 3)
+    # device side: permute to padded order (dummy slots -> idx 0 / wgt 0),
+    # slice this shard's slots, add the slot offsets, sort
+    padded = np.asarray(se.permute_indices(layout, jnp.asarray(idx)))
+    wp = wgt[:, np.where(layout.padded_slots >= 0, layout.padded_slots, 0)]
+    wp[:, layout.padded_slots < 0] = 0.0
+    off = np.asarray(layout.slot_local_offsets, np.int32).reshape(4, K)
+    for s in range(4):
+        local = (padded[:, s * K:(s + 1) * K] + off[s][None, :, None])
+        sr, sb, sm, sw = sort_lookups(
+            jnp.asarray(local.reshape(-1)), None, R, 3,
+            jnp.asarray(wp[:, s * K:(s + 1) * K].reshape(-1)))
+        assert np.array_equal(np.asarray(sr), ps["psort_rows"][s])
+        assert np.array_equal(np.asarray(sb), ps["psort_bags"][s])
+        assert np.array_equal(np.asarray(sm), ps["psort_msk"][s])
+        assert np.array_equal(np.asarray(sw), ps["psort_wgt"][s])
+
+
+def test_presort_rejects_unknown_mode():
+    import dataclasses as dc
+    layout = dc.replace(_layout(4), mode="diagonal")
+    with pytest.raises(ValueError, match="mode"):
         presort_batch(layout, np.zeros((4, 8, 3), np.int32))
 
 

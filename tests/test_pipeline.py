@@ -113,6 +113,7 @@ def test_m1_bit_identical_to_legacy_monolithic_step():
     from jax.sharding import PartitionSpec as P
     from repro.core import hybrid as H, dlrm as D
     from repro.optim import data_parallel as dp
+    from repro.optim import row as row_optim
 
     def legacy_train_step(cfg, mesh):
         mdef = D.as_hybrid_def(cfg)
@@ -136,10 +137,11 @@ def test_m1_bit_identical_to_legacy_monolithic_step():
             (loss, (g_dense, d_emb)) = jax.value_and_grad(
                 loss_fn, argnums=(0, 1))(state['dense']['hi'], emb_out)
             dY = se.gather_dY(layout, d_emb, emb_ax, replica_ax)
-            hi2, lo2 = se.apply_update_scan(
-                layout, (emb_store['hi'], emb_store['lo']), idx, dY,
-                cfg.lr, emb_ax, split=True, replica_axes=replica_ax,
-                fused=False)
+            new_emb = se.apply_update(
+                layout, {'hi': emb_store['hi'], 'lo': emb_store['lo']},
+                row_optim.get('split_sgd'), idx, dY, cfg.lr, emb_ax,
+                replica_axes=replica_ax, fused=False)
+            hi2, lo2 = new_emb['hi'], new_emb['lo']
             st = dp.DPState(hi=state['dense']['hi'],
                             lo_shard=state['dense']['lo'],
                             mom_shard=None, err_shard=state['dense']['err'])

@@ -115,16 +115,17 @@ def test_fused_row_update_bit_exact(vocab, n, seed):
     """Property: the fused Pallas sparse update (kernels/embedding_update)
     == the jitted dedup + combine_split reference, bitwise, for any
     duplicate structure (vocab << n forces heavy duplication)."""
-    from repro.core.sharded_embedding import apply_rows_split_sgd
     from repro.kernels import ops
+    from repro.optim.row import apply_rows_split_sgd
     rng = np.random.default_rng(seed)
     E = 8
     w = jnp.asarray(rng.standard_normal((64, E)), jnp.float32)
     hi, lo = S.split_fp32(w)
     tgt = jnp.asarray(rng.integers(0, vocab, (n,)), jnp.int32)
     grad = jnp.asarray(rng.standard_normal((n, E)), jnp.float32)
-    nh, nl = ops.fused_embedding_update(hi, lo, tgt, grad, 0.05,
-                                        interpret=True)
+    out = ops.fused_row_update("split_sgd", {"hi": hi, "lo": lo}, tgt,
+                               grad, 0.05, interpret=True)
+    nh, nl = out["hi"], out["lo"]
     rh, rl = jax.jit(apply_rows_split_sgd)(hi, lo, tgt, grad, 0.05)
     np.testing.assert_array_equal(
         np.asarray(S.combine_split(nh, nl)),
