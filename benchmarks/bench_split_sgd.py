@@ -16,6 +16,11 @@ interpret-mode kernel on a tiny shard; ``all`` sweeps the registry.
 ``--smoke`` skips the 120-step convergence study (the CI sweep).  The
 fused kernel runs in Pallas interpret mode on CPU — its wall-clock is an
 emulation artifact; the bytes model is the TPU-relevant number.
+
+The JSON write is a KEY-STABLE MERGE into any existing file
+(:func:`merge_sections`): partial runs update only the sections they
+computed, so `benchmarks/check_bench.py` can diff the artifact against
+the committed baseline without one sweep clobbering another's rows.
 """
 
 import argparse
@@ -67,20 +72,23 @@ def optimizer_bytes_row(name: str, U: int, E: int, NB: int, L: int) -> dict:
     """Roofline bytes/step of one registered RowOptimizer's FUSED update:
     touched weight rows in+out, per-row state slab in+out (the second
     row-addressed operand of kernels/embedding_update.py), dY once, and
-    the int32 index sort.  State traffic per touched row: momentum /
-    elementwise adagrad E fp32 lanes, row-wise adagrad ONE fp32 scalar,
-    the stateless kinds zero."""
+    the int32 index sort.  State traffic per touched row follows each
+    slab's WIDTH and DTYPE: momentum / elementwise adagrad E lanes (fp32,
+    or 2-byte bf16-hi for the compressed ``*_bf16`` kinds — half the
+    state bytes), row-wise adagrad ONE fp32 scalar, the stateless kinds
+    zero."""
     from repro.optim import row as row_optim
     opt = row_optim.get(name)
-    state_elems = sum((w or E) for _, w in opt.state)
+    state_bytes = sum((w or E) * dt.itemsize
+                      for _, w, dt in opt.state_slabs())
     b = {
         "touched_rows_rw": 2 * U * E * 4,
-        "state_rows_rw": 2 * U * state_elems * 4,
+        "state_rows_rw": 2 * U * state_bytes,
         "dY_read": NB * E * 4,
         "index_sort": 3 * L * 4,
     }
     return {"bytes_per_step": sum(b.values()), "bytes_breakdown": b,
-            "state_bytes_per_row": state_elems * 4,
+            "state_bytes_per_row": state_bytes,
             "touches": "O(unique_rows)"}
 
 
@@ -189,6 +197,23 @@ def embedding_update_bench(modes=("reference", "fused"),
     return result
 
 
+def merge_sections(old, new):
+    """KEY-STABLE deep merge of a fresh bench result into the existing
+    JSON: every dict level merges per key (``optimizers`` per optimizer
+    name, ``reference``/``fused`` per metric), so a partial run — a
+    ``--smoke`` sweep, a single ``--optimizer`` row, a ``--fused``-only
+    timing — updates exactly the keys it computed and never drops the
+    sections it didn't.  This is what lets the CI bench-regression gate
+    (benchmarks/check_bench.py) diff the file against the committed
+    baseline without spurious section-loss failures."""
+    for k, v in new.items():
+        if isinstance(v, dict) and isinstance(old.get(k), dict):
+            merge_sections(old[k], v)
+        else:
+            old[k] = v
+    return old
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     g = ap.add_mutually_exclusive_group()
@@ -205,6 +230,13 @@ def main(argv=None):
                          "the bytes/step roofline rows (the CI sweep)")
     ap.add_argument("--json", default="BENCH_embedding_update.json",
                     help="where to write the update-bench JSON")
+    ap.add_argument("--fresh", action="store_true",
+                    help="write the JSON from scratch instead of the "
+                         "key-stable merge — use when REFRESHING a "
+                         "committed baseline, so sections a removed/"
+                         "renamed optimizer no longer emits actually "
+                         "disappear (the merge would carry them forever "
+                         "and the CI gate would flag them as lost)")
     args, _ = ap.parse_known_args(argv)
 
     if not args.smoke:
@@ -232,7 +264,13 @@ def main(argv=None):
         for k in ("us_measured", "us_measured_interpret"):
             if k in res[path]:
                 print(f"embed_update_{path}_{k},{res[path][k]:.1f},us")
-    Path(args.json).write_text(json.dumps(res, indent=2))
+    out_path = Path(args.json)
+    if out_path.exists() and not args.fresh:
+        try:
+            res = merge_sections(json.loads(out_path.read_text()), res)
+        except json.JSONDecodeError:
+            pass          # corrupt/absent previous file: write fresh
+    out_path.write_text(json.dumps(res, indent=2))
     print(f"# wrote {args.json}")
 
 

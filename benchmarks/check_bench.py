@@ -1,0 +1,218 @@
+"""CI bench-regression gate: diff fresh smoke-run BENCH_*.json artifacts
+against the committed baselines and FAIL on regression, instead of only
+uploading artifacts for a human to eyeball.
+
+    python benchmarks/check_bench.py --baseline-dir ci-baselines \
+        [--candidate-dir .] [--files "BENCH_*.json"] [--tol 8.0]
+
+Rules, per leaf key (recursive walk over each JSON pair):
+
+* **model keys are EXACT** — anything structural or analytically derived
+  (``*bytes*``, counts, dims, config, strings, ints, booleans) must match
+  bit-for-bit: the bytes/step roofline is the acceptance metric of the
+  fused-update work and must never drift silently.  Floats that are pure
+  functions of model keys (``model_speedup``) are compared to 1e-9
+  relative.
+* **measured keys get a tolerance band** — wall-clock / throughput /
+  overlap numbers (``us_*``, ``*_mb_s``, ``*_s``, ``overlap*``, ...)
+  vary with the runner; a COST key (time) fails only when the candidate
+  is more than ``--tol`` x the baseline, a RATE key (MB/s, samples/s,
+  overlap fraction) only when it is less than baseline / ``--tol``.  The
+  default band is deliberately wide (8x): the gate is after order-of-
+  magnitude regressions and lost sections, not scheduler noise.
+* **compiler-derived volumes get a two-sided band** — ``flops`` /
+  ``collective_bytes`` / ``collective_counts`` come out of the compiled
+  HLO: stable on one jax/XLA version, allowed to drift across versions
+  (CI installs latest), but a band escape catches a collective that
+  disappears or explodes.
+* **derived slack metrics are informational** — ``wait_ms_per_batch`` /
+  ``tail_ms`` are differences of measured times (``max(0, prep -
+  compute)``-shaped): a slowdown well inside the inputs' own band
+  amplifies into an unbounded ratio on a near-zero baseline, so they are
+  reported in the artifacts but not ratio-gated (the underlying
+  prep/compute keys still are).
+* **missing keys fail** — a section present in the baseline but absent
+  from the candidate means a bench stopped emitting it (exactly the
+  section-clobbering bug the key-stable merge in bench_split_sgd.py
+  fixed); extra candidate keys are fine (new rows land before the
+  baseline is refreshed).
+
+Exit code 0 = gate passed; 1 = regressions (all of them are listed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+# key classification, on the FULL path (lowercased).  Order matters: rate
+# before cost (``mb_per_s`` must not fall into the trailing ``_s`` cost
+# pattern), band before both (compiler-derived volumes carry time-free
+# names).  Rate patterns are suffix-anchored so time-valued keys that
+# merely CONTAIN a rate word (``modeled_overlap_ms``) still classify as
+# cost via their time-unit suffix.
+RATE_RE = re.compile(
+    r"(mb_s$|_mbs$|per_s$|throughput|overlap_fraction$|efficiency$|speedup_measured$)"
+)
+COST_RE = re.compile(r"(^|_)(us|ms|s|sec|seconds|wall|time)(_|$)|us_measured")
+# compiler/runtime-derived volumes: stable on one jax/XLA version but
+# allowed to drift across versions (CI installs latest) — two-sided band
+BAND_RE = re.compile(r"collective_bytes|collective_counts|/coll/|flops")
+# analytically derived from model keys: exact up to float repr
+# (modeled_*_ms values are functions of MEASURED times — the cost class
+# catches them via their _ms suffix)
+DERIVED_RE = re.compile(r"model_speedup")
+# derived SLACK metrics (wait ~= max(0, prep - compute), pipeline tail):
+# a small slowdown of their inputs — well inside those inputs' own band —
+# amplifies into an unbounded ratio on a near-zero baseline, so gating
+# them by ratio flakes on contended runners.  Informational only; the
+# underlying prep/compute keys are still gated.
+SKIP_RE = re.compile(r"(^|/)(wait_ms_per_batch|tail_ms)$")
+
+
+def classify(path: str) -> str:
+    p = path.lower()
+    if SKIP_RE.search(p):
+        return "skip"
+    if BAND_RE.search(p):
+        return "band"
+    key = p.rsplit("/", 1)[-1]
+    if DERIVED_RE.search(key):
+        return "derived"
+    if RATE_RE.search(key):
+        return "rate"
+    if COST_RE.search(key):
+        return "cost"
+    return "exact"
+
+
+def compare(base, cand, tol: float, path: str, problems: list) -> None:
+    if isinstance(base, dict):
+        if not isinstance(cand, dict):
+            problems.append(f"{path}: section became {type(cand).__name__}")
+            return
+        for k, v in base.items():
+            if k not in cand:
+                problems.append(f"{path}/{k}: missing from candidate (section lost)")
+                continue
+            compare(v, cand[k], tol, f"{path}/{k}", problems)
+        return
+    if isinstance(base, list):
+        if not isinstance(cand, list) or len(base) != len(cand):
+            problems.append(f"{path}: list shape changed")
+            return
+        for i, (b, c) in enumerate(zip(base, cand)):
+            compare(b, c, tol, f"{path}[{i}]", problems)
+        return
+    kind = classify(path)
+    if kind == "skip":
+        return
+    if base is None:
+        # a null baseline (dry-run placeholders like measured_ms) gates
+        # nothing: a candidate that starts measuring is MORE data, and
+        # extra data never fails the gate
+        return
+    if isinstance(base, bool) or isinstance(base, str):
+        if base != cand:
+            problems.append(f"{path}: {base!r} -> {cand!r}")
+        return
+    # numeric baseline: a null/str candidate is itself a regression (a
+    # bench stopped measuring) — report it, don't crash the walk
+    if isinstance(cand, bool) or not isinstance(cand, (int, float)):
+        problems.append(f"{path}: {base!r} -> {cand!r} (type changed)")
+        return
+    b, c = float(base), float(cand)
+    if kind == "exact":
+        if b != c:
+            problems.append(f"{path}: {base} -> {cand} (exact model key)")
+    elif kind == "derived":
+        if abs(c - b) > 1e-9 * max(abs(b), 1.0):
+            problems.append(f"{path}: {b} -> {c} (model-derived key)")
+    elif kind == "band":
+        if b > 0 and not (b / tol <= c <= b * tol):
+            problems.append(f"{path}: {b:g} -> {c:g} (outside {tol:.0f}x band)")
+    elif kind == "cost":
+        if b > 0 and c > b * tol:
+            problems.append(f"{path}: {b:.1f} -> {c:.1f} (> {tol:.0f}x slower)")
+    elif kind == "rate":
+        if b > 0 and c < b / tol:
+            problems.append(f"{path}: {b:.3f} -> {c:.3f} (> {tol:.0f}x lower)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--baseline-dir",
+        required=True,
+        help="directory holding the committed BENCH_*.json baselines (CI "
+        "copies them aside before the smoke benches overwrite the working "
+        "tree)",
+    )
+    ap.add_argument(
+        "--candidate-dir",
+        default=".",
+        help="directory holding the freshly generated artifacts (default: repo root)",
+    )
+    ap.add_argument(
+        "--files",
+        default="BENCH_*.json",
+        help="glob of bench artifacts to gate",
+    )
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=8.0,
+        help="tolerance band factor for measured keys (cost keys fail above "
+        "baseline*tol, rate keys below baseline/tol); bytes/model keys are "
+        "always exact",
+    )
+    args = ap.parse_args(argv)
+
+    base_dir = Path(args.baseline_dir)
+    cand_dir = Path(args.candidate_dir)
+    baselines = sorted(base_dir.glob(args.files))
+    if not baselines:
+        print(
+            f"check_bench: no baselines matching {args.files!r} in "
+            f"{base_dir} — nothing to gate",
+            file=sys.stderr,
+        )
+        return 1
+
+    problems: list[str] = []
+    checked = 0
+    for bp in baselines:
+        cp = cand_dir / bp.name
+        if not cp.exists():
+            problems.append(
+                f"{bp.name}: candidate artifact missing (bench did not run or did not write it)"
+            )
+            continue
+        base = json.loads(bp.read_text())
+        cand = json.loads(cp.read_text())
+        before = len(problems)
+        compare(base, cand, args.tol, bp.name, problems)
+        checked += 1
+        status = "OK" if len(problems) == before else "FAIL"
+        print(f"check_bench: {bp.name}: {status}")
+
+    if problems:
+        print(
+            f"\ncheck_bench: {len(problems)} regression(s) across {checked} artifact(s):",
+            file=sys.stderr,
+        )
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print(
+        f"check_bench: all {checked} artifact(s) within gate "
+        f"(bytes exact, measured within {args.tol:.0f}x)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -34,18 +34,25 @@ import jax
 import numpy as np
 
 
-def _flatten(state: Any) -> dict[str, np.ndarray]:
+def _flatten(state: Any) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    """(flat arrays keyed by tree path, dtype tag per key).  npz cannot
+    hold bf16, so bf16 leaves (split-weight ``hi`` halves, compressed
+    bf16-hi optimizer-state slabs) are stored as their raw uint16 bits;
+    the dtype TAG records the logical dtype so restore can view the bits
+    back even when the target leaf doesn't pin a dtype — a genuinely
+    uint16 slab (the split ``lo`` half) tags as uint16 and is never
+    reinterpreted."""
     flat = {}
+    dtypes = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
         arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
         if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
-            # npz cannot hold bf16: store the raw bits (restore views back
-            # using the target struct's dtype)
             arr = arr.view(np.uint16)
         flat[key] = arr
-    return flat
+    return flat, dtypes
 
 
 class CheckpointManager:
@@ -57,7 +64,7 @@ class CheckpointManager:
 
     # -------------------------------------------------------------- save
     def save(self, step: int, state: Any, blocking: bool = False) -> None:
-        flat = _flatten(state)          # device->host copy happens here
+        flat, dtypes = _flatten(state)  # device->host copy happens here
         treedef = jax.tree_util.tree_structure(state)
         if self._thread is not None:
             self._thread.join()         # one in-flight save at a time
@@ -72,7 +79,8 @@ class CheckpointManager:
             (tmp / "meta.json").write_text(json.dumps(
                 {"step": step, "treedef": str(treedef),
                  "time": time.time(),
-                 "keys": sorted(flat)}))
+                 "keys": sorted(flat),
+                 "dtypes": dtypes}))
             if final.exists():
                 shutil.rmtree(final)
             os.replace(tmp, final)
@@ -112,7 +120,11 @@ class CheckpointManager:
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        data = np.load(self.dir / f"step_{step}" / "arrays.npz")
+        cdir = self.dir / f"step_{step}"
+        data = np.load(cdir / "arrays.npz")
+        # dtype tags (see _flatten): older checkpoints lack them and fall
+        # back to the target leaf's dtype alone
+        tags = json.loads((cdir / "meta.json").read_text()).get("dtypes", {})
         paths = jax.tree_util.tree_flatten_with_path(like)
         leaves = []
         import ml_dtypes
@@ -120,8 +132,20 @@ class CheckpointManager:
             key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                            for p in path)
             arr = data[key]
-            if (str(getattr(leaf, "dtype", "")) == "bfloat16"
-                    and arr.dtype == np.uint16):
+            tag = tags.get(key)
+            want = str(getattr(leaf, "dtype", "")) or tag or ""
+            if want and tag and want != tag:
+                # the tag records the dtype the slab was SAVED as; a
+                # restore target asking for anything else (fp32 momentum
+                # under a bf16-state optimizer or vice versa, uint16 lo
+                # bits as bf16, ...) would silently reinterpret or
+                # mis-type the state — refuse both directions.  Untagged
+                # (pre-tag) checkpoints trust the target struct.
+                raise ValueError(
+                    f"checkpoint leaf {key!r} dtype mismatch: saved as "
+                    f"{tag}, restore target {want} — convert the state "
+                    "explicitly instead of reinterpreting it")
+            if arr.dtype == np.uint16 and want == "bfloat16":
                 arr = arr.view(ml_dtypes.bfloat16)
             leaves.append(arr)
         state = jax.tree_util.tree_unflatten(paths[1], leaves)
@@ -161,6 +185,8 @@ def reshard_store(old_layout, new_layout, store: dict) -> dict:
     elastic restart: every slab — weight halves AND per-row optimizer
     state (momentum rows, Adagrad accumulators) — is row-aligned on the
     same layout, so each one reshards exactly like the weights.  Slabs
-    keep their dtypes (bf16 hi / uint16 lo / fp32 state)."""
+    keep their dtypes (bf16 hi / uint16 lo / fp32 state / compressed
+    bf16-hi state: ``np.asarray`` of a bf16 jax array yields an
+    ``ml_dtypes.bfloat16`` view and the new slab inherits it)."""
     return {k: reshard_embedding(old_layout, new_layout, np.asarray(v))
             for k, v in store.items()}

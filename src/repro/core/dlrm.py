@@ -46,10 +46,12 @@ class DLRMConfig:
     batch: int = 2048               # global minibatch
     emb_mode: str = "row"           # 'row' | 'table'  (C3 placement)
     # sparse RowOptimizer for the embedding path (repro/optim/row.py):
-    # 'sgd' | 'split_sgd' | 'momentum' | 'adagrad_rowwise' | 'adagrad' (or
-    # a RowOptimizer instance).  None/'' falls back to the legacy
-    # ``split_sgd`` bool.  opt_beta / opt_eps override the registered
-    # hyperparameter defaults (momentum coefficient, adagrad floor).
+    # 'sgd' | 'split_sgd' | 'momentum' | 'adagrad_rowwise' | 'adagrad' |
+    # 'momentum_bf16' | 'adagrad_bf16' (compressed bf16-hi state +
+    # stochastic rounding) — or a RowOptimizer instance.  None/'' falls
+    # back to the legacy ``split_sgd`` bool.  opt_beta / opt_eps override
+    # the registered hyperparameter defaults (momentum coefficient,
+    # adagrad floor).
     sparse_optimizer: Optional[str] = None
     opt_beta: Optional[float] = None
     opt_eps: Optional[float] = None
@@ -81,6 +83,9 @@ class DLRMConfig:
     # ships psort_* fields, the step drops the on-device sort (row and
     # table mode — the table host sort folds the padded-slot permute in)
     host_presort: bool = False
+    # initial per-step stochastic-rounding counter (only materialized when
+    # the resolved optimizer registered stochastic_round=True)
+    sr_seed: int = 0
 
     @property
     def spec(self) -> EmbeddingSpec:
@@ -163,8 +168,9 @@ def state_struct(cfg: DLRMConfig, mesh, rngs: bool = True):
     emb_rows = layout.total_rows
     emb_spec = P(emb_ax, None)
 
+    opt = row_optim.resolve(cfg)
     structs = {
-        "emb": row_optim.resolve(cfg).store_struct(emb_rows, E),
+        "emb": opt.store_struct(emb_rows, E),
         "dense": {
             "hi": jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
@@ -182,6 +188,9 @@ def state_struct(cfg: DLRMConfig, mesh, rngs: bool = True):
             "err": P(all_axes) if cfg.compress_grads else None,
         },
     }
+    if opt.stochastic_round:
+        structs["sr"] = jax.ShapeDtypeStruct((), jnp.int32)
+        specs["sr"] = P()
     shardings = jax.tree.map(
         lambda s: None if s is None else NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P) or x is None)
@@ -200,10 +209,13 @@ def init_state(key: jax.Array, cfg: DLRMConfig, mesh) -> dict:
     arrays = dp.dp_global_arrays(dense, ns_total,
                                  compress=cfg.compress_grads,
                                  num_buckets=cfg.num_buckets)
-    emb = row_optim.resolve(cfg).init_store(W)
+    opt = row_optim.resolve(cfg)
+    emb = opt.init_store(W)
     state = {"emb": emb,
              "dense": {"hi": arrays["hi"], "lo": arrays["lo"],
                        "err": arrays["err"]}}
+    if opt.stochastic_round:
+        state["sr"] = jnp.asarray(cfg.sr_seed, jnp.int32)
     return jax.device_put(state, shardings), layout
 
 
@@ -253,7 +265,7 @@ def as_hybrid_def(cfg: DLRMConfig):
         num_buckets=cfg.num_buckets, lr=cfg.lr, emb_lr=cfg.lr,
         idx_input=cfg.idx_input, microbatches=cfg.microbatches,
         exchange_impl=cfg.exchange_impl, weighted=cfg.weighted,
-        host_presort=cfg.host_presort)
+        host_presort=cfg.host_presort, sr_seed=cfg.sr_seed)
 
 
 def make_train_step(cfg: DLRMConfig, mesh, microbatches: int | None = None):

@@ -103,6 +103,12 @@ class HybridDef:
     # step.  Row AND table mode (the table host sort folds the
     # padded-slot permute in); always the fused kernel on the update path.
     host_presort: bool = False
+    # initial value of the per-step stochastic-rounding counter (the
+    # replicated int32 ``state["sr"]`` scalar, present only when the
+    # resolved RowOptimizer registered stochastic_round=True; incremented
+    # once per step and checkpointed, so a resumed run replays the exact
+    # dither sequence)
+    sr_seed: int = 0
 
 
 # stage-shaped mesh helpers live in pipeline.py; re-exported for callers
@@ -155,6 +161,10 @@ def state_struct(mdef: HybridDef, mesh):
             "err": P(all_axes) if mdef.compress_grads else None,
         },
     }
+    if opt.stochastic_round:
+        # per-step stochastic-rounding counter: replicated int32 scalar
+        structs["sr"] = jax.ShapeDtypeStruct((), jnp.int32)
+        specs["sr"] = P()
     shardings = jax.tree.map(
         lambda s: None if s is None else NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P) or x is None)
@@ -245,9 +255,12 @@ def init_state(key, mdef: HybridDef, mesh):
     arrays = dp.dp_global_arrays(dense, ns_total,
                                  compress=mdef.compress_grads,
                                  num_buckets=mdef.num_buckets)
-    emb = row_optim.resolve(mdef).init_store(W)
+    opt = row_optim.resolve(mdef)
+    emb = opt.init_store(W)
     state = {"emb": emb, "dense": {"hi": arrays["hi"], "lo": arrays["lo"],
                                    "err": arrays["err"]}}
+    if opt.stochastic_round:
+        state["sr"] = jnp.asarray(mdef.sr_seed, jnp.int32)
     return jax.device_put(state, shardings), layout
 
 

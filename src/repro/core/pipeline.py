@@ -247,18 +247,22 @@ def build_stages(mdef, mesh, layout) -> PipelineStages:
     def dY_exchange(d_emb):
         return se.gather_dY(layout, d_emb, emb_ax, replica_ax)
 
-    def sparse_update(emb_store, idx_upd, dY, weights=None, presort=None):
+    def sparse_update(emb_store, idx_upd, dY, weights=None, presort=None,
+                      seed=None):
         # ONE dispatcher for every registered RowOptimizer: the presorted
         # stream (repro/data/pipeline.py — no on-device sort, bag weights
         # baked into sorted_wgt) and the sorting scan/fused paths all go
-        # through RowOptimizer.apply_sparse.  NB: the fused fp32 kernels
+        # through RowOptimizer.apply_sparse.  ``seed`` is the per-step
+        # stochastic-rounding counter (state["sr"], present only when the
+        # optimizer asked for one) — forwarded opaquely, so this stage
+        # stays optimizer-agnostic.  NB: the fused fp32 kernels
         # pre-reduce duplicates (one rounding per row) where the sgd
         # reference scatter-adds per lookup, so those two paths are close
         # but not bit-identical; the split path is bitwise either way.
         return se.apply_update(layout, emb_store, opt, idx_upd, dY,
                                mdef.emb_lr, emb_ax, replica_axes=None,
                                fused=fused, weights=weights,
-                               presort=presort)
+                               presort=presort, seed=seed)
 
     def dense_update(dense_state, g_dense):
         st = dp.DPState(hi=dense_state["hi"], lo_shard=dense_state["lo"],
@@ -358,6 +362,12 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
         emb_store = state["emb"]
         W_fwd = opt.fwd_weights(emb_store)
         dense_hi = state["dense"]["hi"]
+        # per-step stochastic-rounding seed: a replicated int32 counter in
+        # the train state (present only when the optimizer registered
+        # stochastic_round=True), consumed by the single epilogue
+        # sparse_update and incremented once per step — so resume-from-
+        # checkpoint replays the exact dither sequence.
+        sr = state.get("sr")
         # host-pre-sorted update stream: each shard's [1, L] block of the
         # psort_* batch fields (leading dim = combined mesh index, the
         # same device-major order the restored idx stream carries).  The
@@ -420,10 +430,13 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
         idx_full, dY_full = restore(idx_parts), restore(dY_parts)
         wgt_full = restore(wgt_parts) if weighted else None
         new_emb = stages.sparse_update(emb_store, idx_full, dY_full,
-                                       weights=wgt_full, presort=presort)
+                                       weights=wgt_full, presort=presort,
+                                       seed=sr)
         new_dense = stages.dense_update(state["dense"], g_acc)
-        return ({"emb": new_emb, "dense": new_dense},
-                jax.lax.psum(loss_acc, all_axes))
+        new_state = {"emb": new_emb, "dense": new_dense}
+        if sr is not None:
+            new_state["sr"] = sr + jnp.asarray(1, sr.dtype)
+        return new_state, jax.lax.psum(loss_acc, all_axes)
 
     step = compat.shard_map(step_local, mesh=mesh, in_specs=(specs, bspecs),
                             out_specs=(specs, P()), check_vma=False)

@@ -371,7 +371,7 @@ def apply_update(layout: ShardedEmbeddingLayout, store: dict, optimizer,
                  idx_local, dY: jax.Array, lr, axis_name,
                  replica_axes=None, fused: bool = False,
                  weights: Optional[jax.Array] = None,
-                 presort: Optional[tuple] = None) -> dict:
+                 presort: Optional[tuple] = None, seed=None) -> dict:
     """THE sparse update of the hybrid step: one entry point for every
     registered :class:`repro.optim.row.RowOptimizer`, every placement mode
     and every stream shape (replacing the former ``apply_update_scan`` /
@@ -403,12 +403,17 @@ def apply_update(layout: ShardedEmbeddingLayout, store: dict, optimizer,
     STATEFUL optimizers the chunked reference accumulates the per-row
     gradient across chunks first and applies the optimizer transition
     once — per-chunk transitions would compound the momentum decay /
-    Adagrad accumulate n times per step."""
+    Adagrad accumulate n times per step.
+
+    ``seed``: int32 per-step stochastic-rounding seed, forwarded verbatim
+    to every ``apply_sparse``/``apply_rows_reduced`` call (the compressed
+    bf16-hi state optimizers dither with it; deterministic optimizers
+    ignore it) — this module stays per-optimizer-agnostic."""
     from repro.optim.row import SparseStream
     if presort is not None:
         return optimizer.apply_sparse(store, SparseStream(presort=presort,
                                                           dY=dY), lr,
-                                      fused=True)
+                                      seed=seed, fused=True)
     if layout.mode == "table" and replica_axes is not None:
         idx_local = jax.lax.all_gather(idx_local, replica_axes, axis=0,
                                        tiled=True)
@@ -428,7 +433,8 @@ def apply_update(layout: ShardedEmbeddingLayout, store: dict, optimizer,
             layout, g.reshape(-1), start, idx_local.shape[-1],
             None if weights is None else weights.reshape(-1))
         return optimizer.apply_sparse(store, SparseStream(presort=streams,
-                                                          dY=dY), lr)
+                                                          dY=dY), lr,
+                                      seed=seed)
     if fused and layout.mode == "table" and layout.num_shards > 1 \
             and jax.default_backend() != "tpu":
         # KNOWN LIMITATION: XLA CPU (jax<0.5) miscompiles the
@@ -451,14 +457,14 @@ def apply_update(layout: ShardedEmbeddingLayout, store: dict, optimizer,
         # transitions per chunk; one apply keeps them once-per-step)
         return optimizer.apply_sparse(
             store, SparseStream(idx=local, dY=dY, valid=valid,
-                                weights=weights), lr, fused=True)
+                                weights=weights), lr, seed=seed, fused=True)
     n = _batch_chunks(B, S, P, E)
     cb = B // n
 
     def chunk_update(st, loc_c, val_c, dY_c, wgt_c=None):
         return optimizer.apply_sparse(
             st, SparseStream(idx=loc_c, dY=dY_c, valid=val_c,
-                             weights=wgt_c), lr, fused=False)
+                             weights=wgt_c), lr, seed=seed, fused=False)
 
     if n == 1:
         return chunk_update(store, local, valid, dY, weights)
@@ -491,7 +497,8 @@ def apply_update(layout: ShardedEmbeddingLayout, store: dict, optimizer,
         rep = dedup_targets(jnp.where(valid, local, rows).reshape(-1),
                             rows)
         summed = jnp.take(dW, jnp.minimum(rep, rows - 1), axis=0)
-        return optimizer.apply_rows_reduced(store, rep, summed, lr)
+        return optimizer.apply_rows_reduced(store, rep, summed, lr,
+                                            seed=seed)
 
     def body(st, inp):
         return chunk_update(st, *inp), None

@@ -67,6 +67,7 @@ from jax.experimental.pallas import tpu as pltpu
 # exact expressions with the optimizer is what makes the bit-identity claim
 # structural rather than coincidental
 from repro.optim.split_sgd import combine_split, split_fp32
+from repro.optim.stochastic import sr_noise, sr_round_bf16
 
 
 def _run_bounds(rows_ref, i):
@@ -215,15 +216,63 @@ def _make_kernel_adagrad_rowwise(e_real: int):
     return kernel
 
 
+def _kernel_momentum_bf16(rows_ref, bags_ref, msk_ref, hp_ref, sd_ref,
+                          wgt_ref, w_ref, m_ref, dY_ref, nw_ref, nm_ref,
+                          acc_ref, flg_ref):
+    """fp32 weights + COMPRESSED bf16-hi momentum row with seeded
+    stochastic rounding.  hp = [lr, beta, eps]; sd = [seed].  The bf16 ->
+    fp32 decode is exact, the transition runs in fp32, and only the store
+    back to the state slab rounds — with the counter-based dither of
+    :mod:`repro.optim.stochastic`, so the reference scan computes the
+    same bits for the same (seed, row, lane)."""
+    i = pl.program_id(0)
+    is_end = _accumulate_run(rows_ref, msk_ref, wgt_ref, dY_ref, acc_ref,
+                             flg_ref, i)
+
+    @pl.when(is_end)
+    def _apply():
+        live = flg_ref[0] != 0
+        m_old = m_ref[...]
+        m_new = hp_ref[1] * m_old.astype(jnp.float32) + acc_ref[...]
+        w_old = w_ref[...].astype(jnp.float32)
+        w_new = w_old - hp_ref[0] * m_new
+        noise = sr_noise(sd_ref[0], rows_ref[i][None], m_new.shape[-1])
+        nm_ref[...] = jnp.where(live, sr_round_bf16(m_new, noise), m_old)
+        nw_ref[...] = jnp.where(live, w_new, w_old).astype(nw_ref.dtype)
+
+
+def _kernel_adagrad_bf16(rows_ref, bags_ref, msk_ref, hp_ref, sd_ref,
+                         wgt_ref, w_ref, s_ref, dY_ref, nw_ref, ns_ref,
+                         acc_ref, flg_ref):
+    """fp32 weights + COMPRESSED bf16-hi elementwise Adagrad accumulator
+    with seeded stochastic rounding.  The weight step uses the UNROUNDED
+    fp32 ``s_new`` (rounding only affects what the next step decodes)."""
+    i = pl.program_id(0)
+    is_end = _accumulate_run(rows_ref, msk_ref, wgt_ref, dY_ref, acc_ref,
+                             flg_ref, i)
+
+    @pl.when(is_end)
+    def _apply():
+        live = flg_ref[0] != 0
+        acc = acc_ref[...]
+        s_old = s_ref[...]
+        s_new = s_old.astype(jnp.float32) + acc * acc
+        w_old = w_ref[...].astype(jnp.float32)
+        w_new = w_old - hp_ref[0] * acc / (jnp.sqrt(s_new) + hp_ref[2])
+        noise = sr_noise(sd_ref[0], rows_ref[i][None], s_new.shape[-1])
+        ns_ref[...] = jnp.where(live, sr_round_bf16(s_new, noise), s_old)
+        nw_ref[...] = jnp.where(live, w_new, w_old).astype(nw_ref.dtype)
+
+
 def _row_specs(E, n_out):
     """(in_specs tail, out_specs) for the row-addressed operands.  The
-    scalar-prefetch refs (rows, bags, msk, lr, wgt — lr/wgt live in SMEM,
-    the TPU-legal home for kernel scalars) are appended to every
-    index_map."""
-    row = pl.BlockSpec((1, E),
-                       lambda i, rows, bags, msk, lr, wgt: (rows[i], 0))
-    bag = pl.BlockSpec((1, E),
-                       lambda i, rows, bags, msk, lr, wgt: (bags[i], 0))
+    scalar-prefetch refs (rows, bags, msk, then the kernel's scalar
+    operands — hyperparameters, optional SR seed, weights; SMEM is the
+    TPU-legal home for kernel scalars) are appended to every index_map;
+    the maps are variadic in everything after (rows, bags) so one spec
+    serves any scalar-prefetch arity."""
+    row = pl.BlockSpec((1, E), lambda i, rows, bags, *_: (rows[i], 0))
+    bag = pl.BlockSpec((1, E), lambda i, rows, bags, *_: (bags[i], 0))
     return row, bag, [row] * n_out
 
 
@@ -296,25 +345,28 @@ def _state_spec(Ws):
     the same ``rows[i]`` index map as the weight row, at the slab's own
     width (E for momentum / elementwise Adagrad, the padded scalar lane
     for row-wise Adagrad)."""
-    return pl.BlockSpec((1, Ws),
-                        lambda i, rows, bags, msk, hp, wgt: (rows[i], 0))
+    return pl.BlockSpec((1, Ws), lambda i, rows, bags, *_: (rows[i], 0))
 
 
 def _stateful_call(kernel, w: jax.Array, s: jax.Array, sorted_rows,
                    sorted_bags, sorted_msk, sorted_wgt, dY, hp,
-                   interpret: bool):
+                   interpret: bool, extra_scalars: tuple = ()):
     """Shared pallas_call plumbing for the (weights, state) kernels:
     scalar-prefetch stream + two row-addressed aliased operands + the VMEM
-    accumulator and the SMEM run-liveness flag."""
+    accumulator and the SMEM run-liveness flag.  ``extra_scalars``: extra
+    scalar-prefetch operands (e.g. the int32 stochastic-rounding seed),
+    handed to the kernel BETWEEN ``hp`` and ``wgt`` — the index maps are
+    variadic, so any arity rides the same specs."""
     M, E = w.shape
     Ws = s.shape[1]
     L = sorted_rows.shape[0]
     row, bag, _ = _row_specs(E, 0)
     st = _state_spec(Ws)
+    n_sp = 5 + len(extra_scalars)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=5,
+            num_scalar_prefetch=n_sp,
             grid=(L,),
             in_specs=[row, st, bag],
             out_specs=[row, st],
@@ -323,10 +375,12 @@ def _stateful_call(kernel, w: jax.Array, s: jax.Array, sorted_rows,
         ),
         out_shape=[jax.ShapeDtypeStruct((M, E), w.dtype),
                    jax.ShapeDtypeStruct((M, Ws), s.dtype)],
-        # args: (rows, bags, msk, hp, wgt, w, s, dY) -> alias w/s -> outs
-        input_output_aliases={5: 0, 6: 1},
+        # args: (rows, bags, msk, hp, *extra, wgt, w, s, dY); alias the
+        # row-addressed w/s operands onto the outputs
+        input_output_aliases={n_sp: 0, n_sp + 1: 1},
         interpret=interpret,
-    )(sorted_rows, sorted_bags, sorted_msk, hp, sorted_wgt, w, s, dY)
+    )(sorted_rows, sorted_bags, sorted_msk, hp, *extra_scalars,
+      sorted_wgt, w, s, dY)
 
 
 def fused_update_momentum_pallas(w: jax.Array, mom: jax.Array, sorted_rows,
@@ -364,6 +418,42 @@ def fused_update_adagrad_pallas(w: jax.Array, acc: jax.Array, sorted_rows,
               else _kernel_adagrad)
     return _stateful_call(kernel, w, acc, sorted_rows, sorted_bags,
                           sorted_msk, sorted_wgt, dY, hp, interpret)
+
+
+def fused_update_momentum_bf16_pallas(w: jax.Array, mom: jax.Array,
+                                      sorted_rows, sorted_bags, sorted_msk,
+                                      sorted_wgt, dY, lr, beta, seed,
+                                      interpret: bool = False
+                                      ) -> tuple[jax.Array, jax.Array]:
+    """:func:`fused_update_momentum_pallas` with the momentum slab stored
+    COMPRESSED as bf16-hi: per touched row ``m = beta * decode(m) +
+    sum(wgt * dY)`` in fp32, ``w -= lr * m``, and the new ``m`` is written
+    back stochastically rounded under ``seed`` — half the state bytes per
+    touched row, unbiased in expectation."""
+    hp = jnp.stack([jnp.asarray(lr, jnp.float32),
+                    jnp.asarray(beta, jnp.float32),
+                    jnp.zeros((), jnp.float32)])
+    sd = jnp.full((1,), seed, jnp.int32)
+    return _stateful_call(_kernel_momentum_bf16, w, mom, sorted_rows,
+                          sorted_bags, sorted_msk, sorted_wgt, dY, hp,
+                          interpret, extra_scalars=(sd,))
+
+
+def fused_update_adagrad_bf16_pallas(w: jax.Array, acc: jax.Array,
+                                     sorted_rows, sorted_bags, sorted_msk,
+                                     sorted_wgt, dY, lr, eps, seed,
+                                     interpret: bool = False
+                                     ) -> tuple[jax.Array, jax.Array]:
+    """Elementwise Adagrad with the accumulator slab stored COMPRESSED as
+    bf16-hi + stochastic rounding (seeded).  The weight step divides by
+    ``sqrt`` of the UNROUNDED fp32 accumulator."""
+    hp = jnp.stack([jnp.asarray(lr, jnp.float32),
+                    jnp.zeros((), jnp.float32),
+                    jnp.asarray(eps, jnp.float32)])
+    sd = jnp.full((1,), seed, jnp.int32)
+    return _stateful_call(_kernel_adagrad_bf16, w, acc, sorted_rows,
+                          sorted_bags, sorted_msk, sorted_wgt, dY, hp,
+                          interpret, extra_scalars=(sd,))
 
 
 def sort_lookups(tgt: jax.Array, valid: jax.Array | None, num_rows: int,

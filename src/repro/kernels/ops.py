@@ -15,11 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.embedding_bag import embedding_bag_pallas
-from repro.kernels.embedding_update import (fused_update_adagrad_pallas,
-                                            fused_update_fp32_pallas,
-                                            fused_update_momentum_pallas,
-                                            fused_update_split_pallas,
-                                            sort_lookups)
+from repro.kernels.embedding_update import sort_lookups
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fused_mlp import fused_mlp_pallas
 from repro.kernels.interaction import interaction_pallas
@@ -80,91 +76,82 @@ def embedding_bag(W, idx, bags_per_block: int = 8,
 # repro.optim.row should call these: model/pipeline code goes through
 # ``RowOptimizer.apply_sparse``, which owns the store layout and the
 # reference-path parity contracts.
+#
+# There is NO per-optimizer dispatch here (enforced by a source-scan
+# test): the optimizer instance carries its own fused Pallas entry as the
+# ``kernel`` registration hook, and this module only owns the generic
+# plumbing — lane padding, the sorted-stream prep, the interpret switch.
+# ``register()`` alone (plus one kernel body) adds an optimizer.
 # ---------------------------------------------------------------------------
 
-ROW_KINDS = ("sgd", "split_sgd", "momentum", "adagrad", "adagrad_rowwise")
+
+def _coerce_opt(opt):
+    """Accept a RowOptimizer instance or a registry name (legacy callers/
+    benches pass strings)."""
+    if isinstance(opt, str):
+        from repro.optim import row as row_optim
+        return row_optim.get(opt)
+    return opt
 
 
-def _call_row_kernel(kind, store, srows, sbags, smsk, swgt, dY, lr, beta,
-                     eps, e_real, interpret):
-    """Invoke the kind's Pallas entry on (already lane-aligned) slabs."""
-    if kind == "split_sgd":
-        nh, nl = fused_update_split_pallas(store["hi"], store["lo"], srows,
-                                           sbags, smsk, swgt, dY, lr,
-                                           interpret=interpret)
-        return {"hi": nh, "lo": nl}
-    if kind == "sgd":
-        return {"w": fused_update_fp32_pallas(store["w"], srows, sbags,
-                                              smsk, swgt, dY, lr,
-                                              interpret=interpret)}
-    if kind == "momentum":
-        nw, nm = fused_update_momentum_pallas(store["w"], store["mom"],
-                                              srows, sbags, smsk, swgt, dY,
-                                              lr, beta, interpret=interpret)
-        return {"w": nw, "mom": nm}
-    if kind in ("adagrad", "adagrad_rowwise"):
-        nw, ns = fused_update_adagrad_pallas(
-            store["w"], store["acc"], srows, sbags, smsk, swgt, dY, lr,
-            eps, kind == "adagrad_rowwise", e_real, interpret=interpret)
-        return {"w": nw, "acc": ns}
-    raise ValueError(f"unknown row-optimizer kind {kind!r}; "
-                     f"expected one of {ROW_KINDS}")
-
-
-def _dispatch_row_kernel(kind, store, srows, sbags, smsk, swgt, dY, lr,
-                         beta, eps, interpret):
+def _dispatch_row_kernel(opt, store, srows, sbags, smsk, swgt, dY, lr,
+                         seed, interpret):
     """Pad every slab's lane dim to a 128 multiple (compiled path), run
-    the kind's Pallas kernel on the sorted stream, and slice the padding
-    back off per slab.  On the compiled TPU path a non-128-multiple width
-    is padded, which copies the slab and forfeits the O(unique_rows)
-    traffic — production shards keep E % 128 == 0 so the pad is a no-op
-    (the adagrad_rowwise [M, 1] scalar lane always pads; its per-row
-    traffic is one fp32 either way).  Interpret mode (the CPU validation
-    path) has no lane constraint and never pads."""
-    e_real = (store["hi"] if kind == "split_sgd" else store["w"]).shape[1]
+    the optimizer's Pallas kernel hook on the sorted stream, and slice
+    the padding back off per slab.  On the compiled TPU path a
+    non-128-multiple width is padded, which copies the slab and forfeits
+    the O(unique_rows) traffic — production shards keep E % 128 == 0 so
+    the pad is a no-op (a [M, 1] per-row scalar lane always pads; its
+    per-row traffic is one scalar either way).  Interpret mode (the CPU
+    validation path) has no lane constraint and never pads."""
+    e_real = store[opt.weight_keys[0]].shape[1]
     if interpret:
-        return _call_row_kernel(kind, store, srows, sbags, smsk, swgt, dY,
-                                lr, beta, eps, e_real, True)
+        return opt.kernel(opt, store, srows, sbags, smsk, swgt, dY, lr,
+                          seed, e_real, True)
     widths = {k: v.shape[1] for k, v in store.items()}
     padded = {k: _pad_dim(v, 1, 128)[0] for k, v in store.items()}
     dYp, _ = _pad_dim(dY, 1, 128)
-    out = _call_row_kernel(kind, padded, srows, sbags, smsk, swgt, dYp,
-                           lr, beta, eps, e_real, interpret)
+    out = opt.kernel(opt, padded, srows, sbags, smsk, swgt, dYp, lr, seed,
+                     e_real, interpret)
     return {k: v[:, :widths[k]] for k, v in out.items()}
 
 
-@partial(jax.jit, static_argnames=("kind", "pooling", "interpret"))
-def fused_row_update(kind, store, tgt, dY, lr, beta=0.0, eps=0.0,
-                     valid=None, weights=None, *, pooling: int = 1,
+@partial(jax.jit, static_argnames=("opt", "pooling", "interpret"))
+def fused_row_update(opt, store, tgt, dY, lr, *, seed=0, valid=None,
+                     weights=None, pooling: int = 1,
                      interpret: bool | None = None):
     """Fused sparse-backward + row-optimizer update (paper Alg. 3 + C5,
     generalized to pluggable per-row state).
 
-    ``kind``: one of :data:`ROW_KINDS`.  ``store``: the optimizer's
-    EmbeddingStore dict — weight slab(s) (``hi``/``lo`` split-bf16 or
-    ``w`` fp32) plus zero or more per-row state slabs (``mom``/``acc``),
-    all row-aligned on the same shard layout.  ``tgt`` [L] int32 local row
-    per flat lookup (out-of-range or ``valid == False`` entries contribute
-    nothing).  ``dY`` [L // pooling, E]: bag cotangents — flat lookup ``i``
-    reads ``dY[i // pooling]``; the [L, E] per-lookup gradient expansion of
-    the reference path is never materialized.  ``weights`` [L] optional
+    ``opt``: a registered RowOptimizer (or its registry name) — its
+    ``kernel`` hook owns which Pallas body runs.  ``store``: the
+    optimizer's EmbeddingStore dict — weight slab(s) (``hi``/``lo``
+    split-bf16 or ``w`` fp32) plus zero or more per-row state slabs
+    (``mom``/``acc``, fp32 or compressed bf16-hi), all row-aligned on the
+    same shard layout.  ``tgt`` [L] int32 local row per flat lookup
+    (out-of-range or ``valid == False`` entries contribute nothing).
+    ``dY`` [L // pooling, E]: bag cotangents — flat lookup ``i`` reads
+    ``dY[i // pooling]``; the [L, E] per-lookup gradient expansion of the
+    reference path is never materialized.  ``weights`` [L] optional
     per-lookup bag weights scaling each cotangent row before the in-VMEM
-    duplicate pre-reduction.  Returns the updated store: only touched rows
-    (weights AND state) are read/written, in place via aliasing.  The
-    unweighted ``split_sgd`` result is bit-identical to the jitted
-    ``apply_rows_split_sgd`` reference; the WEIGHTED accumulation is
-    FMA-contracted and sits within 1 ulp/step of the pre-scaled
-    reference."""
+    duplicate pre-reduction.  ``seed``: int32 per-step stochastic-rounding
+    seed (ignored by deterministic optimizers).  Returns the updated
+    store: only touched rows (weights AND state) are read/written, in
+    place via aliasing.  The unweighted ``split_sgd`` result is
+    bit-identical to the jitted ``apply_rows_split_sgd`` reference; the
+    WEIGHTED accumulation is FMA-contracted and sits within 1 ulp/step of
+    the pre-scaled reference."""
+    opt = _coerce_opt(opt)
     interpret = _default_interpret() if interpret is None else interpret
-    M = (store["hi"] if kind == "split_sgd" else store["w"]).shape[0]
+    M = store[opt.weight_keys[0]].shape[0]
     srows, sbags, smsk, swgt = sort_lookups(tgt, valid, M, pooling, weights)
-    return _dispatch_row_kernel(kind, store, srows, sbags, smsk, swgt, dY,
-                                lr, beta, eps, interpret)
+    return _dispatch_row_kernel(opt, store, srows, sbags, smsk, swgt, dY,
+                                lr, seed, interpret)
 
 
-@partial(jax.jit, static_argnames=("kind", "interpret"))
-def fused_row_update_presorted(kind, store, srows, sbags, smsk, swgt, dY,
-                               lr, beta=0.0, eps=0.0, *,
+@partial(jax.jit, static_argnames=("opt", "interpret"))
+def fused_row_update_presorted(opt, store, srows, sbags, smsk, swgt, dY,
+                               lr, *, seed=0,
                                interpret: bool | None = None):
     """:func:`fused_row_update` with the sort done ON THE HOST: the caller
     supplies the ``(sorted_rows, sorted_bags, sorted_msk, sorted_wgt)``
@@ -173,9 +160,10 @@ def fused_row_update_presorted(kind, store, srows, sbags, smsk, swgt, dY,
     device) and the per-step XLA argsort disappears from the hot path.
     Bit-identical to the sorting entry point — a stable sort's permutation
     is unique, so host and device sorts agree exactly."""
+    opt = _coerce_opt(opt)
     interpret = _default_interpret() if interpret is None else interpret
-    return _dispatch_row_kernel(kind, store, srows, sbags, smsk, swgt, dY,
-                                lr, beta, eps, interpret)
+    return _dispatch_row_kernel(opt, store, srows, sbags, smsk, swgt, dY,
+                                lr, seed, interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

@@ -136,8 +136,11 @@ def main():
     ap.add_argument("--optimizer", default=None,
                     help="sparse RowOptimizer for the embedding path "
                          "(repro/optim/row.py): sgd | split_sgd | momentum "
-                         "| adagrad_rowwise | adagrad; default keeps the "
-                         "arch's configured optimizer (split_sgd)")
+                         "| adagrad_rowwise | adagrad | momentum_bf16 | "
+                         "adagrad_bf16 (the _bf16 kinds store compressed "
+                         "bf16-hi state with seeded stochastic rounding); "
+                         "default keeps the arch's configured optimizer "
+                         "(split_sgd)")
     ap.add_argument("--beta", type=float, default=None,
                     help="momentum coefficient override for --optimizer")
     ap.add_argument("--eps", type=float, default=None,
@@ -162,7 +165,9 @@ def main():
                          "loader thread (row and table mode; drops the "
                          "on-device sort from the step)")
     ap.add_argument("--seed", type=int, default=0,
-                    help="data order seed (reader epoch shuffle)")
+                    help="data order seed (reader epoch shuffle); also "
+                         "seeds the stochastic-rounding counter of the "
+                         "_bf16 compressed-state optimizers")
     ap.add_argument("--weighted", action="store_true",
                     help="weighted bags: consume the packed dataset's "
                          "per-lookup weight arrays (recsys archs)")
@@ -202,7 +207,8 @@ def main():
                                   opt_beta=args.beta, opt_eps=args.eps,
                                   microbatches=args.microbatches,
                                   host_presort=args.host_presort,
-                                  weighted=args.weighted)
+                                  weighted=args.weighted,
+                                  sr_seed=args.seed)
         state, layout = D.init_state(key, cfg, mesh)
         step, shardings, bspecs, _ = D.make_train_step(cfg, mesh)
         batch_shardings = _bspec_shardings(mesh, bspecs)
@@ -225,7 +231,8 @@ def main():
                                    opt_beta=args.beta, opt_eps=args.eps,
                                    microbatches=args.microbatches,
                                    host_presort=args.host_presort,
-                                   weighted=args.weighted)
+                                   weighted=args.weighted,
+                                   sr_seed=args.seed)
         state, layout = H.init_state(key, mdef, mesh)
         step, shardings, bspecs, _ = H.make_train_step(mdef, mesh)
         batch_shardings = _bspec_shardings(mesh, bspecs)

@@ -1,5 +1,6 @@
 """Pluggable sparse RowOptimizer API — ONE update surface for the
-embedding path (SGD / Split-SGD / momentum / row-wise Adagrad / Adagrad).
+embedding path (SGD / Split-SGD / momentum / Adagrad variants, fp32 or
+compressed bf16-hi state).
 
 The paper's Split-SGD trick (Sect. V) makes the sparse update O(unique
 rows) per step; production DLRM training additionally wants momentum and
@@ -11,20 +12,40 @@ module is the plug-in point:
 * A :class:`RowOptimizer` owns (a) an **EmbeddingStore** — a flat dict
   pytree of row-aligned slabs: the weight slab(s) (``hi``/``lo`` split
   bf16+uint16, or ``w`` fp32) plus zero or more per-row optimizer-state
-  slabs (``mom`` [M, E] fp32, ``acc`` [M, E] or [M, 1] fp32), all sharded
+  slabs (``mom``/``acc`` rows in fp32 or compressed bf16-hi), all sharded
   by the same ``ShardedEmbeddingLayout`` row partition — and (b) a single
   fused apply, :meth:`RowOptimizer.apply_sparse`, which every path
   (reference scan, fused Pallas kernel, host-pre-sorted stream) goes
   through.
 
+* The per-optimizer MATH lives on the instance, as three hooks supplied
+  at registration time (the ROADMAP "strategy registration" refactor):
+
+  - ``kernel``          — the fused Pallas entry: called by
+    ``kernels.ops`` on the (lane-aligned) sorted stream; owns which
+    kernel body runs and how the hyperparameters/seed reach it.
+  - ``reference``       — the reduced-stream reference transition
+    (unique rows + per-row gradient sums), applied exactly once per row
+    per step; the chunked scan path accumulates across chunks first.
+  - ``flat_reference``  — optional per-lookup reference (the stateless
+    kinds' legacy scatter semantics); defaults to dedup + ``reference``.
+
+  ``kernels/ops.py``, ``core/sharded_embedding.py`` and
+  ``core/pipeline.py`` contain NO per-optimizer dispatch (enforced by a
+  source-scan test): :func:`register` alone — plus one Pallas kernel
+  body — adds an optimizer end-to-end.
+
 * The registry (:func:`register` / :func:`get` / :func:`make`) names the
   built-ins: ``sgd``, ``split_sgd``, ``momentum``, ``adagrad_rowwise``,
-  ``adagrad``.  :func:`resolve` maps a model definition
-  (``HybridDef``/``DLRMConfig``: ``sparse_optimizer=`` + optional
-  ``opt_beta``/``opt_eps``, with the legacy ``split_sgd`` bool as
-  fallback sugar) to an optimizer instance.
+  ``adagrad``, and the compressed-state ``momentum_bf16`` /
+  ``adagrad_bf16`` (bf16-hi state + seeded stochastic rounding,
+  :mod:`repro.optim.stochastic` — half the state bytes per touched row).
+  :func:`resolve` maps a model definition (``HybridDef``/``DLRMConfig``:
+  ``sparse_optimizer=`` + optional ``opt_beta``/``opt_eps``, with the
+  legacy ``split_sgd`` bool as fallback sugar) to an optimizer instance.
 
-Determinism / parity contracts (tests/test_row_optim.py):
+Determinism / parity contracts (tests/test_row_optim.py,
+tests/test_stochastic.py):
 
 * ``split_sgd``: fused == the jitted ``split_fp32``/``combine_split``
   reference, BITWISE (inherited from the PR-1 kernel, pinned).
@@ -33,6 +54,10 @@ Determinism / parity contracts (tests/test_row_optim.py):
 * ``adagrad`` / ``adagrad_rowwise`` first step from zero state == SGD
   scaled by ``1 / (sqrt(acc_1) + eps)`` (per element / per row) to fp32
   tolerance — one extra division per touched row vs the closed form.
+* ``momentum_bf16`` / ``adagrad_bf16``: under one per-step ``seed`` the
+  reference scan, fused device-sorted and host-pre-sorted paths are
+  BITWISE identical (the stochastic dither is a counter-based pure
+  function of (seed, row, lane), never of traversal order).
 * State is touched ONLY for rows receiving at least one valid lookup —
   padding/masked streams never decay momentum or inflate accumulators.
 
@@ -44,12 +69,13 @@ see the store as an opaque dict of row-aligned slabs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.optim.split_sgd import combine_split, split_fp32
+from repro.optim.stochastic import sr_noise, sr_round_bf16
 
 
 # ---------------------------------------------------------------------------
@@ -106,8 +132,8 @@ def apply_rows_split_sgd(hi: jax.Array, lo: jax.Array, tgt: jax.Array,
     VMEM and rewrites only the touched rows in place; bit-identical output."""
     if fused:
         from repro.kernels import ops
-        out = ops.fused_row_update("split_sgd", {"hi": hi, "lo": lo}, tgt,
-                                   grad, lr, pooling=1)
+        out = ops.fused_row_update(get("split_sgd"), {"hi": hi, "lo": lo},
+                                   tgt, grad, lr, pooling=1)
         return out["hi"], out["lo"]
     rep, summed = dedup_rows(tgt, grad, hi.shape[0])
     safe = jnp.minimum(rep, hi.shape[0] - 1)   # gather side must be in-bounds
@@ -152,19 +178,41 @@ class SparseStream:
 class RowOptimizer:
     """A sparse embedding optimizer: store layout + one fused apply.
 
-    ``kind`` selects the kernel/reference math; ``split`` says whether the
-    master weights live as (hi bf16, lo uint16) or one fp32 ``w`` slab;
-    ``state`` lists the per-row state slabs as (key, width) pairs, width 0
-    meaning the embedding dim E (``mom``/``acc`` rows) and any other value
-    a fixed per-row lane count (1 = the row-wise Adagrad scalar).
-    Hashable and jit-static-friendly."""
+    The three callables are the REGISTRATION HOOKS — they carry the whole
+    per-optimizer math, so nothing outside the instance dispatches on an
+    optimizer kind:
+
+    ``kernel(opt, store, srows, sbags, smsk, swgt, dY, lr, seed, e_real,
+    interpret) -> store``
+        fused Pallas entry on the sorted stream (slabs already
+        lane-aligned by ``kernels.ops``; ``e_real`` is the unpadded E).
+    ``reference(opt, store, rep, summed, lr, seed) -> store``
+        reduced-stream reference transition — ``rep`` [n] unique touched
+        rows (``num_rows`` fillers dropped by the scatter), ``summed``
+        [n, E] per-row gradient sums; applied exactly ONCE per row per
+        step.
+    ``flat_reference(opt, store, tgt, grad, lr, seed) -> store``
+        optional per-lookup reference (the stateless kinds' scatter
+        semantics); ``None`` means dedup + ``reference``.
+
+    ``split`` says whether the master weights live as (hi bf16, lo
+    uint16) or one fp32 ``w`` slab; ``state`` lists the per-row state
+    slabs as ``(key, width[, dtype])`` tuples — width 0 meaning the
+    embedding dim E, any other value a fixed per-row lane count (1 = the
+    row-wise Adagrad scalar), dtype defaulting to fp32 (``"bfloat16"``
+    selects the compressed bf16-hi layout).  ``stochastic_round`` asks
+    the step factory to thread a fresh int32 seed per step (the ``sr``
+    counter in the train state).  Hashable and jit-static-friendly."""
 
     name: str
-    kind: str
     split: bool = False
-    state: tuple = ()            # ((slab_key, width), ...); width 0 => E
+    state: tuple = ()        # ((slab_key, width[, dtype]), ...); width 0 => E
     beta: float = 0.0            # momentum coefficient
     eps: float = 1e-8            # adagrad denominator floor
+    stochastic_round: bool = False
+    kernel: Optional[Callable] = None
+    reference: Optional[Callable] = None
+    flat_reference: Optional[Callable] = None
 
     # ---------------------------------------------------------- store --
     @property
@@ -173,7 +221,13 @@ class RowOptimizer:
 
     @property
     def state_keys(self) -> tuple:
-        return tuple(k for k, _ in self.state)
+        return tuple(s[0] for s in self.state)
+
+    def state_slabs(self) -> tuple:
+        """Normalized ``(key, width, dtype)`` per state slab."""
+        return tuple((s[0], s[1],
+                      jnp.dtype(s[2]) if len(s) > 2 else jnp.dtype("float32"))
+                     for s in self.state)
 
     def store_struct(self, rows: int, E: int) -> dict:
         """ShapeDtypeStructs of the EmbeddingStore for a [rows, E] slab —
@@ -183,8 +237,8 @@ class RowOptimizer:
                 "lo": jax.ShapeDtypeStruct((rows, E), jnp.uint16)}
                if self.split else
                {"w": jax.ShapeDtypeStruct((rows, E), jnp.float32)})
-        for key, width in self.state:
-            out[key] = jax.ShapeDtypeStruct((rows, width or E), jnp.float32)
+        for key, width, dtype in self.state_slabs():
+            out[key] = jax.ShapeDtypeStruct((rows, width or E), dtype)
         return out
 
     def init_store(self, W: jax.Array) -> dict:
@@ -196,8 +250,8 @@ class RowOptimizer:
             out = {"hi": hi, "lo": lo}
         else:
             out = {"w": W.astype(jnp.float32)}
-        for key, width in self.state:
-            out[key] = jnp.zeros((rows, width or E), jnp.float32)
+        for key, width, dtype in self.state_slabs():
+            out[key] = jnp.zeros((rows, width or E), dtype)
         return out
 
     def fwd_weights(self, store: dict) -> jax.Array:
@@ -212,7 +266,7 @@ class RowOptimizer:
 
     # ---------------------------------------------------------- apply --
     def apply_sparse(self, store: dict, stream: SparseStream, lr, *,
-                     fused: bool = False,
+                     seed=None, fused: bool = False,
                      interpret: Optional[bool] = None) -> dict:
         """THE sparse update dispatcher: new store from one stream.
 
@@ -222,14 +276,18 @@ class RowOptimizer:
         the reference math (scatter / dedup + functional scatter) with
         identical optimizer semantics; the split path is bit-identical
         between the two, the fp32 paths match to the documented
-        pre-reduction rounding."""
+        pre-reduction rounding, and the stochastic-rounding kinds are
+        bit-identical across ALL paths for a given ``seed`` (the int32
+        per-step stochastic-rounding counter; ignored by the
+        deterministic kinds)."""
         from repro.kernels import ops
+        seed = jnp.asarray(0 if seed is None else seed, jnp.int32)
         if stream.presort is not None:
             dY = stream.dY
             dYr = dY.reshape(-1, dY.shape[-1]) if dY.ndim != 2 else dY
             return ops.fused_row_update_presorted(
-                self.kind, store, *stream.presort, dYr, lr,
-                self.beta, self.eps, interpret=interpret)
+                self, store, *stream.presort, dYr, lr, seed=seed,
+                interpret=interpret)
         idx, dY = stream.idx, stream.dY
         P = idx.shape[-1]
         E = dY.shape[-1]
@@ -239,13 +297,12 @@ class RowOptimizer:
             w = (None if stream.weights is None
                  else stream.weights.reshape(-1))
             dYr = dY.reshape(-1, E)
-            return ops.fused_row_update(self.kind, store, tgt, dYr, lr,
-                                        self.beta, self.eps, valid=val,
-                                        weights=w, pooling=P,
-                                        interpret=interpret)
+            return ops.fused_row_update(self, store, tgt, dYr, lr,
+                                        seed=seed, valid=val, weights=w,
+                                        pooling=P, interpret=interpret)
         # reference: expand dY to per-lookup grads (the thing the fused
         # kernel never materializes), zero the masked entries, and apply
-        # the per-kind row math
+        # the instance's reference row math
         grad = jnp.broadcast_to(dY[..., None, :],
                                 idx.shape + (E,)).astype(jnp.float32)
         if stream.weights is not None:
@@ -255,9 +312,9 @@ class RowOptimizer:
             grad = jnp.where(valid[..., None], grad, 0.0)
         grad = grad.reshape(-1, E)
         num_rows = self.fwd_weights(store).shape[0]
-        if self.kind in ("sgd", "split_sgd"):
-            # legacy contract: masked lookups become zero-grad entries on
-            # row 0 (a bit-exact no-op for the stateless kinds)
+        if not self.state:
+            # stateless contract: masked lookups become zero-grad entries
+            # on row 0 (a bit-exact no-op for the stateless kinds)
             tgt = (idx if valid is None
                    else jnp.where(valid, idx, 0)).reshape(-1)
         else:
@@ -266,53 +323,166 @@ class RowOptimizer:
             # key them out of range so dedup's scatter drops the segment
             tgt = (idx if valid is None
                    else jnp.where(valid, idx, num_rows)).reshape(-1)
-        return self._apply_rows_ref(store, tgt, grad, lr)
-
-    def _apply_rows_ref(self, store: dict, tgt: jax.Array, grad: jax.Array,
-                        lr) -> dict:
-        """Reference row math on a flat (tgt [L], grad [L, E]) stream."""
-        if self.kind == "sgd":
-            return {"w": apply_rows_sgd(store["w"], tgt, grad, lr)}
-        if self.kind == "split_sgd":
-            nh, nl = apply_rows_split_sgd(store["hi"], store["lo"], tgt,
-                                          grad, lr)
-            return {"hi": nh, "lo": nl}
-        rep, summed = dedup_rows(tgt, grad, store["w"].shape[0])
-        return self.apply_rows_reduced(store, rep, summed, lr)
+        if self.flat_reference is not None:
+            return self.flat_reference(self, store, tgt, grad, lr, seed)
+        rep, summed = dedup_rows(tgt, grad, num_rows)
+        return self.apply_rows_reduced(store, rep, summed, lr, seed=seed)
 
     def apply_rows_reduced(self, store: dict, rep: jax.Array,
-                           summed: jax.Array, lr) -> dict:
+                           summed: jax.Array, lr, seed=None) -> dict:
         """Stateful reference transition on a PRE-REDUCED stream: ``rep``
         [n] unique touched rows (``num_rows`` fillers are dropped by the
         scatter), ``summed`` [n, E] their per-row gradient sums.  Applied
         exactly ONCE per row per step — the contract a batch-chunked
         caller must preserve by accumulating gradients across chunks
         first (``se.apply_update``) instead of re-running the momentum
-        decay / Adagrad accumulate per chunk."""
-        W = store["w"]
-        M = W.shape[0]
-        safe = jnp.minimum(rep, M - 1)
-        w_rows = jnp.take(W, safe, axis=0)
-        if self.kind == "momentum":
-            m_rows = jnp.take(store["mom"], safe, axis=0)
-            m_new = self.beta * m_rows + summed
-            w_new = w_rows - lr * m_new
-            return {"w": W.at[rep].set(w_new),
-                    "mom": store["mom"].at[rep].set(m_new)}
-        if self.kind == "adagrad":
-            s_rows = jnp.take(store["acc"], safe, axis=0)
-            s_new = s_rows + summed * summed
-            w_new = w_rows - lr * summed / (jnp.sqrt(s_new) + self.eps)
-            return {"w": W.at[rep].set(w_new),
-                    "acc": store["acc"].at[rep].set(s_new)}
-        if self.kind == "adagrad_rowwise":
-            s_rows = jnp.take(store["acc"], safe, axis=0)       # [n, 1]
-            ms = jnp.mean(summed * summed, axis=1, keepdims=True)
-            s_new = s_rows + ms
-            w_new = w_rows - lr * summed / (jnp.sqrt(s_new) + self.eps)
-            return {"w": W.at[rep].set(w_new),
-                    "acc": store["acc"].at[rep].set(s_new)}
-        raise ValueError(f"unknown row-optimizer kind {self.kind!r}")
+        decay / Adagrad accumulate per chunk.  Dispatches to the
+        instance's ``reference`` hook."""
+        if self.reference is None:
+            raise ValueError(
+                f"row optimizer {self.name!r} registered no reduced "
+                "reference transition (reference=) — required for "
+                "stateful optimizers")
+        seed = jnp.asarray(0 if seed is None else seed, jnp.int32)
+        return self.reference(self, store, rep, summed, lr, seed)
+
+
+# ---------------------------------------------------------------------------
+# Built-in hook implementations.  ``kernel`` hooks import the Pallas
+# entries lazily (kernels.embedding_update) so the reference paths stay
+# importable without the kernel stack; each one is a thin adapter from
+# the generic hook signature to one kernel entry.
+# ---------------------------------------------------------------------------
+
+def _take_rows(store: dict, rep: jax.Array) -> tuple:
+    """(safe gather index, fp32 weight rows) for a reduced stream."""
+    W = store["w"]
+    safe = jnp.minimum(rep, W.shape[0] - 1)
+    return safe, jnp.take(W, safe, axis=0)
+
+
+def _flatref_sgd(opt, store, tgt, grad, lr, seed):
+    return {"w": apply_rows_sgd(store["w"], tgt, grad, lr)}
+
+
+def _flatref_split_sgd(opt, store, tgt, grad, lr, seed):
+    nh, nl = apply_rows_split_sgd(store["hi"], store["lo"], tgt, grad, lr)
+    return {"hi": nh, "lo": nl}
+
+
+def _ref_momentum(opt, store, rep, summed, lr, seed):
+    safe, w_rows = _take_rows(store, rep)
+    m_rows = jnp.take(store["mom"], safe, axis=0)
+    m_new = opt.beta * m_rows + summed
+    w_new = w_rows - lr * m_new
+    return {"w": store["w"].at[rep].set(w_new),
+            "mom": store["mom"].at[rep].set(m_new)}
+
+
+def _ref_adagrad(opt, store, rep, summed, lr, seed):
+    safe, w_rows = _take_rows(store, rep)
+    s_rows = jnp.take(store["acc"], safe, axis=0)
+    s_new = s_rows + summed * summed
+    w_new = w_rows - lr * summed / (jnp.sqrt(s_new) + opt.eps)
+    return {"w": store["w"].at[rep].set(w_new),
+            "acc": store["acc"].at[rep].set(s_new)}
+
+
+def _ref_adagrad_rowwise(opt, store, rep, summed, lr, seed):
+    safe, w_rows = _take_rows(store, rep)
+    s_rows = jnp.take(store["acc"], safe, axis=0)          # [n, 1]
+    ms = jnp.mean(summed * summed, axis=1, keepdims=True)
+    s_new = s_rows + ms
+    w_new = w_rows - lr * summed / (jnp.sqrt(s_new) + opt.eps)
+    return {"w": store["w"].at[rep].set(w_new),
+            "acc": store["acc"].at[rep].set(s_new)}
+
+
+def _ref_momentum_bf16(opt, store, rep, summed, lr, seed):
+    # same expressions as _kernel_momentum_bf16: decode exact, fp32
+    # transition, stochastically round ONLY the stored state — noise is a
+    # pure function of (seed, row, lane), so this path is bitwise the
+    # fused kernel on the same stream
+    safe, w_rows = _take_rows(store, rep)
+    m_rows = jnp.take(store["mom"], safe, axis=0).astype(jnp.float32)
+    m_new = opt.beta * m_rows + summed
+    w_new = w_rows - lr * m_new
+    m_out = sr_round_bf16(m_new, sr_noise(seed, safe, m_new.shape[-1]))
+    return {"w": store["w"].at[rep].set(w_new),
+            "mom": store["mom"].at[rep].set(m_out)}
+
+
+def _ref_adagrad_bf16(opt, store, rep, summed, lr, seed):
+    safe, w_rows = _take_rows(store, rep)
+    s_rows = jnp.take(store["acc"], safe, axis=0).astype(jnp.float32)
+    s_new = s_rows + summed * summed
+    w_new = w_rows - lr * summed / (jnp.sqrt(s_new) + opt.eps)
+    s_out = sr_round_bf16(s_new, sr_noise(seed, safe, s_new.shape[-1]))
+    return {"w": store["w"].at[rep].set(w_new),
+            "acc": store["acc"].at[rep].set(s_out)}
+
+
+def _k_sgd(opt, store, srows, sbags, smsk, swgt, dY, lr, seed, e_real,
+           interpret):
+    from repro.kernels import embedding_update as ku
+    return {"w": ku.fused_update_fp32_pallas(store["w"], srows, sbags, smsk,
+                                             swgt, dY, lr,
+                                             interpret=interpret)}
+
+
+def _k_split_sgd(opt, store, srows, sbags, smsk, swgt, dY, lr, seed, e_real,
+                 interpret):
+    from repro.kernels import embedding_update as ku
+    nh, nl = ku.fused_update_split_pallas(store["hi"], store["lo"], srows,
+                                          sbags, smsk, swgt, dY, lr,
+                                          interpret=interpret)
+    return {"hi": nh, "lo": nl}
+
+
+def _k_momentum(opt, store, srows, sbags, smsk, swgt, dY, lr, seed, e_real,
+                interpret):
+    from repro.kernels import embedding_update as ku
+    nw, nm = ku.fused_update_momentum_pallas(store["w"], store["mom"],
+                                             srows, sbags, smsk, swgt, dY,
+                                             lr, opt.beta,
+                                             interpret=interpret)
+    return {"w": nw, "mom": nm}
+
+
+def _k_adagrad(opt, store, srows, sbags, smsk, swgt, dY, lr, seed, e_real,
+               interpret):
+    from repro.kernels import embedding_update as ku
+    nw, ns = ku.fused_update_adagrad_pallas(
+        store["w"], store["acc"], srows, sbags, smsk, swgt, dY, lr,
+        opt.eps, False, e_real, interpret=interpret)
+    return {"w": nw, "acc": ns}
+
+
+def _k_adagrad_rowwise(opt, store, srows, sbags, smsk, swgt, dY, lr, seed,
+                       e_real, interpret):
+    from repro.kernels import embedding_update as ku
+    nw, ns = ku.fused_update_adagrad_pallas(
+        store["w"], store["acc"], srows, sbags, smsk, swgt, dY, lr,
+        opt.eps, True, e_real, interpret=interpret)
+    return {"w": nw, "acc": ns}
+
+
+def _k_momentum_bf16(opt, store, srows, sbags, smsk, swgt, dY, lr, seed,
+                     e_real, interpret):
+    from repro.kernels import embedding_update as ku
+    nw, nm = ku.fused_update_momentum_bf16_pallas(
+        store["w"], store["mom"], srows, sbags, smsk, swgt, dY, lr,
+        opt.beta, seed, interpret=interpret)
+    return {"w": nw, "mom": nm}
+
+
+def _k_adagrad_bf16(opt, store, srows, sbags, smsk, swgt, dY, lr, seed,
+                    e_real, interpret):
+    from repro.kernels import embedding_update as ku
+    nw, ns = ku.fused_update_adagrad_bf16_pallas(
+        store["w"], store["acc"], srows, sbags, smsk, swgt, dY, lr,
+        opt.eps, seed, interpret=interpret)
+    return {"w": nw, "acc": ns}
 
 
 # ---------------------------------------------------------------------------
@@ -325,8 +495,20 @@ _REGISTRY: dict[str, RowOptimizer] = {}
 def register(opt: RowOptimizer) -> RowOptimizer:
     if opt.name in _REGISTRY:
         raise ValueError(f"row optimizer {opt.name!r} already registered")
+    if opt.kernel is None:
+        raise ValueError(f"row optimizer {opt.name!r} registered no fused "
+                         "kernel entry (kernel=)")
+    if opt.reference is None and opt.flat_reference is None:
+        raise ValueError(f"row optimizer {opt.name!r} registered no "
+                         "reference transition (reference= or "
+                         "flat_reference=)")
     _REGISTRY[opt.name] = opt
     return opt
+
+
+def unregister(name: str) -> None:
+    """Remove a registered optimizer (tests tearing down toy entries)."""
+    _REGISTRY.pop(name, None)
 
 
 def names() -> tuple:
@@ -376,11 +558,30 @@ def resolve(mdef: Any) -> RowOptimizer:
                 eps=getattr(mdef, "opt_eps", None))
 
 
-register(RowOptimizer(name="sgd", kind="sgd", split=False))
-register(RowOptimizer(name="split_sgd", kind="split_sgd", split=True))
-register(RowOptimizer(name="momentum", kind="momentum", split=False,
-                      state=(("mom", 0),), beta=0.9))
-register(RowOptimizer(name="adagrad_rowwise", kind="adagrad_rowwise",
-                      split=False, state=(("acc", 1),), eps=1e-8))
-register(RowOptimizer(name="adagrad", kind="adagrad", split=False,
-                      state=(("acc", 0),), eps=1e-8))
+register(RowOptimizer(name="sgd", split=False,
+                      kernel=_k_sgd, flat_reference=_flatref_sgd))
+register(RowOptimizer(name="split_sgd", split=True,
+                      kernel=_k_split_sgd,
+                      flat_reference=_flatref_split_sgd))
+register(RowOptimizer(name="momentum", split=False,
+                      state=(("mom", 0),), beta=0.9,
+                      kernel=_k_momentum, reference=_ref_momentum))
+register(RowOptimizer(name="adagrad_rowwise", split=False,
+                      state=(("acc", 1),), eps=1e-8,
+                      kernel=_k_adagrad_rowwise,
+                      reference=_ref_adagrad_rowwise))
+register(RowOptimizer(name="adagrad", split=False,
+                      state=(("acc", 0),), eps=1e-8,
+                      kernel=_k_adagrad, reference=_ref_adagrad))
+# compressed bf16-hi state + seeded stochastic rounding: half the
+# state-slab bytes per touched row (see docs/optim.md for when NOT to)
+register(RowOptimizer(name="momentum_bf16", split=False,
+                      state=(("mom", 0, "bfloat16"),), beta=0.9,
+                      stochastic_round=True,
+                      kernel=_k_momentum_bf16,
+                      reference=_ref_momentum_bf16))
+register(RowOptimizer(name="adagrad_bf16", split=False,
+                      state=(("acc", 0, "bfloat16"),), eps=1e-8,
+                      stochastic_round=True,
+                      kernel=_k_adagrad_bf16,
+                      reference=_ref_adagrad_bf16))

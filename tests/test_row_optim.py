@@ -13,7 +13,9 @@ Contracts under test:
   here verbatim against the unchanged Pallas kernel).
 * State hygiene: masked/padding streams never decay momentum or inflate
   accumulators; untouched rows keep weights AND state bitwise.
-* Acceptance (subprocess, 8 devices): all five registered optimizers run
+* Acceptance (subprocess, 8 devices): all registered optimizers —
+  including the compressed-state ``momentum_bf16``/``adagrad_bf16``,
+  whose per-step seed rides the replicated ``state["sr"]`` counter — run
   through ``make_pipelined_train_step`` for M in {1, 2} with
   ``host_presort`` on and off — embedding stores bit-identical across M,
   and the host-pre-sorted path bitwise matches the fused device-sort
@@ -60,7 +62,12 @@ def _mk(M=60, E=16, B=8, S=2, P=3, vocab=None, seed=0):
 
 def test_registry_names_and_overrides():
     assert set(row.names()) >= {"sgd", "split_sgd", "momentum",
-                                "adagrad_rowwise", "adagrad"}
+                                "adagrad_rowwise", "adagrad",
+                                "momentum_bf16", "adagrad_bf16"}
+    # compressed-state layout: bf16 slabs + the stochastic_round flag
+    bf = row.get("momentum_bf16")
+    assert bf.stochastic_round and not row.get("momentum").stochastic_round
+    assert bf.store_struct(32, 8)["mom"].dtype == jnp.bfloat16
     assert row.get("momentum").beta == 0.9
     assert row.get("momentum", beta=0.5).beta == 0.5
     assert row.get("adagrad", eps=1e-4).eps == 1e-4
@@ -530,5 +537,5 @@ def test_all_optimizers_through_pipeline():
                                            rtol=1e-5, atol=1e-6)
         print(name, 'TABLE_OK')
     """)
-    assert out.count("ROW_OK") == 5
+    assert out.count("ROW_OK") == 7
     assert out.count("TABLE_OK") == 2
