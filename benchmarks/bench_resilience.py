@@ -1,0 +1,287 @@
+"""Resilience benchmark: verified-checkpoint IO cost + recovery drills.
+
+Sections (one BENCH_resilience.json, CI runs --smoke and gates it via
+check_bench.py):
+
+  checkpoint_io   save/restore throughput with per-array checksums and
+                  restore-time verification ON vs OFF -> MB/s each way,
+                  plus the standalone verify cost.  The delta IS the
+                  price of the integrity guarantee.
+  recovery        K committed checkpoints with the newest corrupted:
+                  time for the newest-first verified scan to fall back
+                  and restore from the newest GOOD one (counts exact).
+  drills          the kill matrix end-to-end on a deterministic toy
+                  loop: crash at every checkpoint phase, torn commit,
+                  corrupted latest, loader death, SIGTERM preemption —
+                  each must resume BITWISE vs an uninterrupted run.
+                  drills_run / drills_passed are exact model keys: a
+                  drill that stops passing fails the CI gate.
+  steps_lost      analytic preemption-loss model per checkpoint cadence
+                  (uniform failure time): expected/worst steps lost.
+
+Run:  python benchmarks/bench_resilience.py [--smoke] [--json PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import shutil
+import signal
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def make_state(rows: int, dim: int = 64):
+    rng = np.random.default_rng(0)
+    return {
+        "emb": rng.standard_normal((rows, dim)).astype(np.float32),
+        "sr": np.int32(0),
+    }
+
+
+def state_nbytes(state) -> int:
+    return sum(np.asarray(v).nbytes for v in state.values())
+
+
+def _timed_save(mgr, step, state):
+    t0 = time.perf_counter()
+    mgr.save(step, state, blocking=True)
+    return time.perf_counter() - t0
+
+
+def section_checkpoint_io(state, workdir: Path, repeats: int) -> dict:
+    import jax
+
+    from repro.checkpoint import CheckpointManager
+
+    mb = state_nbytes(state) / 2**20
+    structs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(np.asarray(a).shape, np.asarray(a).dtype), state
+    )
+    out = {"state_rows": int(state["emb"].shape[0]), "repeats": repeats}
+    for label, checksums in (("checksums", True), ("plain", False)):
+        d = workdir / f"io_{label}"
+        mgr = CheckpointManager(d, checksums=checksums)
+        dt = min(_timed_save(mgr, s + 1, state) for s in range(repeats))
+        out[f"save_{label}_mb_s"] = mb / dt
+        verify = checksums  # plain checkpoints have nothing to verify against
+        t0 = time.perf_counter()
+        mgr.restore(structs, verify=verify)
+        dt = time.perf_counter() - t0
+        out[f"restore_{'verified' if verify else 'unverified'}_mb_s"] = mb / dt
+    mgr = CheckpointManager(workdir / "io_checksums")
+    t0 = time.perf_counter()
+    mgr.verify(repeats)
+    out["verify_ms"] = (time.perf_counter() - t0) * 1e3
+    return out
+
+
+def section_recovery(state, workdir: Path, n_ckpts: int) -> dict:
+    from repro.checkpoint import CheckpointManager
+    from repro.faults import FailureLog, corrupt_checkpoint
+
+    import jax
+
+    d = workdir / "recovery"
+    log = FailureLog()
+    mgr = CheckpointManager(d, keep=n_ckpts, event_log=log)
+    for s in range(1, n_ckpts + 1):
+        mgr.save(s, state, blocking=True)
+    corrupt_checkpoint(d, n_ckpts, "flip")
+    t0 = time.perf_counter()
+    good = mgr.latest_valid_step()
+    scan_ms = (time.perf_counter() - t0) * 1e3
+    # count from the timed scan only (restore below re-scans internally)
+    corrupt_skipped = log.counts().get("ckpt_corrupt_skipped", 0)
+    structs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(np.asarray(a).shape, np.asarray(a).dtype), state
+    )
+    t0 = time.perf_counter()
+    step, _ = mgr.restore(structs)
+    restore_ms = (time.perf_counter() - t0) * 1e3
+    assert step == good == n_ckpts - 1
+    return {
+        "checkpoints": n_ckpts,
+        "corrupt_skipped": corrupt_skipped,
+        "fallback_step": int(step),
+        "fallback_scan_ms": scan_ms,
+        "restore_after_corruption_ms": restore_ms,
+    }
+
+
+# --------------------------------------------------------------------------
+# Kill-matrix drills on a deterministic toy loop (mirrors tests/test_faults)
+# --------------------------------------------------------------------------
+
+
+def _toy_step(state, batch):
+    new = {
+        "w": state["w"] * np.float32(0.999) + batch["x"],
+        "sr": state["sr"] + np.int32(1),
+    }
+    return new, float(np.sum(new["w"]))
+
+
+def _toy_init():
+    return {"w": np.arange(64, dtype=np.float32), "sr": np.int32(0)}
+
+
+def _toy_stream(start=0):
+    def batch(i):
+        rng = np.random.default_rng(1000 + i)
+        return {"x": rng.standard_normal(64).astype(np.float32)}
+
+    return (batch(i) for i in itertools.count(start))
+
+
+def _toy_reference(steps):
+    state, stream = _toy_init(), _toy_stream()
+    for _ in range(steps):
+        state, _ = _toy_step(state, next(stream))
+    return state
+
+
+def _run_drill(name, faults, ckpt_dir, steps=12) -> bool:
+    """Inject, die (or stop), restart from disk, require bitwise equality
+    with the uninterrupted run.  Returns pass/fail."""
+    from repro.data.pipeline import ThreadedIterator
+    from repro.faults import FaultPlan, corrupt_checkpoint
+    from repro.train import TrainLoop, TrainLoopConfig
+
+    want = _toy_reference(steps)
+    plan = FaultPlan(faults)
+    batches = (
+        ThreadedIterator(_toy_stream(), faults=plan)
+        if name == "loader_death"
+        else _toy_stream()
+    )
+    cfg = TrainLoopConfig(steps=steps, ckpt_dir=str(ckpt_dir), ckpt_every=3, log_every=10_000)
+    loop = TrainLoop(cfg, _toy_step, _toy_init(), batches, faults=plan)
+    try:
+        loop.run()
+    except BaseException:  # noqa: BLE001 — drills die in many ways
+        pass
+    if name == "corrupt_latest":
+        from repro.checkpoint import CheckpointManager
+
+        latest = CheckpointManager(ckpt_dir).latest_step()
+        if latest:
+            corrupt_checkpoint(ckpt_dir, latest, "flip")
+    loop2 = TrainLoop(cfg, _toy_step, _toy_init(), iter(()))
+    loop2.batches = _toy_stream(loop2.start_step)
+    got = loop2.run()
+    return bool(
+        np.array_equal(got["w"], want["w"]) and int(got["sr"]) == int(want["sr"])
+    )
+
+
+def section_drills(workdir: Path) -> dict:
+    from repro.faults import Fault
+
+    matrix = [
+        ("arrays_crash", [Fault("ckpt.write.arrays", action="crash")]),
+        ("arrays_torn_commit", [Fault("ckpt.write.arrays", action="partial")]),
+        ("meta_crash", [Fault("ckpt.write.meta", action="crash")]),
+        ("commit_crash", [Fault("ckpt.commit", action="crash")]),
+        ("enospc", [Fault("ckpt.write.arrays", times=10,
+                          exc=lambda: OSError(28, "No space left"))]),
+        ("loader_death", [Fault("loader.next", step=7)]),
+        ("sigterm", [Fault("train.step", action="sigterm", step=7)]),
+        ("preempt", [Fault("train.step", action="preempt", step=5)]),
+        ("corrupt_latest", []),
+    ]
+    old = signal.getsignal(signal.SIGTERM)
+    t0 = time.perf_counter()
+    passed = []
+    try:
+        for name, faults in matrix:
+            d = workdir / f"drill_{name}"
+            ok = _run_drill(name, faults, d)
+            passed.append((name, ok))
+    finally:
+        signal.signal(signal.SIGTERM, old)
+    elapsed = time.perf_counter() - t0
+    return {
+        "drills_run": len(matrix),
+        "drills_passed": sum(ok for _, ok in passed),
+        "failed": [name for name, ok in passed if not ok],
+        "drills_s": elapsed,
+    }
+
+
+def section_steps_lost(cadences) -> dict:
+    """Analytic preemption-loss model: with failures uniform in time, a
+    run checkpointing every K steps loses K/2 steps in expectation and
+    K - 1 worst-case (plus the in-flight step) — the knob the
+    ``--ckpt-every`` flag trades against checkpoint write cost."""
+    out = {}
+    for k in cadences:
+        out[f"ckpt_every_{k}"] = {
+            "expected_steps_lost": (k - 1) / 2,
+            "worst_steps_lost": k - 1,
+        }
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced sizes (CI)")
+    ap.add_argument("--json", default=str(ROOT / "BENCH_resilience.json"))
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        rows, repeats, n_ckpts = 8192, 2, 3
+    else:
+        rows, repeats, n_ckpts = 262_144, 3, 4
+
+    state = make_state(rows)
+    tmp = tempfile.mkdtemp(prefix="bench_resilience_")
+    try:
+        workdir = Path(tmp)
+        res = {
+            "config": {
+                "rows": rows,
+                "state_bytes": state_nbytes(state),
+                "smoke": args.smoke,
+            },
+            "checkpoint_io": section_checkpoint_io(state, workdir, repeats),
+            "recovery": section_recovery(state, workdir, n_ckpts),
+            "drills": section_drills(workdir),
+            "steps_lost": section_steps_lost((10, 50, 100)),
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    Path(args.json).write_text(json.dumps(res, indent=1))
+    io, rec, dr = res["checkpoint_io"], res["recovery"], res["drills"]
+    print(
+        f"checkpoint_io, save {io['save_checksums_mb_s']:.1f} MB/s "
+        f"(checksums) vs {io['save_plain_mb_s']:.1f} MB/s (plain), "
+        f"restore {io['restore_verified_mb_s']:.1f} MB/s verified, "
+        f"verify {io['verify_ms']:.2f} ms"
+    )
+    print(
+        f"recovery, fell back to step {rec['fallback_step']} past "
+        f"{rec['corrupt_skipped']} corrupt in {rec['fallback_scan_ms']:.2f} ms "
+        f"(restore {rec['restore_after_corruption_ms']:.2f} ms)"
+    )
+    print(
+        f"drills, {dr['drills_passed']}/{dr['drills_run']} passed in "
+        f"{dr['drills_s']:.1f} s"
+        + (f", FAILED: {dr['failed']}" if dr["failed"] else "")
+    )
+    print(f"wrote {args.json}")
+    if dr["failed"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ import sys
 import traceback
 
 
-SECTIONS = ("ops", "comm", "scaling", "split", "ingest")
+SECTIONS = ("ops", "comm", "scaling", "split", "ingest", "resilience")
 
 
 def _call_main(m) -> None:
@@ -43,6 +43,8 @@ def main() -> None:
                 from benchmarks import bench_scaling as m
             elif sec == "ingest":
                 from benchmarks import bench_ingest as m
+            elif sec == "resilience":
+                from benchmarks import bench_resilience as m
             else:
                 from benchmarks import bench_split_sgd as m
             _call_main(m)

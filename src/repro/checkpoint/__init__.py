@@ -1,2 +1,8 @@
-from repro.checkpoint.manager import (CheckpointManager,  # noqa: F401
-                                      reshard_embedding, reshard_store)
+from repro.checkpoint.manager import (  # noqa: F401
+    FORMAT_VERSION,
+    CheckpointCorruptError,
+    CheckpointError,
+    CheckpointManager,
+    reshard_embedding,
+    reshard_store,
+)

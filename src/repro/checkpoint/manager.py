@@ -1,19 +1,35 @@
-"""Fault-tolerant checkpointing.
+"""Fault-tolerant, VERIFIED checkpointing.
 
 Properties needed at 1000+ nodes, implemented here:
 
 * atomic commit — writes land in ``step_<n>.tmp/`` and are ``os.replace``d
   into place only when complete; a crash mid-save never corrupts the latest
   checkpoint;
-* async save — serialization happens on a background thread so the train
-  loop isn't blocked (the device->host copy is synchronous and cheap
-  relative to the write);
+* verified restore — ``meta.json`` carries a format version and a per-array
+  CRC32; restore checks structure (treedef, key set) and content
+  (checksums), so a torn write or bit-rot that slipped past the atomic
+  commit is DETECTED instead of silently loaded.  ``latest_valid_step``
+  scans newest-first and falls back to the newest checkpoint that
+  verifies — training resumes from a good state, never a corrupt one;
+* bounded retry — transient write failures (``OSError``: ENOSPC, a flaky
+  mount) are retried with exponential backoff before the save is declared
+  lost; an :class:`repro.faults.InjectedCrash` is never retried (a dead
+  process does not get a second attempt);
+* async save with surfaced failures — serialization happens on a background
+  thread so the train loop isn't blocked; an exception on that thread is
+  captured and re-raised at the next ``save()`` / ``wait()`` instead of
+  dying silently with the daemon thread;
 * retention — keep the newest K checkpoints;
 * elastic restore — arrays are stored in GLOBAL logical form with the pytree
   structure, so restoring onto a DIFFERENT mesh (changed device count after
   a failure) is just a re-``device_put`` with the new shardings; the
-  embedding row space is re-laid-out with
-  :func:`reshard_embedding` when the shard count changes.
+  embedding row space is re-laid-out with :func:`reshard_embedding` /
+  :func:`reshard_store` when the shard count changes.
+
+Fault-injection hook points (``repro/faults/plan.py``; no-ops unless a
+drill arms them): ``ckpt.write.arrays``, ``ckpt.write.meta``,
+``ckpt.commit``.  Recovery actions record structured events on the
+optional :class:`repro.faults.FailureLog`.
 
 On a real multi-host deployment each host writes only its addressable
 shards (the file format already keys arrays by tree path, so per-host
@@ -22,16 +38,32 @@ sharded writes are an IO-layer change, not a format change).
 
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
 import threading
 import time
+import zlib
 from pathlib import Path
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro.faults.plan import NO_FAULTS, InjectedCrash
+
+#: meta.json schema version.  1 = pre-verification (no checksums — verified
+#: structurally only); 2 = per-array crc32 + format_version fields.
+FORMAT_VERSION = 2
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be written or restored."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A checkpoint directory exists but fails verification."""
 
 
 def _flatten(state: Any) -> tuple[dict[str, np.ndarray], dict[str, str]]:
@@ -45,8 +77,7 @@ def _flatten(state: Any) -> tuple[dict[str, np.ndarray], dict[str, str]]:
     flat = {}
     dtypes = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         arr = np.asarray(leaf)
         dtypes[key] = str(arr.dtype)
         if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
@@ -55,82 +86,262 @@ def _flatten(state: Any) -> tuple[dict[str, np.ndarray], dict[str, str]]:
     return flat, dtypes
 
 
+def _tree_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
 class CheckpointManager:
-    def __init__(self, directory, keep: int = 3):
+    def __init__(
+        self,
+        directory,
+        keep: int = 3,
+        retries: int = 2,
+        backoff_s: float = 0.05,
+        checksums: bool = True,
+        verify_on_restore: bool = True,
+        faults=None,
+        event_log=None,
+    ):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.checksums = checksums
+        self.verify_on_restore = verify_on_restore
+        self.faults = faults if faults is not None else NO_FAULTS
+        self.events = event_log
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def _record(self, kind: str, **fields) -> None:
+        if self.events is not None:
+            self.events.record(kind, **fields)
 
     # -------------------------------------------------------------- save
     def save(self, step: int, state: Any, blocking: bool = False) -> None:
+        """Write checkpoint ``step``.  Re-raises any failure of a PREVIOUS
+        background save first — an async save never fails silently."""
+        self._raise_pending()
         flat, dtypes = _flatten(state)  # device->host copy happens here
         treedef = jax.tree_util.tree_structure(state)
         if self._thread is not None:
-            self._thread.join()         # one in-flight save at a time
+            self._thread.join()  # one in-flight save at a time
+            self._thread = None
+            self._raise_pending()
 
         def write():
-            tmp = self.dir / f"step_{step}.tmp"
-            final = self.dir / f"step_{step}"
-            if tmp.exists():
-                shutil.rmtree(tmp)
-            tmp.mkdir()
-            np.savez(tmp / "arrays.npz", **flat)
-            (tmp / "meta.json").write_text(json.dumps(
-                {"step": step, "treedef": str(treedef),
-                 "time": time.time(),
-                 "keys": sorted(flat),
-                 "dtypes": dtypes}))
-            if final.exists():
-                shutil.rmtree(final)
-            os.replace(tmp, final)
-            self._gc()
+            self._write_with_retry(step, flat, dtypes, str(treedef))
 
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+
+            def guarded():
+                try:
+                    write()
+                except BaseException as e:  # noqa: BLE001 — surfaced at next save/wait
+                    self._error = e
+                    self._record("ckpt_async_save_failed", step=step, error=repr(e))
+
+            self._thread = threading.Thread(target=guarded, daemon=True)
             self._thread.start()
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            e, self._error = self._error, None
+            if isinstance(e, InjectedCrash):
+                raise e  # simulated process death keeps its semantics
+            raise CheckpointError(f"background checkpoint save failed: {e!r}") from e
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
+
+    def _write_with_retry(self, step, flat, dtypes, treedef_str) -> None:
+        """Bounded retry with exponential backoff around one atomic write
+        attempt.  Only ``OSError`` (transient IO: ENOSPC, flaky mounts) is
+        retried; ``InjectedCrash`` models process death and propagates."""
+        last: Optional[OSError] = None
+        for attempt in range(self.retries + 1):
+            try:
+                self._write_once(step, flat, dtypes, treedef_str)
+                return
+            except OSError as e:
+                last = e
+                self._record("ckpt_write_retry", step=step, attempt=attempt, error=repr(e))
+                if attempt < self.retries:
+                    time.sleep(self.backoff_s * (2**attempt))
+        self._record("ckpt_write_failed", step=step, error=repr(last))
+        raise CheckpointError(
+            f"checkpoint save at step {step} failed after {self.retries + 1} attempts"
+        ) from last
+
+    def _write_once(self, step, flat, dtypes, treedef_str) -> None:
+        tmp = self.dir / f"step_{step}.tmp"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        fault = self.faults.fire("ckpt.write.arrays", step=step)
+        torn = fault is not None and fault.action == "partial"
+        if torn:
+            # commit a TORN arrays.npz behind a valid-looking directory —
+            # the case that slips past atomic rename and only per-array
+            # checksums catch (simulated fs lie / post-commit bit rot)
+            buf = io.BytesIO()
+            np.savez(buf, **flat)
+            raw = buf.getvalue()
+            (tmp / "arrays.npz").write_bytes(raw[: max(1, len(raw) // 3)])
+        else:
+            np.savez(tmp / "arrays.npz", **flat)
+        meta = {
+            "format_version": FORMAT_VERSION,
+            "step": step,
+            "treedef": treedef_str,
+            "time": time.time(),
+            "keys": sorted(flat),
+            "dtypes": dtypes,
+        }
+        if self.checksums:
+            meta["checksums"] = {
+                k: zlib.crc32(np.ascontiguousarray(v).tobytes()) for k, v in flat.items()
+            }
+        self.faults.fire("ckpt.write.meta", step=step)
+        (tmp / "meta.json").write_text(json.dumps(meta))
+        self.faults.fire("ckpt.commit", step=step)
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        if torn:
+            raise InjectedCrash(f"injected torn-commit crash at step {step}")
+        self._gc()
 
     def _gc(self):
         steps = sorted(self.steps())
-        for s in steps[:-self.keep]:
+        for s in steps[: -self.keep]:
             shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # ------------------------------------------------------------ verify
+    def verify(self, step: int) -> None:
+        """Raise :class:`CheckpointCorruptError` unless checkpoint ``step``
+        is structurally complete and (format >= 2) every array's CRC32
+        matches ``meta.json``."""
+        cdir = self.dir / f"step_{step}"
+        meta_p = cdir / "meta.json"
+        arrays_p = cdir / "arrays.npz"
+        if not meta_p.exists() or not arrays_p.exists():
+            raise CheckpointCorruptError(f"step {step}: incomplete checkpoint directory")
+        try:
+            meta = json.loads(meta_p.read_text())
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+            raise CheckpointCorruptError(f"step {step}: unreadable meta.json: {e!r}") from e
+        version = meta.get("format_version", 1)
+        if version > FORMAT_VERSION:
+            raise CheckpointCorruptError(
+                f"step {step}: format_version {version} is newer than this reader ({FORMAT_VERSION})"
+            )
+        if meta.get("step") != step:
+            raise CheckpointCorruptError(
+                f"step {step}: meta.json records step {meta.get('step')!r}"
+            )
+        sums = meta.get("checksums")
+        try:
+            with np.load(arrays_p) as data:
+                keys = sorted(data.files)
+                want = sorted(meta.get("keys", keys))
+                if keys != want:
+                    raise CheckpointCorruptError(
+                        f"step {step}: array keys do not match meta.json"
+                    )
+                if sums is not None:
+                    for k in keys:
+                        crc = zlib.crc32(np.ascontiguousarray(data[k]).tobytes())
+                        if crc != sums.get(k):
+                            raise CheckpointCorruptError(
+                                f"step {step}: checksum mismatch on {k!r} "
+                                f"(stored {sums.get(k)}, computed {crc})"
+                            )
+        except CheckpointCorruptError:
+            raise
+        except Exception as e:  # noqa: BLE001 — any load failure IS corruption
+            raise CheckpointCorruptError(f"step {step}: unreadable arrays.npz: {e!r}") from e
+
+    def is_valid(self, step: int) -> bool:
+        try:
+            self.verify(step)
+            return True
+        except CheckpointCorruptError:
+            return False
 
     # ----------------------------------------------------------- restore
     def steps(self) -> list[int]:
-        return sorted(int(p.name.split("_")[1]) for p in self.dir.iterdir()
-                      if p.is_dir() and p.name.startswith("step_")
-                      and not p.name.endswith(".tmp"))
+        return sorted(
+            int(p.name.split("_")[1])
+            for p in self.dir.iterdir()
+            if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
+        )
 
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
 
-    def restore(self, like: Any, step: Optional[int] = None,
-                shardings: Any = None) -> tuple[int, Any]:
+    def latest_valid_step(self) -> Optional[int]:
+        """Newest step that passes :meth:`verify`.  Corrupt or incomplete
+        checkpoints are skipped (and logged) — the fallback scan that keeps
+        a torn latest checkpoint from wedging a restart."""
+        for step in sorted(self.steps(), reverse=True):
+            try:
+                self.verify(step)
+                return step
+            except CheckpointCorruptError as e:
+                self._record("ckpt_corrupt_skipped", step=step, error=str(e))
+                print(f"[ckpt] skipping corrupt checkpoint step {step}: {e}")
+        return None
+
+    def restore(
+        self,
+        like: Any,
+        step: Optional[int] = None,
+        shardings: Any = None,
+        verify: Optional[bool] = None,
+    ) -> tuple[int, Any]:
         """Restore into the structure of ``like`` (a pytree of arrays or
         ShapeDtypeStructs).  ``shardings`` (same structure) re-places the
-        arrays — pass the NEW mesh's shardings for an elastic restart."""
-        step = step if step is not None else self.latest_step()
+        arrays — pass the NEW mesh's shardings for an elastic restart.
+
+        With verification on (the default), ``step=None`` resolves to
+        :meth:`latest_valid_step` — corrupt checkpoints are skipped, and an
+        explicitly requested ``step`` must verify or the restore refuses.
+        """
+        verify = self.verify_on_restore if verify is None else verify
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            step = self.latest_valid_step() if verify else self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no {'valid ' if verify else ''}checkpoints in {self.dir}")
+        elif verify:
+            self.verify(step)
         cdir = self.dir / f"step_{step}"
         data = np.load(cdir / "arrays.npz")
+        meta = json.loads((cdir / "meta.json").read_text())
         # dtype tags (see _flatten): older checkpoints lack them and fall
         # back to the target leaf's dtype alone
-        tags = json.loads((cdir / "meta.json").read_text()).get("dtypes", {})
+        tags = meta.get("dtypes", {})
         paths = jax.tree_util.tree_flatten_with_path(like)
+        if verify and meta.get("treedef") is not None:
+            want_tree = str(jax.tree_util.tree_structure(like))
+            if meta["treedef"] != want_tree:
+                raise CheckpointError(
+                    f"step {step}: checkpoint tree structure does not match the "
+                    f"restore target (saved {meta['treedef']}, want {want_tree})"
+                )
         leaves = []
         import ml_dtypes
+
         for path, leaf in paths[0]:
-            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                           for p in path)
+            key = _tree_key(path)
             arr = data[key]
             tag = tags.get(key)
             want = str(getattr(leaf, "dtype", "")) or tag or ""
@@ -144,7 +355,8 @@ class CheckpointManager:
                 raise ValueError(
                     f"checkpoint leaf {key!r} dtype mismatch: saved as "
                     f"{tag}, restore target {want} — convert the state "
-                    "explicitly instead of reinterpreting it")
+                    "explicitly instead of reinterpreting it"
+                )
             if arr.dtype == np.uint16 and want == "bfloat16":
                 arr = arr.view(ml_dtypes.bfloat16)
             leaves.append(arr)
@@ -154,8 +366,7 @@ class CheckpointManager:
         return step, state
 
 
-def reshard_embedding(old_layout, new_layout, W_old: np.ndarray
-                      ) -> np.ndarray:
+def reshard_embedding(old_layout, new_layout, W_old: np.ndarray) -> np.ndarray:
     """Re-lay-out a unified embedding array when the shard count (and hence
     row padding / bin packing) changes across an elastic restart."""
     spec = old_layout.spec
@@ -169,14 +380,13 @@ def reshard_embedding(old_layout, new_layout, W_old: np.ndarray
         for pos, s in enumerate(layout.padded_slots):
             if s >= 0 and layout.slot_to_table[s] == t:
                 shard = pos // layout.slots_per_shard
-                return shard * layout.rows_per_shard + \
-                    int(layout.slot_local_offsets[pos])
+                return shard * layout.rows_per_shard + int(layout.slot_local_offsets[pos])
         raise KeyError(t)
 
     for t, rows in enumerate(spec.table_rows):
         src = table_base(old_layout, t)
         dst = table_base(new_layout, t)
-        W_new[dst:dst + rows] = W_old[src:src + rows]
+        W_new[dst : dst + rows] = W_old[src : src + rows]
     return W_new
 
 
@@ -188,5 +398,4 @@ def reshard_store(old_layout, new_layout, store: dict) -> dict:
     keep their dtypes (bf16 hi / uint16 lo / fp32 state / compressed
     bf16-hi state: ``np.asarray`` of a bf16 jax array yields an
     ``ml_dtypes.bfloat16`` view and the new slab inherits it)."""
-    return {k: reshard_embedding(old_layout, new_layout, np.asarray(v))
-            for k, v in store.items()}
+    return {k: reshard_embedding(old_layout, new_layout, np.asarray(v)) for k, v in store.items()}

@@ -146,19 +146,36 @@ class ThreadedIterator:
     and joins — abandoning a partially-consumed stream does not leak a
     blocked thread or its queued items.  ``stats`` counts ``prep_s``
     (worker: source pull + transform), ``wait_s`` (consumer blocked on
-    the queue) and ``batches``.
+    the queue), ``batches`` and ``retries``.
+
+    Resilience knobs: ``retries`` bounds a retry-with-backoff on
+    TRANSIENT worker exceptions (a flaky shard read whose ``__next__``
+    can be called again; generators that die stay dead and simply end
+    the stream) — beyond the budget the queue is poisoned as before.
+    ``faults`` is an optional :class:`repro.faults.FaultPlan`; the
+    worker fires the ``loader.next`` site once per pull (step-indexed by
+    pull count), which is where drills inject loader deaths and stalls.
+    After a poison is delivered the stream goes STICKY-DEAD: the
+    exception is raised once and later pulls see ``StopIteration`` —
+    a consumer that absorbs the error (skip-batch budget) must never
+    hang on the dead worker's empty queue.
     """
 
     def __init__(self, source: Iterable, *,
                  transform: Optional[Callable] = None, depth: int = 2,
-                 name: str = "ThreadedIterator"):
+                 name: str = "ThreadedIterator", retries: int = 0,
+                 retry_backoff_s: float = 0.05, faults=None):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self._source = source
         self._transform = transform
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
-        self.stats = {"prep_s": 0.0, "wait_s": 0.0, "batches": 0}
+        self._retries = retries
+        self._retry_backoff_s = retry_backoff_s
+        self._faults = faults
+        self.stats = {"prep_s": 0.0, "wait_s": 0.0, "batches": 0,
+                      "retries": 0}
         self._thread = threading.Thread(target=self._work, daemon=True,
                                         name=name)
         self._started = False
@@ -175,15 +192,35 @@ class ThreadedIterator:
     def _work(self) -> None:
         try:
             it = iter(self._source)
+            failures = 0
+            pulls = 0
             while not self._stop.is_set():
                 t0 = time.perf_counter()
                 try:
+                    if self._faults is not None:
+                        self._faults.fire("loader.next", step=pulls)
                     item = next(it)
+                    if self._transform is not None:
+                        item = self._transform(item)
                 except StopIteration:
                     self._put(_DONE)
                     return
-                if self._transform is not None:
-                    item = self._transform(item)
+                except _Stopped:
+                    raise
+                except Exception as e:  # noqa: BLE001 — bounded retry
+                    # transient worker failure: retry the pull (sources
+                    # whose __next__ is re-callable survive; a dead
+                    # generator raises StopIteration on the retry and the
+                    # stream ends); past the budget, poison as usual.
+                    # InjectedCrash is a BaseException: never retried.
+                    if failures < self._retries:
+                        failures += 1
+                        self.stats["retries"] += 1
+                        time.sleep(self._retry_backoff_s
+                                   * (2 ** (failures - 1)))
+                        continue
+                    raise
+                pulls += 1
                 self.stats["prep_s"] += time.perf_counter() - t0
                 self._put(item)
         except _Stopped:
@@ -214,6 +251,14 @@ class ThreadedIterator:
                 pass
             raise StopIteration
         if isinstance(item, _Poison):
+            # sticky-dead: the worker exited after poisoning, so a consumer
+            # that catches this exception (TrainLoop's skip-batch budget)
+            # and pulls again must observe end-of-stream, not block forever
+            # on an empty queue nothing refills
+            try:
+                self._q.put_nowait(_DONE)
+            except queue.Full:
+                pass
             raise item.exc
         self.stats["batches"] += 1
         return item
@@ -260,13 +305,15 @@ class HostPipeline(ThreadedIterator):
     """
 
     def __init__(self, batches: Iterable[dict], *, layout=None,
-                 presort: bool = False, depth: int = 2):
+                 presort: bool = False, depth: int = 2, retries: int = 0,
+                 faults=None):
         if presort and layout is None:
             raise ValueError("presort=True requires the embedding layout")
         self._layout = layout
         self._presort = presort
         super().__init__(batches, transform=self._prep, depth=depth,
-                         name="HostPipeline")
+                         name="HostPipeline", retries=retries,
+                         faults=faults)
 
     def _prep(self, b: dict) -> dict:
         out = dict(b)

@@ -1,0 +1,19 @@
+"""Deterministic fault injection + structured failure-event logging.
+
+The drill harness behind ``docs/resilience.md``: a seeded, step-indexed
+:class:`FaultPlan` fires faults through explicit hook points in the
+checkpoint / train / data layers, and a :class:`FailureLog` records every
+recovery action those layers take.  ``tests/test_faults.py`` runs the
+kill matrix; ``benchmarks/bench_resilience.py`` prices recovery.
+"""
+
+from repro.faults.log import FailureLog  # noqa: F401
+from repro.faults.plan import (  # noqa: F401
+    CKPT_SITES,
+    NO_FAULTS,
+    SITES,
+    Fault,
+    FaultPlan,
+    InjectedCrash,
+    corrupt_checkpoint,
+)

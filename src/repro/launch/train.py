@@ -147,6 +147,17 @@ def main():
                     help="adagrad denominator floor override for "
                          "--optimizer")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="checkpoint cadence in completed steps (preemption "
+                         "cost: up to ckpt-every-1 steps of lost work)")
+    ap.add_argument("--skip-batch-budget", type=int, default=0,
+                    help="transient loader failures absorbed per run "
+                         "(each skip is logged; beyond the budget the "
+                         "failure propagates)")
+    ap.add_argument("--event-log", default=None,
+                    help="append structured failure/recovery events "
+                         "(checkpoint retries, corrupt-checkpoint skips, "
+                         "batch skips, preemptions) to this .jsonl file")
     ap.add_argument("--alpha", type=float, default=0.0,
                     help="index-skew for sparse streams (paper Fig. 8)")
     ap.add_argument("--microbatches", type=int, default=1,
@@ -275,12 +286,18 @@ def main():
         stream = ({k: jax.numpy.asarray(v) for k, v in b.items()}
                   for b in token_stream(0, cfg.vocab, B, L))
 
+    event_log = None
+    if args.event_log:
+        from repro.faults import FailureLog
+        event_log = FailureLog(args.event_log)
     loop = TrainLoop(
         TrainLoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
-                        prefetch=args.prefetch),
+                        ckpt_every=args.ckpt_every,
+                        prefetch=args.prefetch,
+                        skip_batch_budget=args.skip_batch_budget),
         step, state, stream,
         state_shardings=shardings if args.ckpt_dir else None,
-        batch_shardings=batch_shardings)
+        batch_shardings=batch_shardings, event_log=event_log)
     try:
         loop.run()
     finally:

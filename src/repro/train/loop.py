@@ -3,33 +3,51 @@
 Scale features (designed for 1000+ node SPMD jobs, exercised here on the
 local device set):
 
-* checkpoint/restart — periodic async checkpoints (atomic commit), restore
-  on startup, final checkpoint on SIGTERM/KeyboardInterrupt (preemption
-  safety);
+* checkpoint/restart — periodic async checkpoints (atomic commit, verified
+  on restore: ``repro/checkpoint/manager.py``), restore on startup from the
+  newest VALID checkpoint (corrupt ones are skipped), final checkpoint on
+  SIGTERM / KeyboardInterrupt / any in-loop failure (the save lives in a
+  ``finally``, so preemption safety is not lost to an exception) — except a
+  simulated process death (:class:`repro.faults.InjectedCrash`), which dies
+  checkpoint-less like a real ``kill -9``;
 * straggler mitigation — a per-step timing ring buffer flags steps slower
   than ``threshold x`` the running median; in synchronous SPMD you cannot
   drop a worker, so the mitigation hook rebalances DATA: the elastic
   sampler shrinks the slow host's shard (callback-based so deployments can
   plug in their own telemetry);
+* loader fault containment — a counted skip-batch budget
+  (``TrainLoopConfig.skip_batch_budget``) absorbs transient loader
+  exceptions: each one is logged and the pull retried, up to the budget;
+  beyond it the failure propagates (and the final checkpoint still
+  commits).  A source that ends (``StopIteration``) ends the run cleanly
+  at the last completed step;
 * elastic restart — on device-count change, states are restored through
-  CheckpointManager with the NEW mesh's shardings (global-array format; see
-  repro/checkpoint/manager.py), embeddings re-laid-out via
-  ``reshard_embedding``;
+  CheckpointManager with the NEW mesh's shardings (global-array format),
+  embeddings re-laid-out via ``reshard_embedding`` / ``reshard_store``;
 * host-side prefetch — :func:`prefetch_to_device` runs a worker thread
   keeping ``size`` batches submitted to the devices (``jax.device_put``
   is async), so the loader's host work AND the H2D transfer of batch n+1
-  overlap step n's device compute — the host-side leg of the staged
-  pipeline's comm/compute overlap (repro/core/pipeline.py; the shard
-  decode + pre-sort leg lives in repro/data/pipeline.py).  Worker
-  failures poison the queue and re-raise at the consumer — a dead loader
-  fails the loop instead of hanging it.
+  overlap step n's device compute.  Worker failures poison the queue and
+  re-raise at the consumer — a dead loader fails the loop instead of
+  hanging it.
+
+SIGTERM handling degrades gracefully off the main thread (Python only
+allows signal handlers there): preemption is then requested via the
+``_stop`` flag — ``FaultPlan`` preemption drills use exactly that path.
+Fault-injection hook point: ``train.step`` (inside the timed window, so
+injected stalls register as stragglers).  Recovery actions record
+structured events on the optional :class:`repro.faults.FailureLog`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import signal
+import sys
+import threading
 import time
+import warnings
 from collections import deque
 from typing import Any, Callable, Iterator, Optional
 
@@ -37,10 +55,13 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import ThreadedIterator
+from repro.faults.plan import NO_FAULTS, InjectedCrash
+
+_EXHAUSTED = object()
 
 
-def prefetch_to_device(batches: Iterator[Any], size: int = 2,
-                       shardings: Any = None) -> Iterator[Any]:
+def prefetch_to_device(batches: Iterator[Any], size: int = 2, shardings: Any = None,
+                       faults=None) -> Iterator[Any]:
     """Wrap a host batch iterator so the next ``size`` batches are already
     submitted to the devices (``jax.device_put`` returns immediately with
     the transfer in flight) while the current step runs.
@@ -60,24 +81,25 @@ def prefetch_to_device(batches: Iterator[Any], size: int = 2,
 
     ``shardings``: optional pytree of shardings matching each batch (the
     ``bspecs``-derived NamedShardings of the step factory); None keeps the
-    default placement."""
+    default placement.  ``faults``: optional
+    :class:`repro.faults.FaultPlan` — the worker fires ``loader.next``
+    per pull (drills inject loader deaths and stalls here)."""
     import jax
 
     if size < 1:
         raise ValueError(f"prefetch size must be >= 1, got {size}")
 
     def put(b):
-        return jax.device_put(b, shardings) if shardings is not None \
-            else jax.device_put(b)
+        return jax.device_put(b, shardings) if shardings is not None else jax.device_put(b)
 
     tit = ThreadedIterator(batches, transform=put, depth=size,
-                           name="prefetch_to_device")
+                           name="prefetch_to_device", faults=faults)
 
     def gen():
         try:
             yield from tit
         finally:
-            tit.close()       # early exit / GC: unblock + drain the worker
+            tit.close()  # early exit / GC: unblock + drain the worker
 
     return gen()
 
@@ -89,17 +111,17 @@ class TrainLoopConfig:
     ckpt_every: int = 50
     keep: int = 3
     log_every: int = 10
-    straggler_threshold: float = 2.0   # step > thr x median -> straggler
+    straggler_threshold: float = 2.0  # step > thr x median -> straggler
     straggler_window: int = 50
-    prefetch: int = 0                  # >0: device_put-ahead window
+    prefetch: int = 0  # >0: device_put-ahead window
+    skip_batch_budget: int = 0  # transient loader errors absorbed per run
 
 
 class StragglerMonitor:
     """Ring-buffer step timer; flags outliers vs the running median."""
 
     def __init__(self, window: int = 50, threshold: float = 2.0,
-                 on_straggler: Optional[Callable[[int, float, float], None]]
-                 = None):
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
         self.times: deque[float] = deque(maxlen=window)
         self.threshold = threshold
         self.events: list[tuple[int, float, float]] = []
@@ -122,7 +144,9 @@ class DataRebalancer:
     """Elastic per-host batch shares.  Synchronous SPMD keeps the global
     batch fixed; when host h straggles we shift a fraction of its rows to
     the fastest hosts (the sampler consults ``shares`` when building the
-    next global batch)."""
+    next global batch).  ``min_share`` floors every host's share (as a
+    fraction of the uniform 1/n share) so repeated penalties never starve
+    a host to zero."""
 
     def __init__(self, n_hosts: int, min_share: float = 0.5):
         self.shares = np.ones(n_hosts) / n_hosts
@@ -144,56 +168,124 @@ class DataRebalancer:
 
 
 class TrainLoop:
-    def __init__(self, cfg: TrainLoopConfig, step_fn: Callable,
-                 state: Any, batches: Iterator[Any],
-                 state_shardings: Any = None, batch_shardings: Any = None):
+    def __init__(self, cfg: TrainLoopConfig, step_fn: Callable, state: Any,
+                 batches: Iterator[Any], state_shardings: Any = None,
+                 batch_shardings: Any = None, faults=None, event_log=None):
         self.cfg = cfg
         self.step_fn = step_fn
         self.state = state
+        self.faults = faults if faults is not None else NO_FAULTS
+        self.events = event_log
         if cfg.prefetch > 0:
             batches = prefetch_to_device(batches, size=cfg.prefetch,
-                                         shardings=batch_shardings)
+                                         shardings=batch_shardings, faults=faults)
         self.batches = batches
-        self.monitor = StragglerMonitor(cfg.straggler_window,
-                                        cfg.straggler_threshold)
-        self.ckpt = (CheckpointManager(cfg.ckpt_dir, cfg.keep)
+        self.monitor = StragglerMonitor(cfg.straggler_window, cfg.straggler_threshold)
+        self.ckpt = (CheckpointManager(cfg.ckpt_dir, cfg.keep, faults=self.faults,
+                                       event_log=event_log)
                      if cfg.ckpt_dir else None)
         self.state_shardings = state_shardings
         self.start_step = 0
         self.losses: list[float] = []
+        self.skipped_batches = 0
         self._stop = False
-        if self.ckpt and self.ckpt.latest_step() is not None:
+        if self.ckpt and self.ckpt.latest_valid_step() is not None:
             self.start_step, self.state = self.ckpt.restore(
                 self.state, shardings=state_shardings)
             print(f"[train] restored checkpoint at step {self.start_step}")
 
+    def _record(self, kind: str, **fields) -> None:
+        if self.events is not None:
+            self.events.record(kind, **fields)
+
     def _sigterm(self, *_):
         self._stop = True
 
+    def _next_batch(self):
+        """Pull the next batch; transient loader exceptions consume the
+        skip-batch budget (each one logged) before propagating.  A source
+        that ends — including a loader that died and went sticky-dead —
+        returns the exhaustion sentinel so the loop can finish cleanly."""
+        while True:
+            try:
+                return next(self.batches)
+            except StopIteration:
+                return _EXHAUSTED
+            except InjectedCrash:
+                raise  # simulated process death: never absorbed
+            except Exception as e:  # noqa: BLE001 — budgeted containment
+                if self.skipped_batches < self.cfg.skip_batch_budget:
+                    self.skipped_batches += 1
+                    self._record("batch_skipped", error=repr(e),
+                                 skipped=self.skipped_batches,
+                                 budget=self.cfg.skip_batch_budget)
+                    print(f"[train] skipping failed batch "
+                          f"({self.skipped_batches}/{self.cfg.skip_batch_budget}): {e!r}")
+                    continue
+                raise
+
     def run(self) -> Any:
-        old = signal.signal(signal.SIGTERM, self._sigterm)
+        """Run to ``cfg.steps``, checkpointing every ``cfg.ckpt_every``
+        completed steps.  The FINAL checkpoint is written in a ``finally``:
+        SIGTERM preemption, KeyboardInterrupt, a dead loader or a failing
+        step all leave the last completed state on disk (only a simulated
+        hard crash skips it).  Off the main thread, SIGTERM installation is
+        skipped with a warning and preemption degrades to the ``_stop``
+        flag."""
+        on_main = threading.current_thread() is threading.main_thread()
+        old = None
+        if on_main:
+            old = signal.signal(signal.SIGTERM, self._sigterm)
+        else:
+            warnings.warn(
+                "TrainLoop.run outside the main thread: SIGTERM handler not "
+                "installed (Python restricts signal handling to the main "
+                "thread); preemption degrades to the _stop flag",
+                RuntimeWarning, stacklevel=2)
         completed = self.start_step
+        crashed = False
         try:
             for step in range(self.start_step, self.cfg.steps):
                 if self._stop:
                     print(f"[train] preemption at step {step}; checkpointing")
+                    self._record("preempted", step=step)
                     break
-                batch = next(self.batches)
+                batch = self._next_batch()
+                if batch is _EXHAUSTED:
+                    print(f"[train] batch stream ended at step {step}")
+                    self._record("stream_exhausted", step=step)
+                    break
                 t0 = time.perf_counter()
+                fault = self.faults.fire("train.step", step=step)
+                if fault is not None and fault.action in ("preempt", "sigterm"):
+                    if fault.action == "sigterm" and on_main:
+                        os.kill(os.getpid(), signal.SIGTERM)  # handler sets _stop
+                    else:
+                        self._stop = True
                 self.state, loss = self.step_fn(self.state, batch)
                 loss = float(loss)
                 dt = time.perf_counter() - t0
                 self.losses.append(loss)
                 completed = step + 1
                 if self.monitor.record(step, dt):
-                    print(f"[train] straggler step {step}: {dt*1e3:.1f} ms")
+                    print(f"[train] straggler step {step}: {dt * 1e3:.1f} ms")
                 if step % self.cfg.log_every == 0:
-                    print(f"[train] step {step} loss {loss:.4f} "
-                          f"{dt*1e3:.1f} ms")
-                if (self.ckpt and completed % self.cfg.ckpt_every == 0):
+                    print(f"[train] step {step} loss {loss:.4f} {dt * 1e3:.1f} ms")
+                if self.ckpt and completed % self.cfg.ckpt_every == 0:
                     self.ckpt.save(completed, self.state)
-            if self.ckpt:
-                self.ckpt.save(completed, self.state, blocking=True)
+        except InjectedCrash:
+            crashed = True  # simulated kill -9: no final checkpoint
+            raise
         finally:
-            signal.signal(signal.SIGTERM, old)
+            unwinding = sys.exc_info()[1] is not None
+            try:
+                if self.ckpt and not crashed:
+                    self.ckpt.save(completed, self.state, blocking=True)
+            except Exception as e:  # noqa: BLE001 — don't mask the in-flight error
+                self._record("final_checkpoint_failed", step=completed, error=repr(e))
+                if not unwinding:
+                    raise
+            finally:
+                if old is not None:
+                    signal.signal(signal.SIGTERM, old)
         return self.state

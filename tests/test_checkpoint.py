@@ -82,3 +82,39 @@ def test_elastic_embedding_reshard(mode_pair):
         np.testing.assert_array_equal(
             W_new[base(new, t):base(new, t) + rows],
             W_old[base(old, t):base(old, t) + rows])
+
+
+def test_reshard_store_preserves_slab_dtypes():
+    """Satellite regression: an elastic reshard must keep every slab's
+    dtype — the split-weight bf16 ``hi`` half, the uint16 ``lo`` bits and
+    fp32 state must NOT silently promote to float64 (np.zeros default) or
+    reinterpret across the hop."""
+    import ml_dtypes
+
+    from repro.checkpoint.manager import reshard_store
+
+    spec = EmbeddingSpec((100, 30, 70, 20), dim=4)
+    old = se.make_layout(spec, 4, "row")
+    new = se.make_layout(spec, 2, "row")  # shrink: N -> N-k
+    rng = np.random.default_rng(3)
+    R = old.total_rows
+    store = {
+        "hi": jnp.asarray(rng.standard_normal((R, 4)), jnp.bfloat16),
+        "lo": jnp.asarray(rng.integers(0, 2**16, (R, 4)), jnp.uint16),
+        "acc": jnp.asarray(rng.standard_normal((R, 1)) ** 2, jnp.float32),
+        "mom": jnp.asarray(rng.standard_normal((R, 4)), jnp.bfloat16),
+    }
+    out = reshard_store(old, new, store)
+    want_dtypes = {"hi": ml_dtypes.bfloat16, "lo": np.uint16,
+                   "acc": np.float32, "mom": ml_dtypes.bfloat16}
+    for k, dt in want_dtypes.items():
+        assert np.asarray(out[k]).dtype == dt, k
+    # content: every real table row survives bitwise (compare raw bits so
+    # bf16 NaN payloads can't hide behind NaN != NaN)
+    for t, rows in enumerate(spec.table_rows):
+        src, dst = int(spec.row_offsets[t]), int(spec.row_offsets[t])
+        for k in store:
+            a = np.asarray(out[k])[dst:dst + rows]
+            b = np.asarray(store[k])[src:src + rows]
+            np.testing.assert_array_equal(
+                a.view(np.uint8), b.view(np.uint8)), (k, t)

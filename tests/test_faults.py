@@ -1,0 +1,674 @@
+"""Fault-injection harness + kill-matrix resilience drills.
+
+The contract under test (docs/resilience.md): for EVERY injected fault —
+each checkpoint write phase, a corrupted latest checkpoint, loader death,
+SIGTERM mid-run, an elastic shard-count change — training resumes BITWISE
+from the newest *verified* checkpoint, never from a corrupt one.
+
+Layers covered here:
+
+* ``repro/faults/plan.py``  — deterministic seeded/step-indexed FaultPlan,
+  action semantics, the explicit hook-point protocol;
+* ``repro/faults/log.py``   — structured failure-event log;
+* ``repro/checkpoint``      — checksums + format version, verified restore,
+  ``latest_valid_step`` fallback, bounded retry, async-failure surfacing;
+* ``repro/data/pipeline.py``— loader fault hook, bounded worker retry,
+  sticky-dead-after-poison;
+* ``repro/train/loop.py``   — preemption drills, skip-batch budget,
+  final-checkpoint-in-finally, hard-crash semantics;
+* the DLRM integration     — the real pipelined step + momentum_bf16 (the
+  stochastic-rounding ``sr`` counter must survive recovery) and the
+  elastic ``reshard_store`` N->N±k drill.
+"""
+
+import itertools
+import json
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptError, CheckpointError,
+                              CheckpointManager)
+from repro.data.pipeline import ThreadedIterator
+from repro.faults import (Fault, FaultPlan, FailureLog, InjectedCrash,
+                          corrupt_checkpoint)
+from repro.train import TrainLoop, TrainLoopConfig, prefetch_to_device
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FailureLog unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_step_indexed_and_counted():
+    plan = FaultPlan([Fault("train.step", step=3, times=2)])
+    for s in (0, 1, 2):
+        assert plan.fire("train.step", step=s) is None
+    with pytest.raises(RuntimeError, match="injected fault"):
+        plan.fire("train.step", step=3)
+    # times=2: the same step-match fires again, then disarms
+    with pytest.raises(RuntimeError):
+        plan.fire("train.step", step=3)
+    assert plan.fire("train.step", step=3) is None
+    assert plan.count("train.step") == 2
+    assert plan.fired == [("train.step", 3, "raise"), ("train.step", 3, "raise")]
+
+
+def test_fault_plan_auto_counter_and_unknown_site():
+    # with step=None at the hook, firing is indexed by per-site call count
+    plan = FaultPlan([Fault("loader.next", step=2)])
+    assert plan.fire("loader.next") is None
+    assert plan.fire("loader.next") is None
+    with pytest.raises(RuntimeError):
+        plan.fire("loader.next")
+    # un-armed sites are free
+    assert plan.fire("ckpt.commit") is None
+    with pytest.raises(ValueError, match="unknown fault action"):
+        Fault("x", action="explode")
+
+
+def test_fault_plan_actions():
+    with pytest.raises(InjectedCrash):
+        FaultPlan.single("ckpt.commit", action="crash").fire("ckpt.commit")
+    assert isinstance(InjectedCrash("x"), BaseException)
+    assert not isinstance(InjectedCrash("x"), Exception)  # retries can't eat it
+    t0 = time.perf_counter()
+    f = FaultPlan.single("train.step", action="stall", delay_s=0.05).fire("train.step")
+    assert f.action == "stall" and time.perf_counter() - t0 >= 0.045
+    # marker actions return the fault for the site to interpret
+    f = FaultPlan.single("train.step", action="preempt").fire("train.step")
+    assert f.action == "preempt"
+    exc = OSError(28, "No space left on device")
+    with pytest.raises(OSError, match="No space left"):
+        FaultPlan.single("ckpt.write.arrays", exc=exc).fire("ckpt.write.arrays")
+
+
+def test_fault_plan_random_is_seed_deterministic():
+    a = FaultPlan.random(7, ["train.step", "loader.next"], steps=50, rate=0.2)
+    b = FaultPlan.random(7, ["train.step", "loader.next"], steps=50, rate=0.2)
+    sched_a = [(f.site, f.step) for f in a._faults]
+    sched_b = [(f.site, f.step) for f in b._faults]
+    assert sched_a == sched_b and len(sched_a) > 0
+    c = FaultPlan.random(8, ["train.step", "loader.next"], steps=50, rate=0.2)
+    assert sched_a != [(f.site, f.step) for f in c._faults]
+
+
+def test_failure_log_records_and_jsonl(tmp_path):
+    log = FailureLog(tmp_path / "events.jsonl")
+    log.record("ckpt_write_retry", step=3, attempt=0)
+    log.record("ckpt_write_retry", step=3, attempt=1)
+    log.record("preempted", step=9)
+    assert log.counts() == {"ckpt_write_retry": 2, "preempted": 1}
+    assert [e["attempt"] for e in log.of_kind("ckpt_write_retry")] == [0, 1]
+    lines = [json.loads(ln) for ln in
+             (tmp_path / "events.jsonl").read_text().splitlines()]
+    assert [ln["kind"] for ln in lines] == ["ckpt_write_retry",
+                                           "ckpt_write_retry", "preempted"]
+    # a plan wired to the log records its injections too
+    plan = FaultPlan([Fault("train.step", action="preempt", step=0)], log=log)
+    plan.fire("train.step", step=0)
+    assert log.counts()["fault_injected"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint layer: verification, fallback, retry, async surfacing
+# ---------------------------------------------------------------------------
+
+
+def _np_state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((64, 8)).astype(np.float32),
+            "sr": np.int32(seed)}
+
+
+def test_checkpoint_meta_carries_version_and_checksums(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _np_state(), blocking=True)
+    meta = json.loads((tmp_path / "step_1" / "meta.json").read_text())
+    assert meta["format_version"] == 2
+    assert set(meta["checksums"]) == set(meta["keys"]) == {"sr", "w"}
+    mgr.verify(1)  # round-trips
+    # future format versions refuse instead of misreading
+    meta["format_version"] = 99
+    (tmp_path / "step_1" / "meta.json").write_text(json.dumps(meta))
+    with pytest.raises(CheckpointCorruptError, match="newer than this reader"):
+        mgr.verify(1)
+
+
+@pytest.mark.parametrize("mode", ["flip", "truncate", "no_meta", "meta_garbage"])
+def test_latest_valid_step_skips_corruption(tmp_path, mode):
+    log = FailureLog()
+    mgr = CheckpointManager(tmp_path, event_log=log)
+    for s in (2, 4, 6):
+        mgr.save(s, _np_state(s), blocking=True)
+    corrupt_checkpoint(tmp_path, 6, mode)
+    assert mgr.latest_step() == 6          # the naive scan still sees it
+    assert mgr.latest_valid_step() == 4    # the verified scan does not
+    step, got = mgr.restore(_np_state())
+    assert step == 4
+    np.testing.assert_array_equal(got["w"], _np_state(4)["w"])
+    assert log.counts()["ckpt_corrupt_skipped"] >= 1
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(_np_state(), step=6)   # explicitly asking for it refuses
+
+
+def test_restore_treedef_mismatch_refuses(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _np_state(), blocking=True)
+    with pytest.raises(CheckpointError, match="tree structure"):
+        mgr.restore({"w": _np_state()["w"]})  # missing the "sr" leaf
+
+
+def test_transient_write_retries_then_succeeds(tmp_path):
+    log = FailureLog()
+    plan = FaultPlan([Fault("ckpt.write.arrays", times=2,
+                            exc=lambda: OSError(28, "No space left on device"))])
+    mgr = CheckpointManager(tmp_path, retries=2, backoff_s=0.001,
+                            faults=plan, event_log=log)
+    mgr.save(5, _np_state(), blocking=True)   # 2 ENOSPC hits, 3rd attempt lands
+    assert mgr.latest_valid_step() == 5
+    assert log.counts()["ckpt_write_retry"] == 2
+
+
+def test_exhausted_write_retries_raise(tmp_path):
+    plan = FaultPlan([Fault("ckpt.write.meta", times=10,
+                            exc=lambda: OSError(28, "No space left on device"))])
+    mgr = CheckpointManager(tmp_path, retries=1, backoff_s=0.001, faults=plan)
+    with pytest.raises(CheckpointError, match="failed after 2 attempts"):
+        mgr.save(5, _np_state(), blocking=True)
+    assert mgr.latest_valid_step() is None
+
+
+def test_async_save_failure_surfaces_at_next_save_and_wait(tmp_path):
+    """Satellite regression: a background-thread save failure used to die
+    silently with the daemon thread; it must re-raise at the next save()
+    or wait()."""
+    plan = FaultPlan([Fault("ckpt.write.arrays", times=10,
+                            exc=lambda: OSError(5, "Input/output error"))])
+    mgr = CheckpointManager(tmp_path, retries=0, faults=plan)
+    mgr.save(1, _np_state(), blocking=False)
+    with pytest.raises(CheckpointError, match="background checkpoint save failed"):
+        mgr.wait()
+    # the pending error is one-shot: surfaced once, then cleared
+    mgr.wait()
+    mgr.save(2, _np_state(), blocking=False)
+    with pytest.raises(CheckpointError, match="background checkpoint save failed"):
+        mgr.save(3, _np_state(), blocking=False)
+
+
+def test_torn_commit_is_detected(tmp_path):
+    """The 'partial' action commits a torn arrays.npz then crashes — the
+    case atomic rename cannot catch and checksums must."""
+    plan = FaultPlan([Fault("ckpt.write.arrays", action="partial", step=4)])
+    mgr = CheckpointManager(tmp_path, faults=plan)
+    mgr.save(2, _np_state(2), blocking=True)
+    with pytest.raises(InjectedCrash):
+        mgr.save(4, _np_state(4), blocking=True)
+    assert 4 in mgr.steps()                # it LOOKS committed...
+    assert not mgr.is_valid(4)             # ...but does not verify
+    assert mgr.latest_valid_step() == 2
+    step, got = mgr.restore(_np_state())
+    assert step == 2
+    np.testing.assert_array_equal(got["w"], _np_state(2)["w"])
+
+
+def test_crash_before_replace_leaves_tmp_only(tmp_path):
+    plan = FaultPlan([Fault("ckpt.commit", action="crash")])
+    mgr = CheckpointManager(tmp_path, faults=plan)
+    with pytest.raises(InjectedCrash):
+        mgr.save(3, _np_state(), blocking=True)
+    assert (tmp_path / "step_3.tmp").exists()
+    assert mgr.steps() == []               # tmp dirs are never scanned
+    mgr.save(3, _np_state(), blocking=True)  # re-save cleans the tmp
+    assert mgr.latest_valid_step() == 3 and not (tmp_path / "step_3.tmp").exists()
+
+
+# ---------------------------------------------------------------------------
+# Loader layer: fault hook, bounded retry, sticky-dead
+# ---------------------------------------------------------------------------
+
+
+class _RetryableSource:
+    """__next__ can be called again after a failure (mmap-style reader).
+    Failures are transient: pull index ``i`` fails once, then succeeds."""
+
+    def __init__(self, n, fail_pulls=(), exc=None):
+        self.n = n
+        self.i = 0
+        self.fail_pulls = set(fail_pulls)
+        self.exc = exc or RuntimeError("shard read failed")
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self.i in self.fail_pulls:
+            self.fail_pulls.discard(self.i)
+            raise self.exc
+        if self.i >= self.n:
+            raise StopIteration
+        self.i += 1
+        return {"x": np.full((8,), self.i - 1, np.float32)}
+
+
+def test_threaded_iterator_retries_transient_faults():
+    src = _RetryableSource(6, fail_pulls=(1, 3))
+    it = ThreadedIterator(src, retries=2, retry_backoff_s=0.001)
+    got = [int(b["x"][0]) for b in it]
+    assert got == list(range(6))           # nothing lost, order kept
+    assert it.stats["retries"] == 2
+
+
+def test_threaded_iterator_exhausted_retries_poison():
+    class AlwaysFails:
+        def __init__(self):
+            self.i = 0
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            if self.i >= 2:
+                raise RuntimeError("permanent decode failure")
+            self.i += 1
+            return {"x": np.full((8,), self.i - 1, np.float32)}
+
+    it = ThreadedIterator(AlwaysFails(), retries=2, retry_backoff_s=0.001)
+    assert int(next(it)["x"][0]) == 0
+    assert int(next(it)["x"][0]) == 1
+    with pytest.raises(RuntimeError, match="permanent decode failure"):
+        for _ in range(10):
+            next(it)
+    assert it.stats["retries"] == 2
+
+
+def test_threaded_iterator_sticky_dead_after_poison():
+    """A consumer that absorbs the poison exception (skip-batch budget)
+    and pulls again must get StopIteration, not a hang."""
+
+    class Dies:
+        def __init__(self):
+            self.i = 0
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            if self.i >= 2:
+                raise RuntimeError("loader died")
+            self.i += 1
+            return self.i
+
+    it = ThreadedIterator(Dies())
+    assert next(it) == 1 and next(it) == 2
+    with pytest.raises(RuntimeError, match="loader died"):
+        next(it)
+    with pytest.raises(StopIteration):
+        next(it)                            # sticky-dead, no deadlock
+
+
+def test_loader_fault_hook_injects_death_and_stall():
+    # death on the 3rd pull
+    plan = FaultPlan([Fault("loader.next", step=2)])
+    it = ThreadedIterator(({"x": i} for i in range(10)), faults=plan)
+    assert next(it)["x"] == 0 and next(it)["x"] == 1
+    with pytest.raises(RuntimeError, match="injected fault"):
+        next(it)
+    # a stall delays but loses nothing
+    plan = FaultPlan([Fault("loader.next", step=1, action="stall", delay_s=0.05)])
+    it = ThreadedIterator(({"x": i} for i in range(4)), faults=plan)
+    assert [b["x"] for b in it] == [0, 1, 2, 3]
+    assert plan.count("loader.next") == 1
+
+
+def test_prefetch_to_device_forwards_faults():
+    plan = FaultPlan([Fault("loader.next", step=1)])
+    it = prefetch_to_device(({"x": np.int32(i)} for i in range(8)), size=2,
+                            faults=plan)
+    assert int(np.asarray(next(it)["x"])) == 0
+    with pytest.raises(RuntimeError, match="injected fault"):
+        for _ in range(8):
+            next(it)
+
+
+# ---------------------------------------------------------------------------
+# Train-loop drills on a deterministic toy model
+# ---------------------------------------------------------------------------
+
+
+def _toy_step(state, batch):
+    new = {"w": state["w"] * np.float32(0.999) + batch["x"],
+           "sr": state["sr"] + np.int32(1)}
+    return new, float(np.sum(new["w"]))
+
+
+def _toy_init():
+    return {"w": np.arange(8, dtype=np.float32), "sr": np.int32(0)}
+
+
+def _toy_stream(start=0):
+    def batch(i):
+        rng = np.random.default_rng(1000 + i)  # pure function of the step
+        return {"x": rng.standard_normal(8).astype(np.float32)}
+
+    return (batch(i) for i in itertools.count(start))
+
+
+def _toy_reference(steps=12):
+    state = _toy_init()
+    stream = _toy_stream()
+    for _ in range(steps):
+        state, _ = _toy_step(state, next(stream))
+    return state
+
+
+def _resume_and_finish(ckpt_dir, steps=12, **loop_kw):
+    """Restart from whatever is on disk and run to completion."""
+    loop = TrainLoop(TrainLoopConfig(steps=steps, ckpt_dir=str(ckpt_dir),
+                                     ckpt_every=3, log_every=1000),
+                     _toy_step, _toy_init(), iter(()), **loop_kw)
+    loop.batches = _toy_stream(loop.start_step)
+    return loop.run(), loop
+
+
+KILL_MATRIX = [
+    ("arrays_crash", [Fault("ckpt.write.arrays", action="crash")]),
+    ("arrays_torn_commit", [Fault("ckpt.write.arrays", action="partial")]),
+    ("meta_crash", [Fault("ckpt.write.meta", action="crash")]),
+    ("commit_crash", [Fault("ckpt.commit", action="crash")]),
+    ("enospc_exhausted", [Fault("ckpt.write.arrays", times=10,
+                                exc=lambda: OSError(28, "No space left"))]),
+    ("loader_death", [Fault("loader.next", step=7)]),
+    ("sigterm_mid_run", [Fault("train.step", action="sigterm", step=7)]),
+    ("preempt_flag", [Fault("train.step", action="preempt", step=5)]),
+]
+
+
+@pytest.mark.parametrize("name,faults", KILL_MATRIX, ids=[k[0] for k in KILL_MATRIX])
+def test_kill_matrix_resumes_bitwise(tmp_path, name, faults):
+    """THE acceptance drill: inject the fault, let the run die (or stop),
+    restart from disk, and require the final state to be BITWISE equal to
+    an uninterrupted run — the resume must come from the newest VERIFIED
+    checkpoint and replay the exact missing steps."""
+    want = _toy_reference(12)
+    log = FailureLog()
+    plan = FaultPlan(faults, log=log)
+    batches = (ThreadedIterator(_toy_stream(), faults=plan)
+               if name == "loader_death" else _toy_stream())
+    loop = TrainLoop(TrainLoopConfig(steps=12, ckpt_dir=str(tmp_path),
+                                     ckpt_every=3, log_every=1000),
+                     _toy_step, _toy_init(), batches, faults=plan,
+                     event_log=log)
+    died = None
+    try:
+        loop.run()
+    except BaseException as e:  # noqa: BLE001 — drills die in many ways
+        died = e
+    assert plan.count() >= 1, "the drill must actually fire"
+    if name in ("sigterm_mid_run", "preempt_flag"):
+        assert died is None                 # preemption is a clean stop
+
+    got, loop2 = _resume_and_finish(tmp_path, event_log=log)
+    assert 0 <= loop2.start_step <= 12
+    np.testing.assert_array_equal(got["w"], want["w"])
+    assert got["sr"] == want["sr"]
+    # and whatever checkpoint it resumed from verifies
+    if loop2.start_step:
+        CheckpointManager(tmp_path).verify(loop2.start_step)
+
+
+def test_corrupt_latest_checkpoint_drill(tmp_path):
+    """Bit-rot after commit: run to step 9, corrupt the newest checkpoint,
+    restart — the resume must fall back to the older verified one and
+    still reach the bitwise-identical final state."""
+    want = _toy_reference(12)
+    loop = TrainLoop(TrainLoopConfig(steps=9, ckpt_dir=str(tmp_path),
+                                     ckpt_every=3, log_every=1000),
+                     _toy_step, _toy_init(), _toy_stream())
+    loop.run()
+    assert CheckpointManager(tmp_path).latest_step() == 9
+    corrupt_checkpoint(tmp_path, 9, "flip")
+    log = FailureLog()
+    got, loop2 = _resume_and_finish(tmp_path, event_log=log)
+    assert loop2.start_step == 6           # fell back past the corrupt 9
+    assert log.counts()["ckpt_corrupt_skipped"] >= 1
+    np.testing.assert_array_equal(got["w"], want["w"])
+    assert got["sr"] == want["sr"]
+
+
+def test_sigterm_preemption_checkpoints_and_resumes(tmp_path):
+    """Preemption drill with a REAL signal: SIGTERM delivered mid-run
+    stops the loop at a step boundary and commits a final checkpoint
+    (nothing lost beyond the configured cadence)."""
+    plan = FaultPlan([Fault("train.step", action="sigterm", step=7)])
+    loop = TrainLoop(TrainLoopConfig(steps=100, ckpt_dir=str(tmp_path),
+                                     ckpt_every=50, log_every=1000),
+                     _toy_step, _toy_init(), _toy_stream(), faults=plan)
+    loop.run()
+    assert len(loop.losses) == 8           # step 7 completed, then stopped
+    assert CheckpointManager(tmp_path).latest_valid_step() == 8
+
+
+def test_run_off_main_thread_degrades_gracefully(tmp_path):
+    """Satellite regression: signal.signal raises ValueError off the main
+    thread; the loop must warn and still run (preemption via _stop)."""
+    result = {}
+
+    def target():
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            plan = FaultPlan([Fault("train.step", action="preempt", step=2)])
+            loop = TrainLoop(TrainLoopConfig(steps=10, ckpt_dir=str(tmp_path),
+                                             ckpt_every=100, log_every=1000),
+                             _toy_step, _toy_init(), _toy_stream(),
+                             faults=plan)
+            loop.run()
+            result["warned"] = any("main thread" in str(w.message)
+                                   for w in caught)
+            result["losses"] = len(loop.losses)
+
+    t = threading.Thread(target=target)
+    t.start()
+    t.join(timeout=60)
+    assert not t.is_alive()
+    assert result["warned"]
+    assert result["losses"] == 3           # preempted after step 2 completed
+    assert CheckpointManager(tmp_path).latest_valid_step() == 3
+
+
+def test_skip_batch_budget_counts_and_bounds():
+    log = FailureLog()
+    loop = TrainLoop(TrainLoopConfig(steps=8, log_every=1000,
+                                     skip_batch_budget=2),
+                     _toy_step, _toy_init(),
+                     _RetryableSource(50, fail_pulls=(2, 5)), event_log=log)
+    loop.run()
+    assert loop.skipped_batches == 2
+    assert len(loop.losses) == 8
+    assert log.counts()["batch_skipped"] == 2
+    # budget exhausted -> the third transient failure propagates
+    loop = TrainLoop(TrainLoopConfig(steps=8, log_every=1000,
+                                     skip_batch_budget=2),
+                     _toy_step, _toy_init(),
+                     _RetryableSource(50, fail_pulls=(1, 2, 3)))
+    with pytest.raises(RuntimeError, match="shard read failed"):
+        loop.run()
+    assert loop.skipped_batches == 2
+
+
+def test_dead_prefetch_loader_within_budget_ends_cleanly(tmp_path):
+    """A loader that dies permanently under a skip budget: the poison is
+    absorbed, the sticky-dead stream reports exhaustion, and the loop ends
+    at the last completed step WITH a final checkpoint — no hang."""
+
+    class DiesAt:
+        def __init__(self, n):
+            self.n = n
+            self.i = 0
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            if self.i >= self.n:
+                raise RuntimeError("loader died for good")
+            self.i += 1
+            return {"x": np.full((8,), 0.01, np.float32)}
+
+    loop = TrainLoop(TrainLoopConfig(steps=50, ckpt_dir=str(tmp_path),
+                                     ckpt_every=100, log_every=1000,
+                                     prefetch=2, skip_batch_budget=1),
+                     _toy_step, _toy_init(), DiesAt(5))
+    loop.run()                              # must not raise or hang
+    assert len(loop.losses) == 5
+    assert loop.skipped_batches == 1
+    assert CheckpointManager(tmp_path).latest_valid_step() == 5
+
+
+def test_injected_stall_registers_as_straggler():
+    plan = FaultPlan([Fault("train.step", action="stall", step=12,
+                            delay_s=0.05)])
+    loop = TrainLoop(TrainLoopConfig(steps=15, log_every=1000),
+                     _toy_step, _toy_init(), _toy_stream(), faults=plan)
+    loop.run()
+    assert 12 in [e[0] for e in loop.monitor.events]
+
+
+# ---------------------------------------------------------------------------
+# DLRM integration: pipelined step + sr counter + elastic reshard drill
+# ---------------------------------------------------------------------------
+
+
+def _dlrm_cfg():
+    from repro.core.dlrm import DLRMConfig
+    return DLRMConfig(name="drill", num_dense=8, bottom=(16, 8), top=(16,),
+                      table_rows=(50, 30, 20, 10), emb_dim=8, pooling=3,
+                      batch=16, sparse_optimizer="momentum_bf16", sr_seed=5)
+
+
+def _dlrm_batch(i):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(2000 + i)
+    idx = np.stack([rng.integers(0, max(2, m // 6), (16, 3))
+                    for m in (50, 30, 20, 10)], 1).astype(np.int32)
+    return {"idx": jnp.asarray(idx),
+            "dense_x": jnp.asarray(rng.standard_normal((16, 8)), jnp.bfloat16),
+            "labels": jnp.asarray(rng.integers(0, 2, (16,)), jnp.float32)}
+
+
+def _dlrm_setup():
+    """The step donates its input state buffers, so every run chain needs
+    a FRESH initial state — ``fresh()`` re-inits from the same PRNG key
+    (bitwise identical every time)."""
+    import jax
+    from repro.core import dlrm as D
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = _dlrm_cfg()
+    step, shardings, _, _ = D.make_train_step(cfg, mesh)
+
+    def fresh():
+        state, _ = D.init_state(jax.random.PRNGKey(0), cfg, mesh)
+        return state
+
+    _, layout = D.init_state(jax.random.PRNGKey(0), cfg, mesh)
+    return cfg, step, shardings, fresh, layout
+
+
+def _dlrm_stream(start=0):
+    return (_dlrm_batch(i) for i in itertools.count(start))
+
+
+def test_dlrm_crash_resume_bitwise_including_sr(tmp_path):
+    """Kill-matrix on the REAL pipelined DLRM step with the compressed
+    momentum_bf16 optimizer: a crash while writing a checkpoint must
+    resume bitwise — including the stochastic-rounding ``sr`` counter, or
+    the dither replays wrong and every later step drifts."""
+    cfg, step, shardings, fresh, _ = _dlrm_setup()
+
+    # uninterrupted reference: 6 steps, snapshotting step 2 (the resume point)
+    want = fresh()
+    ref2_sr = None
+    s = _dlrm_stream()
+    for i in range(6):
+        want, _ = step(want, next(s))
+        if i == 1:
+            ref2_sr = int(want["sr"])
+    want_emb = {k: np.asarray(v) for k, v in want["emb"].items()}
+    want_sr = int(want["sr"])
+
+    # drilled run: hard crash while writing the step-4 checkpoint
+    plan = FaultPlan([Fault("ckpt.write.arrays", action="crash", step=4)])
+    loop = TrainLoop(TrainLoopConfig(steps=6, ckpt_dir=str(tmp_path),
+                                     ckpt_every=2, log_every=1000),
+                     step, fresh(), _dlrm_stream(), faults=plan)
+    with pytest.raises(InjectedCrash):
+        loop.run()
+
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.latest_valid_step() == 2    # the step-4 save died mid-write
+    loop2 = TrainLoop(TrainLoopConfig(steps=6, ckpt_dir=str(tmp_path),
+                                      ckpt_every=2, log_every=1000),
+                      step, fresh(), iter(()), state_shardings=shardings)
+    assert loop2.start_step == 2
+    assert int(loop2.state["sr"]) == ref2_sr
+    loop2.batches = _dlrm_stream(loop2.start_step)
+    got = loop2.run()
+    assert int(got["sr"]) == want_sr
+    for k, v in want_emb.items():
+        np.testing.assert_array_equal(np.asarray(got["emb"][k]), v), k
+
+
+def test_dlrm_elastic_reshard_restart_bitwise(tmp_path):
+    """Elastic N->N±k drill: checkpoint, re-lay-out the embedding store
+    through reshard_store onto a different shard count and back (the row
+    padding / bin packing changes both ways), resume — bitwise equal to
+    the uninterrupted run.  Every slab (weight halves AND per-row
+    optimizer state) must survive the hops with dtype and content intact."""
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint import reshard_store
+    from repro.core import sharded_embedding as se
+    cfg, step, shardings, fresh, layout1 = _dlrm_setup()
+
+    want = fresh()
+    s = _dlrm_stream()
+    for _ in range(6):
+        want, _ = step(want, next(s))
+
+    # run 3 steps, checkpoint, "restart" through a 3-shard layout and back
+    mid = fresh()
+    s = _dlrm_stream()
+    for _ in range(3):
+        mid, _ = step(mid, next(s))
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(3, mid, blocking=True)
+
+    structs = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), mid)
+    got_step, restored = mgr.restore(structs)
+    assert got_step == 3
+    layout3 = se.make_layout(cfg.spec, 3, "row")  # the grown cluster's layout
+    store3 = reshard_store(layout1, layout3, restored["emb"])
+    for k, v in restored["emb"].items():          # dtypes survive the hop
+        assert np.asarray(store3[k]).dtype == np.asarray(v).dtype, k
+    back = reshard_store(layout3, layout1, store3)
+    restored["emb"] = {k: jnp.asarray(v) for k, v in back.items()}
+    restored = jax.device_put(restored, shardings)
+
+    s = _dlrm_stream(3)
+    got = restored
+    for _ in range(3):
+        got, _ = step(got, next(s))
+    assert int(got["sr"]) == int(want["sr"])
+    # compare the REAL table rows: reshard_embedding zero-fills the layout's
+    # padding rows (they carry no state), so a whole-slab compare would
+    # diff init garbage in rows the model never reads
+    spec = cfg.spec
+    for k in want["emb"]:
+        for t, rows_t in enumerate(spec.table_rows):
+            off = int(spec.row_offsets[t])
+            np.testing.assert_array_equal(
+                np.asarray(got["emb"][k])[off:off + rows_t],
+                np.asarray(want["emb"][k])[off:off + rows_t]), (k, t)

@@ -178,3 +178,50 @@ def test_loop_checkpoint_restore(tmp_path):
     assert int(loop2.state) == 10
     loop2.run()
     assert int(loop2.state) == 15
+
+
+def test_rebalancer_min_share_floor_clamps_exactly():
+    """Satellite regression: ``penalize`` must clamp the move so the
+    penalized host lands exactly ON the floor (never below, never a
+    negative move) and the probability mass stays conserved."""
+    rb = DataRebalancer(n_hosts=4, min_share=0.5)
+    floor = 0.5 / 4
+    for _ in range(200):
+        rb.penalize(1, factor=0.5)
+    assert rb.shares[1] == pytest.approx(floor)
+    assert rb.shares.sum() == pytest.approx(1.0)
+    assert (rb.shares >= floor - 1e-12).all()
+    # a host already at the floor: penalize is a no-op, not a drain
+    before = rb.shares.copy()
+    rb.penalize(1)
+    np.testing.assert_allclose(rb.shares, before)
+    # a custom floor of 0 permits full starvation (the old behaviour)
+    rb0 = DataRebalancer(n_hosts=2, min_share=0.0)
+    for _ in range(400):
+        rb0.penalize(0, factor=0.5)
+    assert rb0.shares[0] == pytest.approx(0.0, abs=1e-12)
+
+
+def test_keyboard_interrupt_writes_final_checkpoint(tmp_path):
+    """Satellite regression: Ctrl-C used to skip the final checkpoint
+    (the save sat after the loop, not in a ``finally``).  A
+    KeyboardInterrupt mid-run must leave the last completed step on disk
+    and still propagate."""
+    from repro.checkpoint import CheckpointManager
+
+    def step(state, batch):
+        if state == 7:
+            raise KeyboardInterrupt
+        return state + 1, float(state)
+
+    loop = TrainLoop(TrainLoopConfig(steps=100, ckpt_dir=str(tmp_path),
+                                     ckpt_every=50, log_every=1000),
+                     step, 0, iter(range(10_000)))
+    with pytest.raises(KeyboardInterrupt):
+        loop.run()
+    assert CheckpointManager(tmp_path).latest_valid_step() == 7
+    # and the resumed loop picks up exactly there
+    loop2 = TrainLoop(TrainLoopConfig(steps=100, ckpt_dir=str(tmp_path),
+                                      ckpt_every=50, log_every=1000),
+                      step, 0, iter(range(10_000)))
+    assert loop2.start_step == 7 and int(loop2.state) == 7
