@@ -24,6 +24,18 @@ subprocess (the pipeline's regression surface) and, without ``--dry-run``,
 timed end-to-end (CPU wall-clock: schedule-shape only, NOT
 hardware-representative — the modeled numbers target TPU_V5E).  Results
 land in ``BENCH_pipeline.json``.
+
+``--cache-rows K0,K1,...`` additionally measures the frequency-tiered
+hot-row cache (repro/core/cache.py, docs/cache.md) at each hot_rows=K on
+a zipf(1.05) stream: the subprocess trains the table-mode pipelined step
+for a few steps so the touch counters promote a real hot set, then reads
+the measured all-hot-bag hit rate.  A bag served from the replicated hot
+slab ships no all-to-all payload, so the paired rows report the payload-
+effective exchange volume ``a2a * (1 - hit_rate)`` next to the K=0
+baseline — the index stream (promotion is counter-local) and the HLO
+collective set are unchanged.  The JSON write is a KEY-STABLE MERGE (same
+contract as bench_split_sgd.py): a cache-only or pipeline-only run
+updates exactly the sections it computed.
 """
 
 import argparse
@@ -138,14 +150,69 @@ print(json.dumps(dict(microbatches={mb}, measured_ms=measured_ms,
 
 
 def run_measured(ranks: int, batch: int, mb: int, dry_run: bool) -> dict:
+    return _run_sub(SUB.format(ranks=ranks, batch=batch, mb=mb,
+                               dry_run=dry_run))
+
+
+def _run_sub(code: str) -> dict:
     env = dict(os.environ, PYTHONPATH=str(SRC))
-    code = textwrap.dedent(SUB.format(ranks=ranks, batch=batch, mb=mb,
-                                      dry_run=dry_run))
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env=env, timeout=900)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=900)
     if r.returncode != 0:
         raise RuntimeError(r.stderr[-2000:])
     return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+# Hot-row cache leg: train the REAL table-mode pipelined step on a
+# zipf(1.05) stream so the counter-driven promotion picks an actual hot
+# set, then measure the all-hot-bag hit rate on a held-out batch.  The
+# batch stream is seed-deterministic and promotion is integer-exact, so
+# hit_rate is an EXACT gate key (benchmarks/check_bench.py), not a
+# tolerance-band one.
+SUB_CACHE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ranks}"
+import json, jax, jax.numpy as jnp, numpy as np
+from repro.core.dlrm import DLRMConfig, make_train_step, init_state
+from repro.core import cache as hot_cache
+from repro.data.synthetic import zipf_indices
+from repro.launch.mesh import make_mesh
+from repro.launch.dryrun import parse_collective_bytes
+
+mesh = make_mesh((1, {ranks}), ("data", "model"))
+cfg = DLRMConfig(name="bench", num_dense=32, bottom=(64, 16), top=(64,),
+                 table_rows=(2000,) * 8, emb_dim=16, pooling=5,
+                 batch={batch}, emb_mode="table", idx_input="sharded",
+                 hot_rows={hot}, promote_every=2)
+step, shardings, bspecs, layout = make_train_step(cfg, mesh)
+state, _ = init_state(jax.random.PRNGKey(0), cfg, mesh)
+rng = np.random.default_rng(0)
+
+def batch(i):
+    idx = np.stack([zipf_indices(rng, m, ({batch}, 5), {zipf})
+                    for m in cfg.table_rows], 1).astype(np.int32)
+    return {{"idx": jnp.asarray(idx),
+             "dense_x": jnp.asarray(rng.standard_normal(({batch}, 32)),
+                                    jnp.bfloat16),
+             "labels": jnp.asarray(rng.integers(0, 2, {batch}),
+                                   jnp.float32)}}
+
+b0 = batch(0)
+coll = parse_collective_bytes(step.lower(state, b0).compile().as_text())
+for i in range({steps}):
+    state, loss = step(state, b0 if i == 0 else batch(i))
+jax.block_until_ready(loss)
+hit_rate = 0.0
+if {hot} > 0:
+    hit, _ = hot_cache.hot_bag_local(layout, state["cache"]["hot_w"],
+                                     state["cache"]["hot_pos"],
+                                     batch({steps})["idx"])
+    hit_rate = float(jnp.mean(hit))
+print(json.dumps(dict(hot_rows={hot}, hit_rate=hit_rate,
+                      trained_steps={steps},
+                      collective_bytes=coll["bytes_by_op"],
+                      collective_counts=coll["counts"])))
+"""
 
 
 def rows():
@@ -187,7 +254,7 @@ def pipeline_rows(microbatches, ranks: int, batch: int, dry_run: bool,
         if rec.get("measured_ms") is not None:
             out.append((f"pipeline_M{M}_measured_ms", rec["measured_ms"],
                         f"CPU wall-clock {ranks}r (schedule shape only)"))
-    json_path.write_text(json.dumps({
+    _write_merged(json_path, {
         "model_config": cfg_model.name,
         "modeled_chip": TPU_V5E.name,
         "modeled_ranks": 64,
@@ -196,8 +263,61 @@ def pipeline_rows(microbatches, ranks: int, batch: int, dry_run: bool,
         "measured_backend": "cpu-forced-devices"
                             + (" (dry-run, compile only)" if dry_run else ""),
         "points": points,
-    }, indent=2))
+    })
     out.append(("pipeline_json", 1.0, str(json_path)))
+    return out
+
+
+def merge_sections(old, new):
+    # local copy of bench_split_sgd.merge_sections (same dual-path import
+    # caveat as bench_split_sgd._timeit): key-stable deep merge, so a
+    # cache-only run never drops the pipeline points and vice versa
+    for k, v in new.items():
+        if isinstance(v, dict) and isinstance(old.get(k), dict):
+            merge_sections(old[k], v)
+        else:
+            old[k] = v
+    return old
+
+
+def _write_merged(json_path: Path, new: dict) -> None:
+    old = {}
+    if json_path.exists():
+        try:
+            old = json.loads(json_path.read_text())
+        except json.JSONDecodeError:
+            pass          # corrupt previous file: write fresh
+    json_path.write_text(json.dumps(merge_sections(old, new), indent=2))
+
+
+def cache_rows(ks, ranks: int, batch: int, json_path: Path,
+               steps: int = 6, zipf: float = 1.05):
+    """Paired hot_rows=K rows: measured hit rate + payload-effective
+    all-to-all volume on the zipf stream, vs the K=0 baseline."""
+    section = {}
+    out = []
+    # Eq.2 share of the measured bench config (S=8 tables, E=16, fwd+bwd)
+    raw_a2a = 2 * (8 * batch * 16 * 4) / ranks
+    for K in ks:
+        rec = _run_sub(SUB_CACHE.format(ranks=ranks, batch=batch, hot=K,
+                                        steps=steps, zipf=zipf))
+        hit = rec["hit_rate"]
+        rec["a2a_payload_per_rank"] = raw_a2a
+        rec["a2a_payload_effective_per_rank"] = raw_a2a * (1.0 - hit)
+        rec["exchange_bytes_saved"] = raw_a2a * hit
+        rec["a2a_reduction_x"] = (1.0 / (1.0 - hit)) if hit < 1.0 else \
+            float("inf")
+        section[f"hot{K}"] = rec
+        out.append((f"cache_hot{K}_hit_rate", hit,
+                    f"all-hot-bag fraction, zipf({zipf}) after "
+                    f"{steps} steps"))
+        out.append((f"cache_hot{K}_a2a_effective_B_per_rank",
+                    rec["a2a_payload_effective_per_rank"],
+                    "a2a payload x (1 - hit_rate)"))
+        out.append((f"cache_hot{K}_a2a_reduction_x",
+                    rec["a2a_reduction_x"], "vs own raw a2a payload"))
+    _write_merged(json_path, {"cache": dict(
+        section, measured_ranks=ranks, measured_batch=batch, zipf=zipf)})
     return out
 
 
@@ -212,6 +332,11 @@ def main(argv=None):
                     help="forced device count for the measured leg")
     ap.add_argument("--batch", type=int, default=64,
                     help="global batch for the measured leg")
+    ap.add_argument("--cache-rows", default=None,
+                    help="comma list of hot_rows K values, e.g. 0,64: "
+                         "measure the hot-row cache's bag hit rate and "
+                         "payload-effective all-to-all volume at each K "
+                         "on a zipf(1.05) stream (docs/cache.md)")
     ap.add_argument("--json", default=str(ROOT / "BENCH_pipeline.json"))
     args = ap.parse_args(argv)
 
@@ -221,6 +346,11 @@ def main(argv=None):
         ms = [int(x) for x in args.microbatches.split(",") if x]
         for name, val, derived in pipeline_rows(
                 ms, args.ranks, args.batch, args.dry_run, Path(args.json)):
+            print(f"{name},{val:.4f},{derived}")
+    if args.cache_rows:
+        ks = [int(x) for x in args.cache_rows.split(",") if x]
+        for name, val, derived in cache_rows(ks, args.ranks, args.batch,
+                                             Path(args.json)):
             print(f"{name},{val:.4f},{derived}")
 
 

@@ -174,6 +174,37 @@ def embedding_update_bench(modes=("reference", "fused"),
                     dY[:Lm // P], iters=1)
             result["optimizers"][name] = r
 
+    # --- hot-row cache rows (repro/core/cache.py, docs/cache.md) -------
+    # counter-driven promotion on this shard's OWN zipf stream: the first
+    # half of the flat lookups trains the touch counters, the real
+    # ``select_hot`` promotion picks the top-K, and the second half
+    # measures the all-hot-bag hit rate.  A hot bag ships no exchange
+    # payload, so ``exchange_bytes_saved`` is hit_bags * E * 4 per step.
+    # Counters and promotion are integer-exact on the seeded stream, so
+    # both keys are EXACT gate keys in benchmarks/check_bench.py.
+    from repro.core import cache as hot_cache
+    from repro.core import sharded_embedding as se
+    from repro.core.embedding import EmbeddingSpec
+
+    layout1 = se.make_layout(EmbeddingSpec((M,), E), 1, "row")
+    warm, ev = np.asarray(tgt[:L // 2]), np.asarray(tgt[L // 2:])
+    cnt = np.bincount(warm, minlength=layout1.total_rows).astype(np.int32)
+    result["cache"] = {"warmup_lookups": len(warm),
+                       "eval_bags": len(ev) // P}
+    for K in (0, 64):
+        hot = np.zeros(layout1.total_rows, bool)
+        if K:
+            ids = np.asarray(hot_cache.select_hot(
+                layout1, jnp.asarray(cnt), K, seed=0))
+            hot[ids[ids >= 0]] = True
+        bag_hit = hot[ev].reshape(-1, P).all(axis=1)
+        hit = float(bag_hit.mean())
+        result["cache"][f"hot{K}"] = {
+            "hot_rows": K,
+            "hit_rate": hit,
+            "exchange_bytes_saved": int(bag_hit.sum()) * E * 4,
+        }
+
     # --- measured wall-clock -------------------------------------------
     if "reference" in modes:
         f = jax.jit(apply_rows_split_sgd)
@@ -260,6 +291,10 @@ def main(argv=None):
         print(f"embed_update_opt_{name}_bytes_per_step,"
               f"{r['bytes_per_step']:.0f},"
               f"state {r['state_bytes_per_row']}B/row, {r['touches']}")
+    for k, r in res["cache"].items():
+        if isinstance(r, dict):
+            print(f"embed_update_cache_{k}_hit_rate,{r['hit_rate']:.4f},"
+                  f"saves {r['exchange_bytes_saved']} B/step exchange")
     for path in ("reference", "fused"):
         for k in ("us_measured", "us_measured_interpret"):
             if k in res[path]:

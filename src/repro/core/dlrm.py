@@ -23,14 +23,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.embedding import EmbeddingSpec
 from repro.core import sharded_embedding as se
 from repro.core.interaction import dot_interaction, interaction_output_dim
 from repro.models.mlp import init_mlp, mlp_forward
-from repro.optim import data_parallel as dp
 from repro.optim import row as row_optim
 
 
@@ -86,6 +85,16 @@ class DLRMConfig:
     # initial per-step stochastic-rounding counter (only materialized when
     # the resolved optimizer registered stochastic_round=True)
     sr_seed: int = 0
+    # frequency-tiered hot-row cache (repro/core/cache.py): replicate the
+    # top-``hot_rows`` rows per table (by touch count) on every rank and
+    # serve all-hot bags locally, off the all-to-all payload (table mode
+    # + idx_input='sharded').  0 = off.
+    hot_rows: int = 0
+    # re-rank the hot set from the touch counters every this-many steps
+    promote_every: int = 1
+    # 'allreduce' (mirror refreshed every step; bitwise == cache off) or
+    # 'deferred:N' (refresh every N steps; bounded drift)
+    hot_sync: str = "allreduce"
 
     @property
     def spec(self) -> EmbeddingSpec:
@@ -151,72 +160,23 @@ def make_layout(cfg: DLRMConfig, mesh) -> se.ShardedEmbeddingLayout:
 
 
 def state_struct(cfg: DLRMConfig, mesh, rngs: bool = True):
-    """(state pytree of arrays-or-structs, sharding pytree).  With
-    ``rngs=False`` only ShapeDtypeStructs are produced (dry-run)."""
-    layout = make_layout(cfg, mesh)
-    all_axes, model, batch_axes = mesh_axes(mesh)
-    emb_ax, _ = emb_axes_for(cfg, mesh)
-    ns_total = int(np.prod(list(mesh.shape.values())))
-    E = cfg.emb_dim
-
-    dense_tree = jax.eval_shape(
-        lambda: init_dense_params(jax.random.PRNGKey(0), cfg))
-    n_dense = dp.ravel_size(dense_tree)
-    padded = -(-n_dense // (ns_total * cfg.num_buckets)) * (
-        ns_total * cfg.num_buckets)
-
-    emb_rows = layout.total_rows
-    emb_spec = P(emb_ax, None)
-
-    opt = row_optim.resolve(cfg)
-    structs = {
-        "emb": opt.store_struct(emb_rows, E),
-        "dense": {
-            "hi": jax.tree.map(
-                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
-                dense_tree),
-            "lo": jax.ShapeDtypeStruct((padded,), jnp.uint16),
-            "err": (jax.ShapeDtypeStruct((padded,), jnp.float32)
-                    if cfg.compress_grads else None),
-        },
-    }
-    specs = {
-        "emb": jax.tree.map(lambda _: emb_spec, structs["emb"]),
-        "dense": {
-            "hi": jax.tree.map(lambda _: P(), structs["dense"]["hi"]),
-            "lo": P(all_axes),
-            "err": P(all_axes) if cfg.compress_grads else None,
-        },
-    }
-    if opt.stochastic_round:
-        structs["sr"] = jax.ShapeDtypeStruct((), jnp.int32)
-        specs["sr"] = P()
-    shardings = jax.tree.map(
-        lambda s: None if s is None else NamedSharding(mesh, s), specs,
-        is_leaf=lambda x: isinstance(x, P) or x is None)
-    return structs, specs, shardings, layout
+    """(state pytree of arrays-or-structs, sharding pytree).  Delegates to
+    the generic hybrid builder (the DLRM state IS the hybrid skeleton's:
+    embedding store + split dense + optional sr counter + optional hot-row
+    cache subtree), so optimizer- and cache-driven layout changes stay
+    single-sourced.  ``rngs`` is kept for call-site compatibility; only
+    ShapeDtypeStructs are ever produced here."""
+    del rngs
+    from repro.core import hybrid as H
+    return H.state_struct(as_hybrid_def(cfg), mesh)
 
 
 def init_state(key: jax.Array, cfg: DLRMConfig, mesh) -> dict:
-    """Materialize a real initial state (small/smoke configs)."""
-    structs, specs, shardings, layout = state_struct(cfg, mesh)
-    ke, kd = jax.random.split(key)
-    ns_total = int(np.prod(list(mesh.shape.values())))
-    scale = 1.0 / np.sqrt(np.mean(cfg.table_rows))
-    W = jax.random.uniform(ke, (layout.total_rows, cfg.emb_dim),
-                           jnp.float32, -scale, scale)
-    dense = init_dense_params(kd, cfg)
-    arrays = dp.dp_global_arrays(dense, ns_total,
-                                 compress=cfg.compress_grads,
-                                 num_buckets=cfg.num_buckets)
-    opt = row_optim.resolve(cfg)
-    emb = opt.init_store(W)
-    state = {"emb": emb,
-             "dense": {"hi": arrays["hi"], "lo": arrays["lo"],
-                       "err": arrays["err"]}}
-    if opt.stochastic_round:
-        state["sr"] = jnp.asarray(cfg.sr_seed, jnp.int32)
-    return jax.device_put(state, shardings), layout
+    """Materialize a real initial state (small/smoke configs).  Delegates
+    to the hybrid builder — bit-identical to the historical in-module
+    initializer (same key split, same init distribution)."""
+    from repro.core import hybrid as H
+    return H.init_state(key, as_hybrid_def(cfg), mesh)
 
 
 def batch_struct(cfg: DLRMConfig, mesh, layout, *,
@@ -265,7 +225,9 @@ def as_hybrid_def(cfg: DLRMConfig):
         num_buckets=cfg.num_buckets, lr=cfg.lr, emb_lr=cfg.lr,
         idx_input=cfg.idx_input, microbatches=cfg.microbatches,
         exchange_impl=cfg.exchange_impl, weighted=cfg.weighted,
-        host_presort=cfg.host_presort, sr_seed=cfg.sr_seed)
+        host_presort=cfg.host_presort, sr_seed=cfg.sr_seed,
+        hot_rows=cfg.hot_rows, promote_every=cfg.promote_every,
+        hot_sync=cfg.hot_sync)
 
 
 def make_train_step(cfg: DLRMConfig, mesh, microbatches: int | None = None):

@@ -109,6 +109,19 @@ class HybridDef:
     # once per step and checkpointed, so a resumed run replays the exact
     # dither sequence)
     sr_seed: int = 0
+    # frequency-tiered hot-row cache (repro/core/cache.py): > 0 keeps a
+    # replicated mirror of the top-``hot_rows`` rows PER TABLE (ranked by
+    # the reserved ``cnt`` touch-counter slab) in front of the sharded
+    # cold store; bags whose lookups all hit are served locally, off the
+    # all-to-all payload (table mode + idx_input='sharded').  0 = off.
+    hot_rows: int = 0
+    # promotion/demotion cadence: re-rank the hot set from the counters
+    # every this-many steps (deterministic, seeded by ``sr_seed``)
+    promote_every: int = 1
+    # 'allreduce': refresh the mirror from the post-update store every
+    # step (bitwise == hot_rows=0); 'deferred:N': refresh every N steps
+    # (bounded drift, see docs/cache.md)
+    hot_sync: str = "allreduce"
 
 
 # stage-shaped mesh helpers live in pipeline.py; re-exported for callers
@@ -139,11 +152,13 @@ def state_struct(mdef: HybridDef, mesh):
         ns_total * mdef.num_buckets)
     rows = layout.total_rows
     opt = row_optim.resolve(mdef)
+    hot_rows = getattr(mdef, "hot_rows", 0)
     structs = {
         # the RowOptimizer owns the embedding store layout: weight slab(s)
         # plus zero or more per-row state slabs, all sharded by the same
-        # row partition (so state persists/reshards next to weights)
-        "emb": opt.store_struct(rows, E),
+        # row partition (so state persists/reshards next to weights); the
+        # hot-row cache adds the reserved ``cnt`` touch-counter slab
+        "emb": opt.store_struct(rows, E, counters=hot_rows > 0),
         "dense": {
             "hi": jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
@@ -165,6 +180,10 @@ def state_struct(mdef: HybridDef, mesh):
         # per-step stochastic-rounding counter: replicated int32 scalar
         structs["sr"] = jax.ShapeDtypeStruct((), jnp.int32)
         specs["sr"] = P()
+    if hot_rows > 0:
+        from repro.core import cache as hot_cache
+        structs["cache"] = hot_cache.cache_struct(mdef, layout, opt)
+        specs["cache"] = hot_cache.cache_specs(structs["cache"])
     shardings = jax.tree.map(
         lambda s: None if s is None else NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P) or x is None)
@@ -256,11 +275,15 @@ def init_state(key, mdef: HybridDef, mesh):
                                  compress=mdef.compress_grads,
                                  num_buckets=mdef.num_buckets)
     opt = row_optim.resolve(mdef)
-    emb = opt.init_store(W)
+    hot_rows = getattr(mdef, "hot_rows", 0)
+    emb = opt.init_store(W, counters=hot_rows > 0)
     state = {"emb": emb, "dense": {"hi": arrays["hi"], "lo": arrays["lo"],
                                    "err": arrays["err"]}}
     if opt.stochastic_round:
         state["sr"] = jnp.asarray(mdef.sr_seed, jnp.int32)
+    if hot_rows > 0:
+        from repro.core import cache as hot_cache
+        state["cache"] = hot_cache.init_cache(mdef, layout, opt)
     return jax.device_put(state, shardings), layout
 
 

@@ -136,6 +136,19 @@ def validate_pipeline(mdef, mesh, microbatches: int) -> None:
         raise ValueError(
             f"global batch {mdef.batch} must be divisible by microbatches "
             f"* mesh size = {microbatches} * {ns}")
+    hot_rows = int(getattr(mdef, "hot_rows", 0))
+    if hot_rows < 0:
+        raise ValueError(f"hot_rows must be >= 0, got {hot_rows}")
+    if hot_rows > 0:
+        from repro.core import cache as hot_cache
+        hot_cache.parse_hot_sync(getattr(mdef, "hot_sync", "allreduce"))
+        if int(getattr(mdef, "promote_every", 1)) < 1:
+            raise ValueError("promote_every must be >= 1, got "
+                             f"{mdef.promote_every}")
+        if hot_rows > mdef.spec.total_rows:
+            raise ValueError(
+                f"hot_rows {hot_rows} exceeds the unified row space "
+                f"({mdef.spec.total_rows} rows)")
     row_optim.resolve(mdef)   # unknown sparse_optimizer fails here, loudly
 
 
@@ -357,6 +370,18 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
     weighted = getattr(mdef, "weighted", False)
     presorted = getattr(mdef, "host_presort", False)
     opt = row_optim.resolve(mdef)
+    emb_ax, _ = emb_axes(mdef, mesh)
+    cache_on = int(getattr(mdef, "hot_rows", 0)) > 0
+    # the exact forward bypass needs every bag computed whole by ONE
+    # shard and the rank's own index slice available locally: table mode
+    # with the on-chip index exchange.  Row mode's psum_scatter folds
+    # arithmetic INTO the collective, so a bypass there could not be
+    # bitwise; the cache still maintains counters / hot set (and serves
+    # the bench model), it just cannot substitute bags.
+    bypass = (cache_on and mdef.emb_mode == "table"
+              and mdef.idx_input == "sharded")
+    if cache_on:
+        from repro.core import cache as hot_cache
 
     def step_local(state, batch):
         emb_store = state["emb"]
@@ -410,8 +435,22 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
             idx_fwd, idx_upd = ex[i]
             wgt_fwd, wgt_upd = exw[i] if weighted else (None, None)
             emb_out = stages.embedding_fwd(W_fwd, idx_fwd, wgt_fwd)
+            mb = microbatch(i)
+            if bypass:
+                # hot-row cache: bags whose lookups ALL hit the
+                # replicated hot slab are recomputed from the rank's OWN
+                # index slice with the owner's exact bag arithmetic and
+                # substituted — those bags no longer depend on the
+                # all-to-all payload.  The cold-store update below is
+                # unchanged (write-through), so under hot_sync=
+                # 'allreduce' this is bitwise invisible.
+                cache = state["cache"]
+                hit, hot_bag = hot_cache.hot_bag_local(
+                    layout, cache["hot_w"], cache["hot_pos"], mb["idx"],
+                    mb.get("weights") if weighted else None)
+                emb_out = jnp.where(hit[..., None], hot_bag, emb_out)
             loss, g_dense, d_emb = stages.dense_fwd_bwd(
-                dense_hi, emb_out, microbatch(i))
+                dense_hi, emb_out, mb)
             dY = stages.dY_exchange(d_emb)
             loss_acc = loss if loss_acc is None else loss_acc + loss
             g_acc = (g_dense if g_acc is None
@@ -436,6 +475,12 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
         new_state = {"emb": new_emb, "dense": new_dense}
         if sr is not None:
             new_state["sr"] = sr + jnp.asarray(1, sr.dtype)
+        if cache_on:
+            # cache epilogue: promotion + mirror refresh read the POST-
+            # update store, so an 'allreduce' mirror equals the cold
+            # store entering the next step.
+            new_state["cache"] = hot_cache.step_cache(
+                mdef, layout, opt, state["cache"], new_emb, emb_ax)
         return new_state, jax.lax.psum(loss_acc, all_axes)
 
     step = compat.shard_map(step_local, mesh=mesh, in_specs=(specs, bspecs),

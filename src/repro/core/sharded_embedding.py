@@ -133,6 +133,43 @@ def make_layout(spec: EmbeddingSpec, num_shards: int, mode: str = "row",
         slot_local_offsets=local_off, slot_position=slot_position)
 
 
+def layout_gid_maps(layout: ShardedEmbeddingLayout
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Static numpy maps between LAYOUT row positions and SPEC-GLOBAL row
+    ids (``gid`` = ``spec.row_offsets[t] + table-local row``, the layout-
+    independent identity the hot-row cache keys its membership on so it
+    survives elastic reshards).
+
+    Returns ``(l2g [layout.total_rows], g2l [spec.total_rows])``, both
+    int32 with -1 for positions that map nowhere: layout padding
+    (row-mode tail, table-mode bin slack and the dummy-slot scratch row)
+    on the ``l2g`` side, per-table ``row_pad`` gaps in the unified gid
+    space on the ``g2l`` side."""
+    spec = layout.spec
+    l2g = np.full(layout.total_rows, -1, np.int32)
+    if layout.mode == "row":
+        # row-mode layout rows ARE the unified spec rows, padded up to
+        # num_shards * rows_per_shard — but gids inside per-table padding
+        # gaps belong to no table, so map only the real rows
+        for t, rows_t in enumerate(spec.table_rows):
+            base = int(spec.row_offsets[t])
+            l2g[base:base + rows_t] = base + np.arange(rows_t, dtype=np.int32)
+    else:
+        for pos, s in enumerate(layout.padded_slots):
+            if s < 0:
+                continue
+            t = int(layout.slot_to_table[s])
+            rows_t = int(spec.table_rows[t])
+            base = ((pos // layout.slots_per_shard) * layout.rows_per_shard
+                    + int(layout.slot_local_offsets[pos]))
+            l2g[base:base + rows_t] = (int(spec.row_offsets[t])
+                                       + np.arange(rows_t, dtype=np.int32))
+    g2l = np.full(spec.total_rows, -1, np.int32)
+    owned = np.nonzero(l2g >= 0)[0]
+    g2l[l2g[owned]] = owned.astype(np.int32)
+    return l2g, g2l
+
+
 def permute_indices(layout: ShardedEmbeddingLayout, idx: jax.Array
                     ) -> jax.Array:
     """[B, S, P] original-slot indices -> [B, num_padded_slots, P] padded
@@ -493,9 +530,15 @@ def apply_update(layout: ShardedEmbeddingLayout, store: dict, optimizer,
             xs += (weights.reshape(n, cb, S, P),)
         dW, _ = jax.lax.scan(acc_chunk, jnp.zeros((rows, E), jnp.float32),
                              xs)
-        from repro.optim.row import dedup_targets
-        rep = dedup_targets(jnp.where(valid, local, rows).reshape(-1),
-                            rows)
+        from repro.optim.row import bump_counters, dedup_targets
+        touch = jnp.where(valid, local, rows).reshape(-1)
+        if "cnt" in store:
+            # this branch bypasses apply_sparse (which owns the reserved
+            # touch-counter bump), so bump the full un-deduplicated stream
+            # here — apply_rows_reduced carries the slab through untouched
+            store = dict(store)
+            store["cnt"] = bump_counters(store["cnt"], touch, rows)
+        rep = dedup_targets(touch, rows)
         summed = jnp.take(dW, jnp.minimum(rep, rows - 1), axis=0)
         return optimizer.apply_rows_reduced(store, rep, summed, lr,
                                             seed=seed)

@@ -216,6 +216,30 @@ def _make_kernel_adagrad_rowwise(e_real: int):
     return kernel
 
 
+def _kernel_freq(rows_ref, bags_ref, msk_ref, hp_ref, wgt_ref, w_ref,
+                 s_ref, dY_ref, nw_ref, nc_ref, acc_ref, flg_ref):
+    """Frequency-adaptive sparse LR (``adagrad_freq``): fp32 weights + the
+    reserved int32 touch-counter lane.  hp = [lr, 0, eps].  The counter is
+    ALREADY bumped by ``RowOptimizer.apply_sparse`` before the kernel runs
+    (+1 per valid lookup, O(touched rows)), so the kernel only READS it —
+    ``w -= lr * g / (sqrt(max(cnt, 1)) + eps)`` per touched row — and
+    passes the slab through unchanged (lane 0 authoritative; ops.py pads
+    the [M, 1] slab to the lane width on the compiled path)."""
+    i = pl.program_id(0)
+    is_end = _accumulate_run(rows_ref, msk_ref, wgt_ref, dY_ref, acc_ref,
+                             flg_ref, i)
+    nc_ref[...] = s_ref[...]
+
+    @pl.when(is_end)
+    def _apply():
+        live = flg_ref[0] != 0
+        c = s_ref[0, 0].astype(jnp.float32)
+        denom = jnp.sqrt(jnp.maximum(c, 1.0)) + hp_ref[2]
+        w_old = w_ref[...].astype(jnp.float32)
+        w_new = w_old - hp_ref[0] * acc_ref[...] / denom
+        nw_ref[...] = jnp.where(live, w_new, w_old).astype(nw_ref.dtype)
+
+
 def _kernel_momentum_bf16(rows_ref, bags_ref, msk_ref, hp_ref, sd_ref,
                           wgt_ref, w_ref, m_ref, dY_ref, nw_ref, nm_ref,
                           acc_ref, flg_ref):
@@ -454,6 +478,23 @@ def fused_update_adagrad_bf16_pallas(w: jax.Array, acc: jax.Array,
     return _stateful_call(_kernel_adagrad_bf16, w, acc, sorted_rows,
                           sorted_bags, sorted_msk, sorted_wgt, dY, hp,
                           interpret, extra_scalars=(sd,))
+
+
+def fused_update_freq_pallas(w: jax.Array, cnt: jax.Array, sorted_rows,
+                             sorted_bags, sorted_msk, sorted_wgt, dY, lr,
+                             eps, interpret: bool = False
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Fused sparse-backward + frequency-adaptive LR update, in place on
+    ``(w, cnt)``: per touched row ``w -= lr * sum(wgt * dY) /
+    (sqrt(max(cnt, 1)) + eps)`` where ``cnt`` [M, Ws] int32 is the
+    reserved touch-counter slab, pre-bumped by the caller
+    (``RowOptimizer.apply_sparse``) and carried through UNCHANGED here —
+    the counter transition is a cheap XLA scatter-add, not kernel work."""
+    hp = jnp.stack([jnp.asarray(lr, jnp.float32),
+                    jnp.zeros((), jnp.float32),
+                    jnp.asarray(eps, jnp.float32)])
+    return _stateful_call(_kernel_freq, w, cnt, sorted_rows, sorted_bags,
+                          sorted_msk, sorted_wgt, dY, hp, interpret)
 
 
 def sort_lookups(tgt: jax.Array, valid: jax.Array | None, num_rows: int,

@@ -138,9 +138,10 @@ def main():
                          "(repro/optim/row.py): sgd | split_sgd | momentum "
                          "| adagrad_rowwise | adagrad | momentum_bf16 | "
                          "adagrad_bf16 (the _bf16 kinds store compressed "
-                         "bf16-hi state with seeded stochastic rounding); "
-                         "default keeps the arch's configured optimizer "
-                         "(split_sgd)")
+                         "bf16-hi state with seeded stochastic rounding) | "
+                         "adagrad_freq (frequency-adaptive LR off the "
+                         "hot-row cache's touch counters); default keeps "
+                         "the arch's configured optimizer (split_sgd)")
     ap.add_argument("--beta", type=float, default=None,
                     help="momentum coefficient override for --optimizer")
     ap.add_argument("--eps", type=float, default=None,
@@ -182,6 +183,18 @@ def main():
     ap.add_argument("--weighted", action="store_true",
                     help="weighted bags: consume the packed dataset's "
                          "per-lookup weight arrays (recsys archs)")
+    ap.add_argument("--hot-rows", type=int, default=0,
+                    help="frequency-tiered hot-row cache (docs/cache.md): "
+                         "replicate the top-K touched rows PER TABLE on "
+                         "every rank so hot bags skip the all-to-all "
+                         "(table mode); 0 = off")
+    ap.add_argument("--promote-every", type=int, default=1,
+                    help="hot-set promotion cadence in steps (counter-"
+                         "driven, deterministic across ranks/restarts)")
+    ap.add_argument("--hot-sync", default="allreduce",
+                    help="hot-slab refresh: 'allreduce' (every step; "
+                         "bitwise == cache off) or 'deferred:N' (refresh "
+                         "every N steps; bounded staleness)")
     args = ap.parse_args()
     if args.data_format is None:
         args.data_format = "packed" if args.data_dir else "synthetic"
@@ -219,7 +232,10 @@ def main():
                                   microbatches=args.microbatches,
                                   host_presort=args.host_presort,
                                   weighted=args.weighted,
-                                  sr_seed=args.seed)
+                                  sr_seed=args.seed,
+                                  hot_rows=args.hot_rows,
+                                  promote_every=args.promote_every,
+                                  hot_sync=args.hot_sync)
         state, layout = D.init_state(key, cfg, mesh)
         step, shardings, bspecs, _ = D.make_train_step(cfg, mesh)
         batch_shardings = _bspec_shardings(mesh, bspecs)
@@ -243,7 +259,10 @@ def main():
                                    microbatches=args.microbatches,
                                    host_presort=args.host_presort,
                                    weighted=args.weighted,
-                                   sr_seed=args.seed)
+                                   sr_seed=args.seed,
+                                   hot_rows=args.hot_rows,
+                                   promote_every=args.promote_every,
+                                   hot_sync=args.hot_sync)
         state, layout = H.init_state(key, mdef, mesh)
         step, shardings, bspecs, _ = H.make_train_step(mdef, mesh)
         batch_shardings = _bspec_shardings(mesh, bspecs)
@@ -278,6 +297,11 @@ def main():
                 "--optimizer selects the sparse embedding RowOptimizer of "
                 "the recsys hybrid step (dlrm/fm/bst/sasrec/din); LM archs "
                 "use the dense Split-SGD path")
+        if args.hot_rows:
+            raise SystemExit(
+                "--hot-rows caches hot embedding rows of the recsys hybrid "
+                "step (dlrm/fm/bst/sasrec/din); LM archs have no sparse "
+                "embedding path")
         cfg, B, L = reduced_lm(args.arch, args.batch, args.seq)
         state = lm_steps.init_lm_state(key, cfg, mesh)
         step, structs, shardings = lm_steps.make_lm_train_step(

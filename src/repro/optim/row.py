@@ -61,6 +61,18 @@ tests/test_stochastic.py):
 * State is touched ONLY for rows receiving at least one valid lookup —
   padding/masked streams never decay momentum or inflate accumulators.
 
+The ``cnt`` slab key is RESERVED: it is the per-row touch counter.  A
+store may carry it either as an AUXILIARY slab (``store_struct(...,
+counters=True)`` — any optimizer; the hot-row embedding cache's
+promotion policy reads it, see docs/cache.md) or as a declared STATE
+slab (``adagrad_freq``).  In both cases :meth:`RowOptimizer
+.apply_sparse` bumps it by +1 per VALID lookup (duplicates accumulate;
+O(touched rows) scatter-add) before the optimizer math runs, so a
+frequency-driven optimizer reads the post-bump count and an auxiliary
+counter rides every path (reference / fused / presorted / chunked)
+without the registered hooks knowing it exists.  Register-only toy
+optimizers must therefore pick a different key for private counters.
+
 Nothing outside this module calls the ``kernels.ops.fused_row_update*``
 entry points; checkpointing, serving snapshots and elastic restarts all
 see the store as an opaque dict of row-aligned slabs.
@@ -110,6 +122,20 @@ def dedup_targets(tgt: jax.Array, num_rows: int) -> jax.Array:
                               (sg[1:] != sg[:-1]).astype(jnp.int32)])
     uid = jnp.cumsum(newseg)
     return jnp.full(tgt.shape, num_rows, dtype=sg.dtype).at[uid].min(sg)
+
+
+def bump_counters(cnt: jax.Array, tgt: jax.Array, num_rows: int
+                  ) -> jax.Array:
+    """+1 per valid lookup on the reserved ``cnt`` touch-counter slab
+    [rows, 1].  ``tgt`` [L] flat row targets; out-of-range entries (masked
+    lookups keyed to ``num_rows``, other shards' rows in a local stream)
+    are DROPPED — masked explicitly, because JAX wraps negative indices
+    before ``mode="drop"`` can reject them.  Duplicates accumulate, so
+    every update path (reference / fused / presorted / batch-chunked)
+    produces identical integer counts regardless of traversal order."""
+    ok = (tgt >= 0) & (tgt < num_rows)
+    safe = jnp.where(ok, tgt, num_rows)
+    return cnt.at[safe].add(jnp.asarray(1, cnt.dtype), mode="drop")
 
 
 def apply_rows_sgd(W_local: jax.Array, tgt: jax.Array, grad: jax.Array,
@@ -229,21 +255,27 @@ class RowOptimizer:
                       jnp.dtype(s[2]) if len(s) > 2 else jnp.dtype("float32"))
                      for s in self.state)
 
-    def store_struct(self, rows: int, E: int) -> dict:
+    def store_struct(self, rows: int, E: int,
+                     counters: bool = False) -> dict:
         """ShapeDtypeStructs of the EmbeddingStore for a [rows, E] slab —
         weights first, then state, all row-aligned (shard the leading dim
-        by the embedding layout)."""
+        by the embedding layout).  ``counters=True`` appends the reserved
+        ``cnt`` touch-counter slab ([rows, 1] int32) unless the optimizer
+        already declares it as state (``adagrad_freq``)."""
         out = ({"hi": jax.ShapeDtypeStruct((rows, E), jnp.bfloat16),
                 "lo": jax.ShapeDtypeStruct((rows, E), jnp.uint16)}
                if self.split else
                {"w": jax.ShapeDtypeStruct((rows, E), jnp.float32)})
         for key, width, dtype in self.state_slabs():
             out[key] = jax.ShapeDtypeStruct((rows, width or E), dtype)
+        if counters and "cnt" not in out:
+            out["cnt"] = jax.ShapeDtypeStruct((rows, 1), jnp.int32)
         return out
 
-    def init_store(self, W: jax.Array) -> dict:
+    def init_store(self, W: jax.Array, counters: bool = False) -> dict:
         """EmbeddingStore from fp32 master weights [rows, E]; state slabs
-        zero-initialized."""
+        (and, with ``counters=True``, the reserved ``cnt`` touch-counter
+        slab) zero-initialized."""
         rows, E = W.shape
         if self.split:
             hi, lo = split_fp32(W)
@@ -252,6 +284,8 @@ class RowOptimizer:
             out = {"w": W.astype(jnp.float32)}
         for key, width, dtype in self.state_slabs():
             out[key] = jnp.zeros((rows, width or E), dtype)
+        if counters and "cnt" not in out:
+            out["cnt"] = jnp.zeros((rows, 1), jnp.int32)
         return out
 
     def fwd_weights(self, store: dict) -> jax.Array:
@@ -279,15 +313,49 @@ class RowOptimizer:
         pre-reduction rounding, and the stochastic-rounding kinds are
         bit-identical across ALL paths for a given ``seed`` (the int32
         per-step stochastic-rounding counter; ignored by the
-        deterministic kinds)."""
+        deterministic kinds).
+
+        The reserved ``cnt`` touch-counter slab, when present in
+        ``store``, is bumped here — +1 per valid lookup, before the
+        optimizer math — so a declared-state counter (``adagrad_freq``)
+        reads the post-bump count and an auxiliary counter (the hot-row
+        cache's promotion signal) is carried through unchanged by hooks
+        that never see it."""
         from repro.kernels import ops
         seed = jnp.asarray(0 if seed is None else seed, jnp.int32)
+        num_rows = self.fwd_weights(store).shape[0]
+        # flat touch targets for the counter bump: valid in-range row ids,
+        # everything else keyed out of range (dropped by bump_counters)
+        if stream.presort is not None:
+            srows, _, smsk, _ = stream.presort
+            touch = jnp.where(smsk != 0, srows, num_rows)
+        elif stream.valid is None:
+            touch = stream.idx.reshape(-1)
+        else:
+            touch = jnp.where(stream.valid, stream.idx,
+                              num_rows).reshape(-1)
+        aux_cnt = None
+        if "cnt" in self.state_keys:
+            store = dict(store)
+            store["cnt"] = bump_counters(store["cnt"], touch, num_rows)
+        elif "cnt" in store:
+            # auxiliary counter: the hooks (and the kernel lane padding in
+            # kernels.ops, which drops unknown input keys) must not see it
+            store = dict(store)
+            aux_cnt = bump_counters(store.pop("cnt"), touch, num_rows)
+
+        def _out(out):
+            if aux_cnt is not None:
+                out = dict(out)
+                out["cnt"] = aux_cnt
+            return out
+
         if stream.presort is not None:
             dY = stream.dY
             dYr = dY.reshape(-1, dY.shape[-1]) if dY.ndim != 2 else dY
-            return ops.fused_row_update_presorted(
+            return _out(ops.fused_row_update_presorted(
                 self, store, *stream.presort, dYr, lr, seed=seed,
-                interpret=interpret)
+                interpret=interpret))
         idx, dY = stream.idx, stream.dY
         P = idx.shape[-1]
         E = dY.shape[-1]
@@ -297,9 +365,10 @@ class RowOptimizer:
             w = (None if stream.weights is None
                  else stream.weights.reshape(-1))
             dYr = dY.reshape(-1, E)
-            return ops.fused_row_update(self, store, tgt, dYr, lr,
-                                        seed=seed, valid=val, weights=w,
-                                        pooling=P, interpret=interpret)
+            return _out(ops.fused_row_update(self, store, tgt, dYr, lr,
+                                             seed=seed, valid=val,
+                                             weights=w, pooling=P,
+                                             interpret=interpret))
         # reference: expand dY to per-lookup grads (the thing the fused
         # kernel never materializes), zero the masked entries, and apply
         # the instance's reference row math
@@ -311,7 +380,6 @@ class RowOptimizer:
         if valid is not None:
             grad = jnp.where(valid[..., None], grad, 0.0)
         grad = grad.reshape(-1, E)
-        num_rows = self.fwd_weights(store).shape[0]
         if not self.state:
             # stateless contract: masked lookups become zero-grad entries
             # on row 0 (a bit-exact no-op for the stateless kinds)
@@ -324,9 +392,11 @@ class RowOptimizer:
             tgt = (idx if valid is None
                    else jnp.where(valid, idx, num_rows)).reshape(-1)
         if self.flat_reference is not None:
-            return self.flat_reference(self, store, tgt, grad, lr, seed)
+            return _out(self.flat_reference(self, store, tgt, grad, lr,
+                                            seed))
         rep, summed = dedup_rows(tgt, grad, num_rows)
-        return self.apply_rows_reduced(store, rep, summed, lr, seed=seed)
+        return _out(self.apply_rows_reduced(store, rep, summed, lr,
+                                            seed=seed))
 
     def apply_rows_reduced(self, store: dict, rep: jax.Array,
                            summed: jax.Array, lr, seed=None) -> dict:
@@ -337,14 +407,28 @@ class RowOptimizer:
         caller must preserve by accumulating gradients across chunks
         first (``se.apply_update``) instead of re-running the momentum
         decay / Adagrad accumulate per chunk.  Dispatches to the
-        instance's ``reference`` hook."""
+        instance's ``reference`` hook.
+
+        An AUXILIARY ``cnt`` slab is carried through UNCHANGED — on this
+        pre-reduced entry the caller owns the bump (``rep`` is
+        deduplicated, so +1 per entry would undercount duplicates); a
+        declared-state ``cnt`` (``adagrad_freq``) reaches the hook as-is
+        and the caller must have bumped it already."""
         if self.reference is None:
             raise ValueError(
                 f"row optimizer {self.name!r} registered no reduced "
                 "reference transition (reference=) — required for "
                 "stateful optimizers")
         seed = jnp.asarray(0 if seed is None else seed, jnp.int32)
-        return self.reference(self, store, rep, summed, lr, seed)
+        aux_cnt = None
+        if "cnt" in store and "cnt" not in self.state_keys:
+            store = dict(store)
+            aux_cnt = store.pop("cnt")
+        out = self.reference(self, store, rep, summed, lr, seed)
+        if aux_cnt is not None:
+            out = dict(out)
+            out["cnt"] = aux_cnt
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -422,6 +506,18 @@ def _ref_adagrad_bf16(opt, store, rep, summed, lr, seed):
             "acc": store["acc"].at[rep].set(s_out)}
 
 
+def _ref_adagrad_freq(opt, store, rep, summed, lr, seed):
+    # frequency-adaptive sparse LR: store["cnt"] is the POST-bump touch
+    # counter (apply_sparse bumps the reserved slab before dispatch), so
+    # hot rows — large counts — take proportionally smaller steps.  The
+    # hook only READS the counter; the bump owns the transition.
+    safe, w_rows = _take_rows(store, rep)
+    c = jnp.take(store["cnt"], safe, axis=0).astype(jnp.float32)   # [n, 1]
+    denom = jnp.sqrt(jnp.maximum(c, 1.0)) + opt.eps
+    w_new = w_rows - lr * summed / denom
+    return {"w": store["w"].at[rep].set(w_new), "cnt": store["cnt"]}
+
+
 def _k_sgd(opt, store, srows, sbags, smsk, swgt, dY, lr, seed, e_real,
            interpret):
     from repro.kernels import embedding_update as ku
@@ -483,6 +579,15 @@ def _k_adagrad_bf16(opt, store, srows, sbags, smsk, swgt, dY, lr, seed,
         store["w"], store["acc"], srows, sbags, smsk, swgt, dY, lr,
         opt.eps, seed, interpret=interpret)
     return {"w": nw, "acc": ns}
+
+
+def _k_adagrad_freq(opt, store, srows, sbags, smsk, swgt, dY, lr, seed,
+                    e_real, interpret):
+    from repro.kernels import embedding_update as ku
+    nw, nc = ku.fused_update_freq_pallas(store["w"], store["cnt"], srows,
+                                         sbags, smsk, swgt, dY, lr,
+                                         opt.eps, interpret=interpret)
+    return {"w": nw, "cnt": nc}
 
 
 # ---------------------------------------------------------------------------
@@ -585,3 +690,10 @@ register(RowOptimizer(name="adagrad_bf16", split=False,
                       stochastic_round=True,
                       kernel=_k_adagrad_bf16,
                       reference=_ref_adagrad_bf16))
+# frequency-adaptive sparse LR driven by the reserved touch-counter slab
+# (hot rows — large counts — decay faster); the same counters feed the
+# hot-row cache's promotion policy (docs/cache.md)
+register(RowOptimizer(name="adagrad_freq", split=False,
+                      state=(("cnt", 1, "int32"),), eps=1e-8,
+                      kernel=_k_adagrad_freq,
+                      reference=_ref_adagrad_freq))

@@ -103,10 +103,14 @@ def test_reshard_store_preserves_slab_dtypes():
         "lo": jnp.asarray(rng.integers(0, 2**16, (R, 4)), jnp.uint16),
         "acc": jnp.asarray(rng.standard_normal((R, 1)) ** 2, jnp.float32),
         "mom": jnp.asarray(rng.standard_normal((R, 4)), jnp.bfloat16),
+        # the reserved touch-counter slab of the hot-row cache: int32
+        # counts must reshard as counts, not float-promote
+        "cnt": jnp.asarray(rng.integers(0, 1000, (R, 1)), jnp.int32),
     }
     out = reshard_store(old, new, store)
     want_dtypes = {"hi": ml_dtypes.bfloat16, "lo": np.uint16,
-                   "acc": np.float32, "mom": ml_dtypes.bfloat16}
+                   "acc": np.float32, "mom": ml_dtypes.bfloat16,
+                   "cnt": np.int32}
     for k, dt in want_dtypes.items():
         assert np.asarray(out[k]).dtype == dt, k
     # content: every real table row survives bitwise (compare raw bits so

@@ -672,3 +672,74 @@ def test_dlrm_elastic_reshard_restart_bitwise(tmp_path):
             np.testing.assert_array_equal(
                 np.asarray(got["emb"][k])[off:off + rows_t],
                 np.asarray(want["emb"][k])[off:off + rows_t]), (k, t)
+
+
+def test_dlrm_elastic_reshard_with_hot_cache_bitwise(tmp_path):
+    """Elastic drill with the frequency-tiered hot-row cache ON
+    (table mode, allreduce sync): the touch-counter slab reshards with
+    the store, the cache subtree (spec-global gids — layout-independent
+    by construction) passes through the restart untouched, and the
+    resumed run stays bitwise — weights, sr, counters AND the promoted
+    hot set."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint import reshard_store
+    from repro.core import dlrm as D
+    from repro.core import sharded_embedding as se
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = dataclasses.replace(_dlrm_cfg(), emb_mode="table",
+                              idx_input="sharded", hot_rows=8,
+                              promote_every=2)
+    step, shardings, _, layout1 = D.make_train_step(cfg, mesh)
+
+    def fresh():
+        state, _ = D.init_state(jax.random.PRNGKey(0), cfg, mesh)
+        return state
+
+    want = fresh()
+    s = _dlrm_stream()
+    for _ in range(6):
+        want, _ = step(want, next(s))
+
+    mid = fresh()
+    s = _dlrm_stream()
+    for _ in range(3):
+        mid, _ = step(mid, next(s))
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(3, mid, blocking=True)
+
+    structs = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                           mid)
+    got_step, restored = mgr.restore(structs)
+    assert got_step == 3
+    assert int(restored["cache"]["tick"]) == 3
+    layout3 = se.make_layout(cfg.spec, 3, "table")
+    store3 = reshard_store(layout1, layout3, restored["emb"])
+    assert np.asarray(store3["cnt"]).dtype == np.int32
+    back = reshard_store(layout3, layout1, store3)
+    restored["emb"] = {k: jnp.asarray(v) for k, v in back.items()}
+    restored = jax.device_put(restored, shardings)
+
+    s = _dlrm_stream(3)
+    got = restored
+    for _ in range(3):
+        got, _ = step(got, next(s))
+    assert int(got["sr"]) == int(want["sr"])
+    spec = cfg.spec
+    for k in want["emb"]:
+        for t, rows_t in enumerate(spec.table_rows):
+            off = int(spec.row_offsets[t])
+            np.testing.assert_array_equal(
+                np.asarray(got["emb"][k])[off:off + rows_t].view(np.uint8),
+                np.asarray(want["emb"][k])[off:off + rows_t].view(np.uint8)
+            ), (k, t)
+    for k in ("hot_ids", "tick"):
+        np.testing.assert_array_equal(np.asarray(got["cache"][k]),
+                                      np.asarray(want["cache"][k])), k
+    np.testing.assert_array_equal(
+        np.asarray(got["cache"]["hot_w"]).view(np.uint8),
+        np.asarray(want["cache"]["hot_w"]).view(np.uint8))
+    assert (np.asarray(got["cache"]["hot_ids"]) >= 0).any()

@@ -63,7 +63,8 @@ def _mk(M=60, E=16, B=8, S=2, P=3, vocab=None, seed=0):
 def test_registry_names_and_overrides():
     assert set(row.names()) >= {"sgd", "split_sgd", "momentum",
                                 "adagrad_rowwise", "adagrad",
-                                "momentum_bf16", "adagrad_bf16"}
+                                "momentum_bf16", "adagrad_bf16",
+                                "adagrad_freq"}
     # compressed-state layout: bf16 slabs + the stochastic_round flag
     bf = row.get("momentum_bf16")
     assert bf.stochastic_round and not row.get("momentum").stochastic_round
@@ -537,5 +538,5 @@ def test_all_optimizers_through_pipeline():
                                            rtol=1e-5, atol=1e-6)
         print(name, 'TABLE_OK')
     """)
-    assert out.count("ROW_OK") == 7
+    assert out.count("ROW_OK") == 8
     assert out.count("TABLE_OK") == 2

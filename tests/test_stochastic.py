@@ -236,9 +236,13 @@ def test_momentum_bf16_tracks_fp32_over_50_zipf_steps():
 
 def _toy_kernel_body(rows_ref, bags_ref, msk_ref, hp_ref, wgt_ref, w_ref,
                      s_ref, dY_ref, nw_ref, ns_ref, acc_ref, flg_ref):
-    """Toy 'touch-count LR' rule: per touched row ``cnt += 1``,
-    ``w -= lr * g / sqrt(cnt)`` — the frequency-adaptive shape from the
-    ROADMAP, cut down to a registration-flow probe."""
+    """Toy 'touch-count LR' rule: per touched row ``tc += 1``,
+    ``w -= lr * g / sqrt(tc)`` — the frequency-adaptive shape that
+    graduated into the first-class ``adagrad_freq`` optimizer and the
+    reserved ``cnt`` touch-counter slab (repro/optim/row.py), kept here
+    cut down to a registration-flow probe.  The state key is ``tc`` (not
+    ``cnt``) on purpose: ``cnt`` now has reserved generic bump semantics
+    in ``apply_sparse`` and this toy owns its own counting."""
     import jax.experimental.pallas as pl
     from repro.kernels import embedding_update as ku
     i = pl.program_id(0)
@@ -262,18 +266,18 @@ def _toy_kernel(opt, store, srows, sbags, smsk, swgt, dY, lr, seed, e_real,
     hp = jnp.stack([jnp.asarray(lr, jnp.float32),
                     jnp.zeros((), jnp.float32),
                     jnp.zeros((), jnp.float32)])
-    nw, ns = ku._stateful_call(_toy_kernel_body, store["w"], store["cnt"],
+    nw, ns = ku._stateful_call(_toy_kernel_body, store["w"], store["tc"],
                                srows, sbags, smsk, swgt, dY, hp, interpret)
-    return {"w": nw, "cnt": ns}
+    return {"w": nw, "tc": ns}
 
 
 def _toy_reference(opt, store, rep, summed, lr, seed):
     W = store["w"]
     safe = jnp.minimum(rep, W.shape[0] - 1)
-    s_new = jnp.take(store["cnt"], safe, axis=0) + 1.0
+    s_new = jnp.take(store["tc"], safe, axis=0) + 1.0
     w_new = jnp.take(W, safe, axis=0) - lr * summed / jnp.sqrt(s_new)
     return {"w": W.at[rep].set(w_new),
-            "cnt": store["cnt"].at[rep].set(s_new)}
+            "tc": store["tc"].at[rep].set(s_new)}
 
 
 def test_toy_optimizer_register_only_flow():
@@ -285,7 +289,7 @@ def test_toy_optimizer_register_only_flow():
     from repro.core.dlrm import DLRMConfig, init_state, make_train_step
     from repro.launch.mesh import make_mesh
 
-    row.register(row.RowOptimizer(name="toy_counter", state=(("cnt", 0),),
+    row.register(row.RowOptimizer(name="toy_counter", state=(("tc", 0),),
                                   kernel=_toy_kernel,
                                   reference=_toy_reference))
     try:
@@ -316,7 +320,7 @@ def test_toy_optimizer_register_only_flow():
         # touched rows in the GLOBAL row space (per-slot table offsets)
         touched = np.unique(np.asarray(batch["idx"])
                             + np.asarray(layout.row_offsets)[None, :, None])
-        cnt = results[True]["cnt"]
+        cnt = results[True]["tc"]
         # counter semantics: one global batch => every touched row at 1
         assert np.all(cnt[:, 0][np.isin(np.arange(cnt.shape[0]),
                                         touched, invert=True)] == 0)
