@@ -59,8 +59,12 @@ RATE_RE = re.compile(
 )
 COST_RE = re.compile(r"(^|_)(us|ms|s|sec|seconds|wall|time)(_|$)|us_measured")
 # compiler/runtime-derived volumes: stable on one jax/XLA version but
-# allowed to drift across versions (CI installs latest) — two-sided band
-BAND_RE = re.compile(r"collective_bytes|collective_counts|/coll/|flops")
+# allowed to drift across versions (CI installs latest) — two-sided band.
+# ``overhead_ratio`` (bench_telemetry.py) is a ratio of two measured
+# walls: banded for visibility, with the real gate on the exact-class
+# ``overhead_ok`` bool next to it.
+BAND_RE = re.compile(r"collective_bytes|collective_counts|/coll/|flops"
+                     r"|overhead_ratio")
 # analytically derived from model keys: exact up to float repr
 # (modeled_*_ms values are functions of MEASURED times — the cost class
 # catches them via their _ms suffix)

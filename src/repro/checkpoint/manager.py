@@ -51,6 +51,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro import telemetry
 from repro.faults.plan import NO_FAULTS, InjectedCrash
 
 #: meta.json schema version.  1 = pre-verification (no checksums — verified
@@ -113,6 +114,9 @@ class CheckpointManager:
         self.events = event_log
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        #: wall seconds of each completed save attempt (async or blocking),
+        #: newest last — the train-loop heartbeat reports these
+        self.save_durations: list[float] = []
 
     def _record(self, kind: str, **fields) -> None:
         if self.events is not None:
@@ -123,7 +127,8 @@ class CheckpointManager:
         """Write checkpoint ``step``.  Re-raises any failure of a PREVIOUS
         background save first — an async save never fails silently."""
         self._raise_pending()
-        flat, dtypes = _flatten(state)  # device->host copy happens here
+        with telemetry.span("ckpt/flatten", cat="ckpt", step=step):
+            flat, dtypes = _flatten(state)  # device->host copy happens here
         treedef = jax.tree_util.tree_structure(state)
         if self._thread is not None:
             self._thread.join()  # one in-flight save at a time
@@ -131,7 +136,14 @@ class CheckpointManager:
             self._raise_pending()
 
         def write():
-            self._write_with_retry(step, flat, dtypes, str(treedef))
+            t0 = time.perf_counter()
+            # explicit track: the blocking path runs on the caller's
+            # thread, the async path on a fresh writer thread — both land
+            # on one 'ckpt_writer' timeline
+            with telemetry.span("ckpt/write", cat="ckpt",
+                                track="ckpt_writer", step=step):
+                self._write_with_retry(step, flat, dtypes, str(treedef))
+            self.save_durations.append(time.perf_counter() - t0)
 
         if blocking:
             write()

@@ -95,6 +95,11 @@ class DLRMConfig:
     # 'allreduce' (mirror refreshed every step; bitwise == cache off) or
     # 'deferred:N' (refresh every N steps; bounded drift)
     hot_sync: str = "allreduce"
+    # in-graph step metrics vector (repro/telemetry/metrics.py): cache
+    # hits, rows touched, exchange payload bytes, accumulated on device
+    # and drained by the train loop.  False (default) = no state key, step
+    # bit-identical to a build without telemetry.
+    step_metrics: bool = False
 
     @property
     def spec(self) -> EmbeddingSpec:
@@ -227,7 +232,7 @@ def as_hybrid_def(cfg: DLRMConfig):
         exchange_impl=cfg.exchange_impl, weighted=cfg.weighted,
         host_presort=cfg.host_presort, sr_seed=cfg.sr_seed,
         hot_rows=cfg.hot_rows, promote_every=cfg.promote_every,
-        hot_sync=cfg.hot_sync)
+        hot_sync=cfg.hot_sync, step_metrics=cfg.step_metrics)
 
 
 def make_train_step(cfg: DLRMConfig, mesh, microbatches: int | None = None):

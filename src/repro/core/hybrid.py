@@ -122,6 +122,13 @@ class HybridDef:
     # step (bitwise == hot_rows=0); 'deferred:N': refresh every N steps
     # (bounded drift, see docs/cache.md)
     hot_sync: str = "allreduce"
+    # in-graph step metrics (repro/telemetry/metrics.py): a replicated
+    # float32 counter vector in the train state, accumulated on device by
+    # the pipelined step (cache hits, rows touched, exchange payload
+    # bytes) and drained by the host every TrainLoopConfig.metrics_every
+    # steps — no per-step host syncs.  False (default) adds NO state key
+    # and leaves the lowered step bit-identical to a build without it.
+    step_metrics: bool = False
 
 
 # stage-shaped mesh helpers live in pipeline.py; re-exported for callers
@@ -184,6 +191,10 @@ def state_struct(mdef: HybridDef, mesh):
         from repro.core import cache as hot_cache
         structs["cache"] = hot_cache.cache_struct(mdef, layout, opt)
         specs["cache"] = hot_cache.cache_specs(structs["cache"])
+    if getattr(mdef, "step_metrics", False):
+        from repro.telemetry import metrics as step_mx
+        structs["metrics"] = step_mx.metrics_struct()
+        specs["metrics"] = P()
     shardings = jax.tree.map(
         lambda s: None if s is None else NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P) or x is None)
@@ -284,6 +295,9 @@ def init_state(key, mdef: HybridDef, mesh):
     if hot_rows > 0:
         from repro.core import cache as hot_cache
         state["cache"] = hot_cache.init_cache(mdef, layout, opt)
+    if getattr(mdef, "step_metrics", False):
+        from repro.telemetry import metrics as step_mx
+        state["metrics"] = step_mx.init_metrics()
     return jax.device_put(state, shardings), layout
 
 

@@ -382,6 +382,9 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
               and mdef.idx_input == "sharded")
     if cache_on:
         from repro.core import cache as hot_cache
+    metrics_on = bool(getattr(mdef, "step_metrics", False))
+    if metrics_on:
+        from repro.telemetry import metrics as step_mx
 
     def step_local(state, batch):
         emb_store = state["emb"]
@@ -481,6 +484,43 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
             # store entering the next step.
             new_state["cache"] = hot_cache.step_cache(
                 mdef, layout, opt, state["cache"], new_emb, emb_ax)
+        if metrics_on:
+            # metrics epilogue: accumulate this step's counters into the
+            # replicated state["metrics"] vector.  Reads only the raw
+            # index stream and the PRE-step hot set — the same inputs
+            # the forward consumed — and writes only its own slot, so
+            # the training outputs are untouched (and with step_metrics
+            # off, none of this exists in the lowered program).
+            idx_raw = batch["idx"]
+            if mdef.idx_input == "sharded":
+                # batch-sharded original-slot stream: every rank counts
+                # its own disjoint slice, psum makes it global
+                rows = jax.lax.psum(
+                    step_mx.valid_lookups(layout, idx_raw), all_axes)
+            elif mdef.emb_mode == "row":
+                # replicated stream: the local count IS the global count
+                rows = step_mx.valid_lookups(layout, idx_raw)
+            else:
+                # paper loader, table mode: padded-slot stream, slots
+                # sharded over 'model', batch over the rest — disjoint
+                # (row, slot) cells, so psum over everything is global
+                rows = jax.lax.psum(
+                    step_mx.valid_lookups_padded(layout, idx_raw, model),
+                    all_axes)
+            if bypass:
+                hl, hb = step_mx.cache_hit_counts(
+                    layout, state["cache"]["hot_pos"], idx_raw)
+                hit_lookups = jax.lax.psum(hl, all_axes)
+                skipped = jax.lax.psum(hb, all_axes)
+            else:
+                hit_lookups = jnp.float32(0)
+                skipped = jnp.float32(0)
+            bags = jnp.float32(mdef.batch * layout.num_orig_slots)
+            payload = (bags - skipped) * jnp.float32(mdef.spec.dim * 4)
+            new_state["metrics"] = state["metrics"] + step_mx.pack(
+                steps=1.0, hit_lookups=hit_lookups, skipped_bags=skipped,
+                bags=bags, rows_touched=rows,
+                exchange_payload_bytes=payload)
         return new_state, jax.lax.psum(loss_acc, all_axes)
 
     step = compat.shard_map(step_local, mesh=mesh, in_specs=(specs, bspecs),

@@ -35,6 +35,8 @@ from typing import Callable, Iterable, Iterator, Optional
 
 import numpy as np
 
+from repro import telemetry
+
 PSORT_KEYS = ("psort_rows", "psort_bags", "psort_msk", "psort_wgt")
 
 
@@ -199,9 +201,13 @@ class ThreadedIterator:
                 try:
                     if self._faults is not None:
                         self._faults.fire("loader.next", step=pulls)
-                    item = next(it)
-                    if self._transform is not None:
-                        item = self._transform(item)
+                    # span lands on this worker's own trace track (the
+                    # thread name: HostPipeline / prefetch_to_device)
+                    with telemetry.span("ingest/prep", cat="ingest",
+                                        pull=pulls):
+                        item = next(it)
+                        if self._transform is not None:
+                            item = self._transform(item)
                 except StopIteration:
                     self._put(_DONE)
                     return

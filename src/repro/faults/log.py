@@ -14,15 +14,26 @@ concurrently with the train loop).
 from __future__ import annotations
 
 import json
+import os
 import threading
 import time
 from collections import Counter
 from pathlib import Path
 from typing import Optional
 
+from repro import telemetry
+
 
 class FailureLog:
-    """Append-only event list, optionally mirrored to a ``.jsonl`` file."""
+    """Append-only event list, optionally mirrored to a ``.jsonl`` file.
+
+    The mirror is flushed AND fsynced per event: these lines exist for the
+    post-mortem of a process that may die on the very next instruction, so
+    an event buffered in userspace (or the page cache) is an event lost.
+    Each event is also an instant on the process trace timeline (track
+    ``faults``), so recovery actions line up against the train-loop and
+    checkpoint-writer spans in Perfetto.
+    """
 
     def __init__(self, path: Optional[str] = None):
         self.events: list[dict] = []
@@ -38,6 +49,10 @@ class FailureLog:
             if self.path is not None:
                 with self.path.open("a") as f:
                     f.write(json.dumps(event, default=str) + "\n")
+                    f.flush()
+                    os.fsync(f.fileno())
+        telemetry.instant(f"fault/{kind}", cat="fault", track="faults",
+                          **{k: str(v) for k, v in fields.items()})
         return event
 
     def counts(self) -> dict[str, int]:

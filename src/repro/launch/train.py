@@ -29,10 +29,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+from pathlib import Path
 
 import jax
 import numpy as np
 
+from repro import telemetry
 from repro.launch.mesh import make_mesh
 from repro.train import TrainLoop, TrainLoopConfig
 
@@ -195,7 +197,29 @@ def main():
                     help="hot-slab refresh: 'allreduce' (every step; "
                          "bitwise == cache off) or 'deferred:N' (refresh "
                          "every N steps; bounded staleness)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable the process tracer (docs/telemetry.md): "
+                         "writes <dir>/trace.json (Chrome trace-event "
+                         "JSON, open in Perfetto), <dir>/heartbeat.jsonl "
+                         "(per-window train-loop heartbeats) and — unless "
+                         "--event-log points elsewhere — "
+                         "<dir>/events.jsonl; recsys archs append a "
+                         "per-stage pipeline profile to the trace")
+    ap.add_argument("--step-metrics", action="store_true",
+                    help="accumulate in-graph step metrics (cache hits, "
+                         "rows touched, exchange payload bytes) in a "
+                         "replicated state vector, drained every "
+                         "--metrics-every steps (recsys archs)")
+    ap.add_argument("--metrics-every", type=int, default=10,
+                    help="in-graph metrics drain / heartbeat cadence "
+                         "(steps)")
+    ap.add_argument("--preempt-at", type=int, default=None,
+                    help="preemption drill: request a stop at this step "
+                         "(records a 'preempted' event, writes the final "
+                         "checkpoint) — gives smoke traces a fault track")
     args = ap.parse_args()
+    if args.trace_dir:
+        telemetry.configure(enabled=True, trace_dir=args.trace_dir)
     if args.data_format is None:
         args.data_format = "packed" if args.data_dir else "synthetic"
     if args.data_format == "packed" and not args.data_dir:
@@ -235,8 +259,10 @@ def main():
                                   sr_seed=args.seed,
                                   hot_rows=args.hot_rows,
                                   promote_every=args.promote_every,
-                                  hot_sync=args.hot_sync)
+                                  hot_sync=args.hot_sync,
+                                  step_metrics=args.step_metrics)
         state, layout = D.init_state(key, cfg, mesh)
+        profile_def = D.as_hybrid_def(cfg)
         step, shardings, bspecs, _ = D.make_train_step(cfg, mesh)
         batch_shardings = _bspec_shardings(mesh, bspecs)
         if args.data_format == "packed":
@@ -262,8 +288,10 @@ def main():
                                    sr_seed=args.seed,
                                    hot_rows=args.hot_rows,
                                    promote_every=args.promote_every,
-                                   hot_sync=args.hot_sync)
+                                   hot_sync=args.hot_sync,
+                                   step_metrics=args.step_metrics)
         state, layout = H.init_state(key, mdef, mesh)
+        profile_def = mdef
         step, shardings, bspecs, _ = H.make_train_step(mdef, mesh)
         batch_shardings = _bspec_shardings(mesh, bspecs)
         if args.data_format == "packed":
@@ -302,7 +330,13 @@ def main():
                 "--hot-rows caches hot embedding rows of the recsys hybrid "
                 "step (dlrm/fm/bst/sasrec/din); LM archs have no sparse "
                 "embedding path")
+        if args.step_metrics:
+            raise SystemExit(
+                "--step-metrics counts the recsys hybrid step's sparse "
+                "traffic (dlrm/fm/bst/sasrec/din); LM archs have no "
+                "metrics vector")
         cfg, B, L = reduced_lm(args.arch, args.batch, args.seq)
+        profile_def = None
         state = lm_steps.init_lm_state(key, cfg, mesh)
         step, structs, shardings = lm_steps.make_lm_train_step(
             cfg, mesh, B, L, lr=args.lr)
@@ -311,22 +345,43 @@ def main():
                   for b in token_stream(0, cfg.vocab, B, L))
 
     event_log = None
-    if args.event_log:
+    if args.event_log or args.trace_dir:
         from repro.faults import FailureLog
-        event_log = FailureLog(args.event_log)
+        event_log = FailureLog(args.event_log
+                               or str(Path(args.trace_dir) / "events.jsonl"))
+    faults = None
+    if args.preempt_at is not None:
+        from repro.faults import FaultPlan
+        faults = FaultPlan.single("train.step", "preempt",
+                                  step=args.preempt_at)
+        faults.log = event_log
+    heartbeat_path = (str(Path(args.trace_dir) / "heartbeat.jsonl")
+                      if args.trace_dir else None)
     loop = TrainLoop(
         TrainLoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
                         ckpt_every=args.ckpt_every,
                         prefetch=args.prefetch,
-                        skip_batch_budget=args.skip_batch_budget),
+                        skip_batch_budget=args.skip_batch_budget,
+                        heartbeat_path=heartbeat_path,
+                        heartbeat_every=args.metrics_every,
+                        metrics_every=args.metrics_every),
         step, state, stream,
         state_shardings=shardings if args.ckpt_dir else None,
-        batch_shardings=batch_shardings, event_log=event_log)
+        batch_shardings=batch_shardings, faults=faults,
+        event_log=event_log)
     try:
         loop.run()
+        if args.trace_dir and profile_def is not None:
+            from repro.telemetry import stages as stage_profiler
+            print("[train] profiling pipeline stages (barrier mode)")
+            stage_profiler.profile_stages(profile_def,
+                                          tracer=telemetry.get_tracer())
     finally:
         if hasattr(stream, "close"):
             stream.close()        # release the HostPipeline worker
+        if args.trace_dir:
+            out = telemetry.export()
+            print(f"[train] trace written: {out}")
     print(f"[train] done: first loss {loop.losses[0]:.4f} "
           f"-> last {loop.losses[-1]:.4f}")
     if loop.monitor.events:

@@ -1,0 +1,8 @@
+"""CLI entry: ``python -m repro.telemetry summarize <trace.json>``."""
+
+import sys
+
+from repro.telemetry.summarize import main
+
+if __name__ == "__main__":
+    sys.exit(main())

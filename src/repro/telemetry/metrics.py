@@ -1,0 +1,173 @@
+"""In-graph step metrics: a replicated float32 vector in the train state.
+
+The pipelined train step (repro/core/pipeline.py) can answer "how many
+bags did the cache absorb, how many rows did the update touch, how many
+bytes rode the layout-switch collective" — but reading those numbers out
+per step would add a host sync to the hot path.  Instead the step
+ACCUMULATES them on device into a small replicated ``state["metrics"]``
+vector (the same compute-always discipline the hot-row cache epilogue
+uses: no data-dependent control flow, no extra host round-trips), and
+the host drains the cumulative vector every ``metrics_every`` steps —
+one small device->host copy per window, zero extra syncs between.
+
+Slots (cumulative since init; all float32, integer-valued except bytes):
+
+====================  ======================================================
+``steps``             steps accumulated (the window normalizer)
+``hit_lookups``       lookups served from the hot-row slab (cache bypass)
+``skipped_bags``      bags served entirely from the slab — the bags that
+                      shipped NO all-to-all payload
+``bags``              total bags (batch rows x slots)
+``rows_touched``      valid row reads by the embedding forward (lookups
+                      with an in-range index; duplicates included — this
+                      is row TRAFFIC, not unique-row count)
+``exchange_payload_bytes``  effective fwd layout-switch payload:
+                      ``(bags - skipped_bags) * E * 4``
+====================  ======================================================
+
+Contract: the vector is **bitwise invisible** to training.  Metric
+contributions only READ the index stream and the cache hit mask and
+WRITE the separate metrics slot; with ``step_metrics=False`` (the
+default) the state has no ``metrics`` entry and the lowered step is
+bit-identical to a build without this module.  ``hit_rate(drained) ==
+skipped_bags / bags`` reproduces the cache bench's ``jnp.mean(hit)``
+exactly (both are an exact small-integer f32 sum followed by one f32
+divide).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+METRIC_NAMES = (
+    "steps",
+    "hit_lookups",
+    "skipped_bags",
+    "bags",
+    "rows_touched",
+    "exchange_payload_bytes",
+)
+NUM_METRICS = len(METRIC_NAMES)
+
+
+def metrics_struct():
+    import jax
+    import jax.numpy as jnp
+
+    return jax.ShapeDtypeStruct((NUM_METRICS,), jnp.float32)
+
+
+def init_metrics():
+    import jax.numpy as jnp
+
+    return jnp.zeros((NUM_METRICS,), jnp.float32)
+
+
+def pack(**slots):
+    """Metrics vector from named slot values (unnamed slots are 0)."""
+    import jax.numpy as jnp
+
+    vals = [slots.pop(name, 0.0) for name in METRIC_NAMES]
+    if slots:
+        raise ValueError(f"unknown metric slots {sorted(slots)}; have {METRIC_NAMES}")
+    return jnp.stack([jnp.asarray(v, jnp.float32) for v in vals])
+
+
+# ---------------------------------------------------------------------------
+# In-graph counting helpers (called inside shard_map by the step)
+# ---------------------------------------------------------------------------
+
+
+def valid_lookups(layout, idx):
+    """f32 count of in-range lookups in an ORIGINAL-SLOT index block
+    [..., S, P] — each valid lookup reads exactly one embedding row, so
+    this is the step's row traffic (duplicates included)."""
+    import jax.numpy as jnp
+
+    spec = layout.spec
+    rows_per_slot = np.asarray(spec.table_rows, np.int32)[np.asarray(layout.slot_to_table)]
+    cap = jnp.asarray(rows_per_slot)[None, :, None]
+    ok = (idx >= 0) & (idx < cap)
+    return jnp.sum(ok, dtype=jnp.float32)
+
+
+def valid_lookups_padded(layout, idx_local, model_axis):
+    """f32 count of in-range lookups in THIS model shard's PADDED-SLOT
+    index block [b, slots_per_shard, P] (the paper-loader layout: slots
+    pre-sharded over the model axis, dummy pad slots carry -1)."""
+    import jax
+    import jax.numpy as jnp
+
+    spec = layout.spec
+    ps = np.asarray(layout.padded_slots)
+    s2t = np.asarray(layout.slot_to_table)
+    rows_pad = np.where(
+        ps >= 0,
+        np.asarray(spec.table_rows, np.int64)[s2t[np.clip(ps, 0, None)]],
+        0,
+    ).astype(np.int32)
+    K = layout.slots_per_shard
+    m = jax.lax.axis_index(model_axis)
+    cap = jax.lax.dynamic_slice_in_dim(jnp.asarray(rows_pad), m * K, K)
+    ok = (idx_local >= 0) & (idx_local < cap[None, :, None])
+    return jnp.sum(ok, dtype=jnp.float32)
+
+
+def cache_hit_counts(layout, hot_pos, idx):
+    """(hit_lookups, hit_bags) f32 for one local index block [b, S, P],
+    mirroring :func:`repro.core.cache.hot_bag_local`'s hit definition: a
+    lookup hits when its spec-global row is in the hot set; a bag counts
+    as skipped only when ALL P of its lookups hit."""
+    import jax.numpy as jnp
+
+    spec = layout.spec
+    off = jnp.asarray(spec.row_offsets[layout.slot_to_table], jnp.int32)
+    gid = idx + off[None, :, None]
+    ok = (gid >= 0) & (gid < spec.total_rows)
+    pos = jnp.take(hot_pos, jnp.clip(gid, 0, spec.total_rows - 1))
+    lk_hit = ok & (pos >= 0)
+    return (
+        jnp.sum(lk_hit, dtype=jnp.float32),
+        jnp.sum(jnp.all(lk_hit, axis=2), dtype=jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side drain
+# ---------------------------------------------------------------------------
+
+
+def drain(state) -> dict | None:
+    """Cumulative metrics as a name->float dict (one device->host copy);
+    None when the state carries no metrics vector."""
+    m = state.get("metrics") if isinstance(state, dict) else None
+    if m is None:
+        return None
+    vals = np.asarray(m, np.float32)
+    return {name: float(vals[i]) for i, name in enumerate(METRIC_NAMES)}
+
+
+def window(cur: dict, prev: dict | None) -> dict:
+    """Per-window deltas between two drains (prev=None means since init)."""
+    if prev is None:
+        return dict(cur)
+    return {k: cur[k] - prev.get(k, 0.0) for k in cur}
+
+
+def hit_rate(m: dict) -> float:
+    """skipped_bags / bags in float32, mirroring the cache bench's
+    ``jnp.mean(hit)`` (f32 sum of bools, one f32 division).  The two agree
+    bit-for-bit whenever ``bags`` is a power of two — the bench windows
+    are (batch 64 x 8 slots = 512) — because a power-of-two divide and
+    XLA mean's multiply-by-reciprocal are both exact there; for other bag
+    counts they can differ by one ulp."""
+    bags = np.float32(m.get("bags", 0.0))
+    if bags == 0:
+        return 0.0
+    return float(np.float32(m.get("skipped_bags", 0.0)) / bags)
+
+
+def emit(tracer, m: dict, name: str = "repro.metrics") -> None:
+    """Record a drained metrics dict as a counter event on the trace
+    (``summarize`` reads these back; cumulative values, one per drain)."""
+    tracer.counter(name, m)

@@ -1,0 +1,224 @@
+"""Per-stage attribution for the staged pipeline (spans + modeled costs).
+
+The pipelined step compiles all six stages into ONE XLA program — great
+for overlap, useless for attribution: a wall clock around the jitted call
+says nothing about where the step spent its time and bytes.  This module
+profiles the :class:`repro.core.pipeline.Stage` objects INDIVIDUALLY:
+each stage is wrapped in its own ``jit(shard_map(...))``, dispatched in
+sequence on real data, and timed with host spans on a dedicated
+``pipeline_stages`` trace track.  Two timing modes:
+
+* ``barrier=True`` (default) — ``jax.block_until_ready`` between stages,
+  so each span is honest device time for that stage alone;
+* ``barrier=False`` — dispatch-only spans (what the host pays to issue
+  the work; useful for spotting host-side serialization).
+
+Because the per-stage programs break the fused schedule, the measured
+numbers are an attribution PROFILE, not the end-to-end step time — the
+fused step is faster than the sum of stages by exactly the overlap the
+pipeline buys.  Each span also carries the stage's MODELED bytes/flops
+on the target chip at the target scale (``ranks_model``), from the same
+analytic formulas the comm-model bench uses — so a trace viewed in
+Perfetto shows both what the local run measured and what the paper-scale
+system would move.
+
+On a single-device mesh the collectives inside the stages are no-ops;
+the modeled bytes are then the ONLY cross-rank cost signal.  That is the
+intended reading: measure compute locally, model communication.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import hw
+
+
+def _median_ms(durs: list) -> float:
+    return float(np.median(np.asarray(durs))) * 1e3
+
+
+def modeled_stage_costs(mdef, layout=None, ranks: int = 64,
+                        chip: hw.ChipSpec = hw.TPU_V5E) -> dict:
+    """Analytic per-rank bytes/flops per stage at ``ranks`` sockets.
+
+    Volumes mirror the paper's cost model: the index streams are int32,
+    bag rows fp32, dense params bf16.  ``bytes`` is what THIS rank moves
+    (fabric for comm stages, HBM for local stages); ``modeled_us`` is the
+    max of the bandwidth and compute terms on ``chip``.
+    """
+    import jax
+
+    B, Pq, E = mdef.batch, mdef.pooling, mdef.spec.dim
+    S = layout.num_orig_slots if layout is not None else mdef.spec.num_tables
+    n_dense = _dense_param_count(mdef)
+    r = max(int(ranks), 1)
+    shrink = (r - 1) / r            # the self-shard never crosses the fabric
+    idx_bytes = B * S * Pq * 4      # global int32 index stream
+    bag_bytes = B * S * E * 4       # global fp32 bag activations
+    row_bytes = B * S * Pq * E * 4  # row reads (duplicates included)
+    costs = {
+        "index_exchange": dict(
+            bytes=idx_bytes * shrink, flops=0.0, comm="all_gather(idx)"),
+        "embedding_fwd": dict(
+            bytes=row_bytes / r + bag_bytes / r * shrink,
+            flops=2.0 * B * S * Pq * E / r, comm="all_to_all"),
+        "dense_fwd_bwd": dict(
+            bytes=3.0 * n_dense * 2, flops=6.0 * n_dense * B / r,
+            comm="none"),
+        "dY_exchange": dict(
+            bytes=bag_bytes / r * shrink, flops=0.0, comm="all_to_all(dY)"),
+        "sparse_update": dict(
+            bytes=2.0 * row_bytes / r, flops=2.0 * B * S * Pq * E / r,
+            comm="none"),
+        "dense_update": dict(
+            bytes=(4.0 + 2.0) * n_dense * shrink, flops=2.0 * n_dense / r,
+            comm="rs+ag"),
+    }
+    for c in costs.values():
+        bw = chip.ici_bw_per_link * chip.ici_links if c["comm"] != "none" \
+            else chip.hbm_bw
+        c["modeled_us"] = max(c["bytes"] / bw,
+                              c["flops"] / chip.peak_flops_bf16) * 1e6
+    return costs
+
+
+def _dense_param_count(mdef) -> int:
+    import jax
+
+    from repro.optim import data_parallel as dp
+
+    tree = jax.eval_shape(lambda: mdef.init_dense(jax.random.PRNGKey(0)))
+    return dp.ravel_size(tree)
+
+
+def profile_stages(mdef, mesh=None, *, steps: int = 3, warmup: int = 1,
+                   barrier: bool = True, tracer=None, ranks_model: int = 64,
+                   chip: hw.ChipSpec = hw.TPU_V5E, seed: int = 0) -> dict:
+    """Run each pipeline stage as its own jitted program and time it.
+
+    Returns ``{"stages": {name: {"ms", "bytes", "flops", "modeled_us",
+    "comm"}}, ...}`` and (when ``tracer`` is enabled) emits one span per
+    timed dispatch on the ``pipeline_stages`` track, modeled costs in the
+    span args.  ``mesh`` defaults to a (1, 1) data/model mesh — the
+    profile needs no multi-device setup; collectives no-op and the
+    modeled columns carry the cross-rank story (see module docstring).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.core import hybrid, pipeline
+    from repro.data.pipeline import PSORT_KEYS
+    from repro.optim import row as row_optim
+
+    if tracer is None:
+        from repro.telemetry import tracer as tr_mod
+        tracer = tr_mod.get_tracer()
+    if mesh is None:
+        mesh = compat.make_mesh((1, 1), ("data", "model"))
+    pipeline.validate_pipeline(mdef, mesh, 1)
+    state, layout = hybrid.init_state(jax.random.PRNGKey(seed), mdef, mesh)
+    bstructs, _ = hybrid.batch_struct(mdef, mesh, layout)
+    batch = synthetic_batch(mdef, bstructs, seed)
+    stages = pipeline.build_stages(mdef, mesh, layout)
+    opt = row_optim.resolve(mdef)
+    costs = modeled_stage_costs(mdef, layout, ranks=ranks_model, chip=chip)
+
+    def sm(fn, n_in):
+        # per-stage program: replicated specs are trivially correct on the
+        # single-device profile mesh (P() is a valid pytree prefix for
+        # dict/tuple arguments)
+        return jax.jit(compat.shard_map(fn, mesh=mesh,
+                                        in_specs=(P(),) * n_in,
+                                        out_specs=P(), check_vma=False))
+
+    result = {}
+
+    def timed(name, fn, *args):
+        out = fn(*args)                     # compile
+        out = jax.block_until_ready(out)
+        for _ in range(max(warmup - 1, 0)):
+            out = jax.block_until_ready(fn(*args))
+        durs = []
+        c = costs[name]
+        for _ in range(max(steps, 1)):
+            t0 = time.perf_counter()
+            with tracer.span(f"stage/{name}", cat="pipeline",
+                             track="pipeline_stages", comm=c["comm"],
+                             modeled_bytes=c["bytes"],
+                             modeled_flops=c["flops"],
+                             modeled_us=c["modeled_us"],
+                             ranks_model=ranks_model, chip=chip.name):
+                out = fn(*args)
+                if barrier:
+                    out = jax.block_until_ready(out)
+            durs.append(time.perf_counter() - t0)
+        result[name] = {"ms": _median_ms(durs), "bytes": c["bytes"],
+                        "flops": c["flops"], "modeled_us": c["modeled_us"],
+                        "comm": c["comm"]}
+        return out
+
+    weighted = bool(getattr(mdef, "weighted", False))
+    fwd_w = jax.jit(compat.shard_map(opt.fwd_weights, mesh=mesh,
+                                     in_specs=(P(),), out_specs=P(),
+                                     check_vma=False))(state["emb"])
+    idx_fwd, idx_upd = timed("index_exchange",
+                             sm(lambda i: stages.index_exchange(i), 1),
+                             batch["idx"])
+    wgt_fwd = wgt_upd = None
+    if weighted:
+        wgt_fwd, wgt_upd = sm(lambda w: stages.index_exchange(w), 1)(
+            batch["weights"])
+    emb_out = timed(
+        "embedding_fwd",
+        sm(lambda W, i: stages.embedding_fwd(W, i, wgt_fwd), 2),
+        fwd_w, idx_fwd)
+    mb = {k: v for k, v in batch.items() if k not in PSORT_KEYS}
+    loss, g_dense, d_emb = timed("dense_fwd_bwd",
+                                 sm(stages.dense_fwd_bwd, 3),
+                                 state["dense"]["hi"], emb_out, mb)
+    dY = timed("dY_exchange", sm(stages.dY_exchange, 1), d_emb)
+    sr = state.get("sr")
+    if sr is not None:
+        sp_fn = sm(lambda e, i, d, s: stages.sparse_update(
+            e, i, d, weights=wgt_upd, seed=s), 4)
+        timed("sparse_update", sp_fn, state["emb"], idx_upd, dY, sr)
+    else:
+        sp_fn = sm(lambda e, i, d: stages.sparse_update(
+            e, i, d, weights=wgt_upd), 3)
+        timed("sparse_update", sp_fn, state["emb"], idx_upd, dY)
+    timed("dense_update", sm(stages.dense_update, 2), state["dense"],
+          g_dense)
+    return {
+        "stages": result,
+        "mesh": dict(mesh.shape),
+        "barrier": barrier,
+        "steps": steps,
+        "ranks_model": ranks_model,
+        "chip": chip.name,
+        "dense_params": _dense_param_count(mdef),
+    }
+
+
+def synthetic_batch(mdef, bstructs: dict, seed: int = 0) -> dict:
+    """Random host batch matching a ``hybrid.batch_struct`` tree: int
+    fields draw valid row indices (smallest table bounds them for every
+    slot), float fields draw uniform [0, 1)."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    rows_cap = int(min(mdef.spec.table_rows))
+    out = {}
+    for name, s in bstructs.items():
+        if np.issubdtype(np.dtype(s.dtype), np.integer):
+            out[name] = jnp.asarray(
+                rng.integers(0, rows_cap, size=s.shape, dtype=np.int64),
+                s.dtype)
+        else:
+            out[name] = jnp.asarray(
+                rng.random(size=s.shape, dtype=np.float64), s.dtype)
+    return out

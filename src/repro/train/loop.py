@@ -42,6 +42,7 @@ structured events on the optional :class:`repro.faults.FailureLog`.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import signal
 import sys
@@ -49,15 +50,46 @@ import threading
 import time
 import warnings
 from collections import deque
+from pathlib import Path
 from typing import Any, Callable, Iterator, Optional
 
 import numpy as np
 
+from repro import telemetry
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import ThreadedIterator
 from repro.faults.plan import NO_FAULTS, InjectedCrash
 
 _EXHAUSTED = object()
+
+
+class PrefetchIterator:
+    """The iterator :func:`prefetch_to_device` returns: forwards one
+    :class:`ThreadedIterator` and exposes its ``stats``/``close`` (the
+    train-loop heartbeat reads ``stats``; a bare generator would hide
+    them).  Dropping it closes the worker, same as the generator did."""
+
+    def __init__(self, tit: ThreadedIterator):
+        self._tit = tit
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return next(self._tit)
+
+    @property
+    def stats(self) -> dict:
+        return self._tit.stats
+
+    def close(self) -> None:
+        self._tit.close()
+
+    def __del__(self):
+        try:
+            self._tit.close()
+        except Exception:  # noqa: BLE001 — interpreter teardown
+            pass
 
 
 def prefetch_to_device(batches: Iterator[Any], size: int = 2, shardings: Any = None,
@@ -94,14 +126,7 @@ def prefetch_to_device(batches: Iterator[Any], size: int = 2, shardings: Any = N
 
     tit = ThreadedIterator(batches, transform=put, depth=size,
                            name="prefetch_to_device", faults=faults)
-
-    def gen():
-        try:
-            yield from tit
-        finally:
-            tit.close()  # early exit / GC: unblock + drain the worker
-
-    return gen()
+    return PrefetchIterator(tit)
 
 
 @dataclasses.dataclass
@@ -115,6 +140,15 @@ class TrainLoopConfig:
     straggler_window: int = 50
     prefetch: int = 0  # >0: device_put-ahead window
     skip_batch_budget: int = 0  # transient loader errors absorbed per run
+    # heartbeat: one JSONL record per ``heartbeat_every``-step window
+    # (step-time percentiles, straggler snapshot, ingest stats, cache hit
+    # rate, checkpoint save durations); None = off
+    heartbeat_path: Optional[str] = None
+    heartbeat_every: int = 10
+    # in-graph metrics drain cadence (steps): how often state["metrics"]
+    # is copied to host and emitted as a trace counter.  Only meaningful
+    # when the model def set step_metrics=True.
+    metrics_every: int = 10
 
 
 class StragglerMonitor:
@@ -138,6 +172,17 @@ class StragglerMonitor:
                     self.on_straggler(step, dt, med)
         self.times.append(dt)
         return is_straggler
+
+    def snapshot(self) -> dict:
+        """Summary over the current ring-buffer window: {n, median_ms,
+        p99_ms, max_ms, outliers} (outliers = flagged stragglers over the
+        whole run, not just the window)."""
+        if not self.times:
+            return {"n": 0, "outliers": len(self.events)}
+        a = np.asarray(self.times, np.float64) * 1e3
+        return {"n": int(a.size), "median_ms": float(np.median(a)),
+                "p99_ms": float(np.percentile(a, 99)),
+                "max_ms": float(a.max()), "outliers": len(self.events)}
 
 
 class DataRebalancer:
@@ -189,6 +234,9 @@ class TrainLoop:
         self.losses: list[float] = []
         self.skipped_batches = 0
         self._stop = False
+        self._owns_batches = cfg.prefetch > 0
+        self._metrics_prev: Optional[dict] = None
+        self._metrics_window: Optional[dict] = None
         if self.ckpt and self.ckpt.latest_valid_step() is not None:
             self.start_step, self.state = self.ckpt.restore(
                 self.state, shardings=state_shardings)
@@ -224,6 +272,54 @@ class TrainLoop:
                     continue
                 raise
 
+    def _drain_metrics(self) -> Optional[dict]:
+        """Copy the cumulative in-graph metrics vector to host (one small
+        device->host transfer), emit it as a trace counter, and remember
+        the per-window delta for the next heartbeat.  No-op (None) when the
+        model def did not enable ``step_metrics``."""
+        from repro.telemetry import metrics as step_mx
+
+        cur = step_mx.drain(self.state)
+        if cur is None:
+            return None
+        self._metrics_window = step_mx.window(cur, self._metrics_prev)
+        self._metrics_prev = cur
+        step_mx.emit(telemetry.get_tracer(), cur)
+        return self._metrics_window
+
+    def _heartbeat(self, step: int, window: list[float]) -> dict:
+        """One JSONL record summarizing the window since the last
+        heartbeat: step-time percentiles, straggler snapshot, ingest
+        stats, drained metrics (+ cache hit rate), checkpoint save
+        durations.  Appended + flushed per record so a dying process
+        leaves the tail on disk."""
+        from repro.telemetry import metrics as step_mx
+
+        rec: dict = {"step": step, "t": time.time(),
+                     "skipped_batches": self.skipped_batches}
+        if window:
+            a = np.asarray(window, np.float64) * 1e3
+            rec["window_steps"] = int(a.size)
+            rec["step_ms_p50"] = float(np.percentile(a, 50))
+            rec["step_ms_p99"] = float(np.percentile(a, 99))
+            rec["step_ms_mean"] = float(a.mean())
+        rec["straggler"] = self.monitor.snapshot()
+        ingest = getattr(self.batches, "stats", None)
+        if ingest is not None:
+            rec["ingest"] = dict(ingest)
+        if self._metrics_window is not None:
+            rec["metrics_window"] = self._metrics_window
+            rec["cache_hit_rate"] = step_mx.hit_rate(self._metrics_window)
+        if self.ckpt is not None and self.ckpt.save_durations:
+            rec["ckpt_save_s"] = [round(d, 6) for d in self.ckpt.save_durations[-8:]]
+        path = Path(self.cfg.heartbeat_path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with path.open("a") as f:
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+        telemetry.instant("train/heartbeat", cat="train", step=step)
+        return rec
+
     def run(self) -> Any:
         """Run to ``cfg.steps``, checkpointing every ``cfg.ckpt_every``
         completed steps.  The FINAL checkpoint is written in a ``finally``:
@@ -242,6 +338,10 @@ class TrainLoop:
                 "installed (Python restricts signal handling to the main "
                 "thread); preemption degrades to the _stop flag",
                 RuntimeWarning, stacklevel=2)
+        tr = telemetry.get_tracer()
+        tr.set_track("train_loop")
+        hb_on = self.cfg.heartbeat_path is not None
+        window: list[float] = []
         completed = self.start_step
         crashed = False
         try:
@@ -262,10 +362,12 @@ class TrainLoop:
                         os.kill(os.getpid(), signal.SIGTERM)  # handler sets _stop
                     else:
                         self._stop = True
-                self.state, loss = self.step_fn(self.state, batch)
-                loss = float(loss)
+                with tr.span("train/step", cat="train", step=step):
+                    self.state, loss = self.step_fn(self.state, batch)
+                    loss = float(loss)
                 dt = time.perf_counter() - t0
                 self.losses.append(loss)
+                window.append(dt)
                 completed = step + 1
                 if self.monitor.record(step, dt):
                     print(f"[train] straggler step {step}: {dt * 1e3:.1f} ms")
@@ -273,6 +375,11 @@ class TrainLoop:
                     print(f"[train] step {step} loss {loss:.4f} {dt * 1e3:.1f} ms")
                 if self.ckpt and completed % self.cfg.ckpt_every == 0:
                     self.ckpt.save(completed, self.state)
+                if completed % self.cfg.metrics_every == 0:
+                    self._drain_metrics()
+                if hb_on and completed % self.cfg.heartbeat_every == 0:
+                    self._heartbeat(completed, window)
+                    window.clear()
         except InjectedCrash:
             crashed = True  # simulated kill -9: no final checkpoint
             raise
@@ -286,6 +393,18 @@ class TrainLoop:
                 if not unwinding:
                     raise
             finally:
+                try:
+                    if not crashed:
+                        self._drain_metrics()
+                        if hb_on:
+                            self._heartbeat(completed, window)
+                except Exception:  # noqa: BLE001 — telemetry must not mask the run
+                    pass
+                if self._owns_batches:
+                    try:
+                        self.batches.close()
+                    except Exception:  # noqa: BLE001 — worker already dead is fine
+                        pass
                 if old is not None:
                     signal.signal(signal.SIGTERM, old)
         return self.state

@@ -112,6 +112,51 @@ def test_failure_log_records_and_jsonl(tmp_path):
     assert log.counts()["fault_injected"] == 1
 
 
+def test_failure_log_survives_kill_after_event(tmp_path):
+    """The jsonl mirror flushes AND fsyncs per event: a process killed via
+    os._exit immediately after record() — no interpreter shutdown, no
+    atexit, no buffered-file flushing — must still leave the event on
+    disk.  This is the post-mortem contract the log exists for."""
+    import os
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    path = tmp_path / "events.jsonl"
+    code = (
+        f"import os, sys\n"
+        f"sys.path.insert(0, {str(src)!r})\n"
+        f"from repro.faults import FailureLog\n"
+        f"log = FailureLog({str(path)!r})\n"
+        f"log.record('ckpt_write_retry', step=7, attempt=1)\n"
+        f"os._exit(86)\n"
+    )
+    r = subprocess.run([sys.executable, "-c", code], timeout=120)
+    assert r.returncode == 86
+    events = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(events) == 1
+    assert events[0]["kind"] == "ckpt_write_retry"
+    assert events[0]["step"] == 7 and events[0]["attempt"] == 1
+
+
+def test_failure_log_mirrors_trace_instants(tmp_path):
+    from repro import telemetry
+
+    tr = telemetry.configure(enabled=True)
+    try:
+        log = FailureLog(tmp_path / "events.jsonl")
+        log.record("batch_skipped", step=4, error="OSError")
+        inst = [e for e in tr.events() if e.get("ph") == "i"]
+        assert [e["name"] for e in inst] == ["fault/batch_skipped"]
+        assert inst[0]["args"] == {"step": "4", "error": "OSError"}
+        tracks = {e["args"]["name"] for e in tr.events()
+                  if e.get("ph") == "M"}
+        assert "faults" in tracks
+    finally:
+        telemetry.configure(enabled=False)
+        tr.reset()
+
+
 # ---------------------------------------------------------------------------
 # Checkpoint layer: verification, fallback, retry, async surfacing
 # ---------------------------------------------------------------------------
@@ -258,7 +303,13 @@ def test_threaded_iterator_retries_transient_faults():
     it = ThreadedIterator(src, retries=2, retry_backoff_s=0.001)
     got = [int(b["x"][0]) for b in it]
     assert got == list(range(6))           # nothing lost, order kept
-    assert it.stats["retries"] == 2
+    # full stats contract after retry-then-recover: the heartbeat reads
+    # this dict verbatim, so its keys and counters are pinned
+    st = it.stats
+    assert set(st) == {"prep_s", "wait_s", "batches", "retries"}
+    assert st["batches"] == 6
+    assert st["retries"] == 2
+    assert st["prep_s"] > 0.0 and st["wait_s"] >= 0.0
 
 
 def test_threaded_iterator_exhausted_retries_poison():

@@ -254,6 +254,21 @@ def test_hostpipeline_attaches_psort_and_preserves_stream(tmp_path):
     assert hp.stats["batches"] == len(plain)
 
 
+def test_hostpipeline_stats_pinned_after_drain(tmp_path):
+    """Full ``stats`` contract after a clean drain — the train-loop
+    heartbeat serializes this dict verbatim, so keys and values are
+    pinned: every batch counted, no retries, worker prep time observed."""
+    d = _pack(tmp_path, n=96, per_shard=48)
+    hp = HostPipeline(ShardedReader(d, batch=32, shuffle=False)
+                      .batches(epochs=1))
+    n = sum(1 for _ in hp)
+    st = hp.stats
+    assert set(st) == {"prep_s", "wait_s", "batches", "retries"}
+    assert n == 3 and st["batches"] == 3
+    assert st["retries"] == 0
+    assert st["prep_s"] > 0.0 and st["wait_s"] >= 0.0
+
+
 def test_hostpipeline_poisons_on_worker_failure():
     def bad():
         yield {"idx": np.zeros((2, 8, 3), np.int32)}
