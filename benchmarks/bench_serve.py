@@ -1,0 +1,268 @@
+"""Serving bench: bucketed continuous batching over published snapshots.
+
+Four sections, landing in ``BENCH_serve.json`` (gated by
+benchmarks/check_bench.py):
+
+* ``model`` — the reduced serving config (tables, dim, bucket ladder);
+  every key is exact.
+* ``bytes`` — the bf16-hi serving-table claim: a snapshot of the
+  Split-SGD store serves the ``hi`` slab directly, so its table bytes
+  must be <= 0.55x the fp32 table an ``sgd`` store serves
+  (``bf16_hi_vs_fp32_ok`` is the exact-gated bool; the byte counts are
+  shape-derived and exact).
+* ``latency`` — two phases.  The CLOSED-LOOP ladder drives each compiled
+  bucket synchronously (pad + score + host read per batch), so the
+  per-bucket batch counts are deterministic exact keys and p50/p99 ride
+  the cost band.  The OPEN-LOOP sweep offers paced request streams to the
+  real worker-thread :class:`~repro.serve.server.ContinuousBatchingServer`
+  and reports client-observed global percentiles + achieved rate; only
+  the configured request counts are exact (which buckets the racy
+  coalescing picks is NOT a stable key and is deliberately not emitted).
+* ``freshness`` — a LIVE train-to-serve run: a real hybrid train loop
+  with a :class:`~repro.serve.publish.SnapshotPublisher` step hook, then
+  scoring from the newest snapshot.  Publish counts / versions /
+  steps-behind are cadence arithmetic (exact); seconds-behind is a
+  measured cost key.
+
+Run:  PYTHONPATH=src python benchmarks/bench_serve.py [--smoke]
+"""
+
+import argparse
+import dataclasses
+import itertools
+import json
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+SRC = ROOT / "src"
+sys.path.insert(0, str(SRC))
+
+import numpy as np  # noqa: E402
+
+BYTES_BUDGET = 0.55  # bf16-hi serving table must be <= 0.55x fp32
+
+
+def make_def(optimizer: str, rows: int, tables: int, batch: int):
+    from repro.models import recsys as R
+
+    return dataclasses.replace(R.make_fm((rows,) * tables, batch=batch),
+                               sparse_optimizer=optimizer)
+
+
+def make_payloads(mdef, layout, n: int, seed: int = 0) -> list:
+    """n single-sample request payloads (deterministic)."""
+    rng = np.random.default_rng(seed)
+    rows = [mdef.spec.table_rows[t] for t in layout.slot_to_table]
+    idx = np.stack([rng.integers(0, m, (n, 1)) for m in rows], axis=1)
+    labels = rng.integers(0, 2, (n,)).astype(np.float32)
+    return [{"idx": idx[i].astype(np.int32), "labels": labels[i]}
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Section: bytes (bf16-hi vs fp32 serving tables)
+# ---------------------------------------------------------------------------
+
+
+def bytes_section(rows: int, tables: int, batch: int) -> dict:
+    import jax
+
+    from repro.core import hybrid as H
+    from repro.launch.mesh import make_mesh
+    from repro.serve import snapshot_from_state
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    out = {}
+    for opt in ("split_sgd", "sgd"):
+        mdef = make_def(opt, rows, tables, batch)
+        state, _ = H.init_state(jax.random.PRNGKey(0), mdef, mesh)
+        snap = snapshot_from_state(mdef, state)
+        out[opt] = {
+            "serving_table_bytes": snap.emb_bytes,
+            "fp32_table_bytes": snap.fp32_emb_bytes,
+            "snapshot_total_bytes": snap.total_bytes,
+            "fp32_fraction": snap.emb_bytes / snap.fp32_emb_bytes,
+        }
+    out["bf16_hi_vs_fp32_ok"] = (
+        out["split_sgd"]["serving_table_bytes"]
+        <= BYTES_BUDGET * out["sgd"]["serving_table_bytes"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Section: latency (closed-loop ladder + open-loop QPS sweep)
+# ---------------------------------------------------------------------------
+
+
+def _pct(lat_ms: list, n_requests: int) -> dict:
+    a = np.asarray(lat_ms)
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "mean_ms": float(a.mean()),
+            "n_requests": n_requests}
+
+
+def latency_section(mdef, buckets, closed_batches: int, open_points,
+                    open_requests: int) -> dict:
+    import jax
+
+    from repro.core import hybrid as H
+    from repro.launch.mesh import make_mesh
+    from repro.serve import (ContinuousBatchingServer, SnapshotRegistry,
+                             make_bucket_scorers, snapshot_state)
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    state, layout = H.init_state(jax.random.PRNGKey(0), mdef, mesh)
+    reg = SnapshotRegistry()
+    reg.publish(snapshot_state(mdef, state), step=0)
+    fns, pad = make_bucket_scorers(mdef, mesh, buckets,
+                                   lambda: reg.current().state)
+    payloads = make_payloads(mdef, layout, max(buckets))
+    for b in buckets:                       # compile outside the clock
+        np.asarray(fns[b](pad(payloads[:b], b)))
+
+    # closed loop: one synchronous full batch at a time per bucket — the
+    # per-batch service time of each compiled shape, no queueing
+    closed = {}
+    for b in buckets:
+        lat = []
+        for _ in range(closed_batches):
+            t0 = time.perf_counter()
+            np.asarray(fns[b](pad(payloads[:b], b)))
+            lat.append((time.perf_counter() - t0) * 1e3)
+        closed[str(b)] = {"batches": closed_batches,
+                          **_pct(lat, closed_batches * b)}
+        closed[str(b)]["n_requests"] = closed_batches * b
+
+    # open loop: paced offered load through the worker-thread server;
+    # latency is client-observed (queue wait + pad + score)
+    open_rows = []
+    for offered in open_points:
+        with ContinuousBatchingServer(fns, pad, max_wait_ms=2.0) as srv:
+            gap = 1.0 / offered
+            handles = []
+            t_next = time.perf_counter()
+            for i in range(open_requests):
+                now = time.perf_counter()
+                if now < t_next:
+                    time.sleep(t_next - now)
+                handles.append(srv.submit(payloads[i % len(payloads)]))
+                t_next += gap
+            for h in handles:
+                h.result(timeout=120.0)
+            lat = [(h.t_done - h.t_submit) * 1e3 for h in handles]
+            wall = (max(h.t_done for h in handles)
+                    - min(h.t_submit for h in handles))
+        open_rows.append({"offered_per_s": float(offered),
+                          "achieved_per_s": open_requests / wall,
+                          **_pct(lat, open_requests)})
+    return {"closed_loop": closed, "open_loop": open_rows}
+
+
+# ---------------------------------------------------------------------------
+# Section: freshness (live train loop -> publish -> serve)
+# ---------------------------------------------------------------------------
+
+
+def freshness_section(mdef, steps: int, publish_every: int) -> dict:
+    import jax
+
+    from repro.core import hybrid as H
+    from repro.launch.mesh import make_mesh
+    from repro.serve import (SnapshotPublisher, combined_serve_stats,
+                             make_snapshot_score_step)
+    from repro.train import TrainLoop, TrainLoopConfig
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    state, layout = H.init_state(jax.random.PRNGKey(0), mdef, mesh)
+    step_fn, _, _, _ = H.make_train_step(mdef, mesh)
+    payloads = make_payloads(mdef, layout, mdef.batch, seed=1)
+    batch = {k: np.stack([p[k] for p in payloads])
+             for k in payloads[0]}
+    pub = SnapshotPublisher(mdef, publish_every=publish_every)
+    pub.publish(0, state)
+    loop = TrainLoop(TrainLoopConfig(steps=steps, log_every=10_000,
+                                     prefetch=0),
+                     step_fn, state, itertools.repeat(batch),
+                     step_hook=pub,
+                     serve_stats=combined_serve_stats(pub))
+    loop.run()
+    f = pub.freshness()
+    # prove the published tables actually serve: score a batch from the
+    # newest snapshot, synchronously
+    fn, _, _, _ = make_snapshot_score_step(mdef, mesh, donate_batch=False)
+    scores = np.asarray(fn(pub.registry.current().state, batch))
+    return {"steps": steps,
+            "publish_every": publish_every,
+            "publishes": pub.publishes,
+            "snapshot_version": f["version"],
+            "steps_behind": f["steps_behind"],
+            "seconds_behind": f["seconds_behind"],
+            "served_ok": bool(np.isfinite(scores).all()
+                              and scores.shape == (mdef.batch,))}
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI (the committed baseline is "
+                         "the smoke run — exact keys must reproduce)")
+    ap.add_argument("--json", default=str(ROOT / "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        rows, tables, batch = 200, 6, 32
+        buckets, closed_batches = (4, 16), 30
+        open_points, open_requests = (200.0, 1000.0), 200
+        steps, publish_every = 10, 4
+    else:
+        rows, tables, batch = 2000, 8, 64
+        buckets, closed_batches = (8, 32, 128), 100
+        open_points, open_requests = (500.0, 2000.0, 8000.0), 2000
+        steps, publish_every = 50, 10
+
+    doc = {"model": {"tables": tables, "rows_per_table": rows,
+                     "batch": batch, "buckets": list(buckets),
+                     "closed_loop_batches": closed_batches,
+                     "open_loop_requests": open_requests}}
+
+    doc["bytes"] = bytes_section(rows, tables, batch)
+    b = doc["bytes"]
+    print(f"serving_bytes_bf16_hi,{b['split_sgd']['serving_table_bytes']}")
+    print(f"serving_bytes_fp32,{b['sgd']['serving_table_bytes']}")
+    print(f"bytes_fraction,{b['split_sgd']['fp32_fraction']:.3f},budget "
+          f"{BYTES_BUDGET} -> {'OK' if b['bf16_hi_vs_fp32_ok'] else 'FAIL'}")
+
+    mdef = make_def("split_sgd", rows, tables, batch)
+    doc["latency"] = latency_section(mdef, buckets, closed_batches,
+                                     open_points, open_requests)
+    for bk, row in doc["latency"]["closed_loop"].items():
+        print(f"closed_bucket_{bk},p50 {row['p50_ms']:.3f} ms,"
+              f"p99 {row['p99_ms']:.3f} ms,{row['n_requests']} reqs")
+    for row in doc["latency"]["open_loop"]:
+        print(f"open_offered_{row['offered_per_s']:.0f},"
+              f"achieved {row['achieved_per_s']:.1f}/s,"
+              f"p50 {row['p50_ms']:.3f} ms,p99 {row['p99_ms']:.3f} ms")
+
+    doc["freshness"] = freshness_section(mdef, steps, publish_every)
+    f = doc["freshness"]
+    print(f"freshness,v{f['snapshot_version']},{f['steps_behind']} steps,"
+          f"{f['seconds_behind']:.3f}s behind,"
+          f"{'OK' if f['served_ok'] else 'FAIL'}")
+
+    Path(args.json).write_text(json.dumps(doc, indent=2))
+    print(f"serve_json,1.0,{args.json}")
+    if not doc["bytes"]["bf16_hi_vs_fp32_ok"]:
+        return 1
+    if not doc["freshness"]["served_ok"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -88,6 +88,35 @@ def packed_stream(args, expect, layout, host_presort: bool):
     return HostPipeline(reader, layout=layout, presort=host_presort)
 
 
+def serve_smoke(mdef, mesh, publisher, batch, buckets):
+    """Post-train serving smoke (--serve-smoke): continuous batching over
+    the published snapshot with a burst of single-sample requests sliced
+    from one synthetic batch; per-bucket latency + freshness printed."""
+    from repro.serve import ContinuousBatchingServer, make_bucket_scorers
+    registry = publisher.registry
+    score_fns, pad_batch = make_bucket_scorers(
+        mdef, mesh, buckets, lambda: registry.current().state)
+    n = int(np.asarray(batch["idx"]).shape[0])
+    payloads = [{k: np.asarray(v)[i] for k, v in batch.items()}
+                for i in range(n)]
+    with ContinuousBatchingServer(score_fns, pad_batch,
+                                  max_wait_ms=2.0) as srv:
+        handles = [srv.submit(p) for p in payloads]
+        scores = [h.result(timeout=120.0) for h in handles]
+        stats = srv.stats()
+        pct = srv.percentiles()
+    print(f"[serve] smoke: {len(scores)} requests scored in "
+          f"{sum(stats['batches'].values())} batches "
+          f"(padded rows: {stats['padded']})")
+    for b in sorted(pct):
+        p = pct[b]
+        print(f"[serve]   bucket {b:>4}: p50 {p['p50_ms']:8.2f} ms   "
+              f"p99 {p['p99_ms']:8.2f} ms   n={p['n']}")
+    f = publisher.freshness()
+    print(f"[serve] snapshot v{f['version']}: {f['steps_behind']} steps / "
+          f"{f['seconds_behind']:.2f}s behind the training head")
+
+
 def reduced_dlrm(name: str, batch: int):
     from repro.core.dlrm import DLRMConfig
     if name == "dlrm-100m":
@@ -217,6 +246,19 @@ def main():
                     help="preemption drill: request a stop at this step "
                          "(records a 'preempted' event, writes the final "
                          "checkpoint) — gives smoke traces a fault track")
+    ap.add_argument("--publish-every", type=int, default=0,
+                    help="publish a read-only serving snapshot of the "
+                         "bf16-hi tables every N completed steps "
+                         "(docs/serve.md; recsys archs); snapshot version "
+                         "and train-to-serve freshness ride the heartbeat; "
+                         "0 = off")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="after training, drive a continuous-batching "
+                         "serving smoke over the published snapshot "
+                         "(per-bucket latency percentiles printed)")
+    ap.add_argument("--serve-buckets", default="8,32,128",
+                    help="compiled serving batch-shape ladder for "
+                         "--serve-smoke (ascending, comma-separated)")
     args = ap.parse_args()
     if args.trace_dir:
         telemetry.configure(enabled=True, trace_dir=args.trace_dir)
@@ -273,6 +315,7 @@ def main():
                 layout, args.host_presort)
         else:
             stream = dlrm_stream(0, cfg, args.alpha)
+        smoke_stream = lambda: dlrm_stream(1, cfg, args.alpha)  # noqa: E731
         n_params = cfg.spec.total_rows * cfg.emb_dim
         print(f"[train] {args.arch}: ~{n_params/1e6:.1f}M embedding params")
     elif args.arch in ("fm", "bst", "sasrec", "din"):
@@ -308,6 +351,7 @@ def main():
                 layout, args.host_presort)
         else:
             stream = hybrid_stream(0, mdef, args.alpha)
+        smoke_stream = lambda: hybrid_stream(1, mdef, args.alpha)  # noqa: E731
     else:
         from repro.models import lm_steps
         from repro.data.synthetic import token_stream
@@ -335,6 +379,11 @@ def main():
                 "--step-metrics counts the recsys hybrid step's sparse "
                 "traffic (dlrm/fm/bst/sasrec/din); LM archs have no "
                 "metrics vector")
+        if args.publish_every or args.serve_smoke:
+            raise SystemExit(
+                "--publish-every/--serve-smoke publish the recsys serving "
+                "snapshot (dlrm/fm/bst/sasrec/din); LM archs have no "
+                "serving path")
         cfg, B, L = reduced_lm(args.arch, args.batch, args.seq)
         profile_def = None
         state = lm_steps.init_lm_state(key, cfg, mesh)
@@ -343,6 +392,19 @@ def main():
         shardings = shardings[0]
         stream = ({k: jax.numpy.asarray(v) for k, v in b.items()}
                   for b in token_stream(0, cfg.vocab, B, L))
+
+    publisher = None
+    serve_stats = None
+    if args.publish_every or args.serve_smoke:
+        from repro.serve import SnapshotPublisher, combined_serve_stats
+        publisher = SnapshotPublisher(
+            profile_def,
+            publish_every=args.publish_every or max(args.steps, 1))
+        publisher.publish(0, state)   # v1: tables before training starts
+        serve_stats = combined_serve_stats(publisher)
+        print(f"[serve] snapshot v1 published "
+              f"({publisher.registry.current().emb_bytes / 1e6:.2f} MB "
+              f"serving table), cadence {publisher.publish_every} steps")
 
     event_log = None
     if args.event_log or args.trace_dir:
@@ -368,7 +430,7 @@ def main():
         step, state, stream,
         state_shardings=shardings if args.ckpt_dir else None,
         batch_shardings=batch_shardings, faults=faults,
-        event_log=event_log)
+        event_log=event_log, step_hook=publisher, serve_stats=serve_stats)
     try:
         loop.run()
         if args.trace_dir and profile_def is not None:
@@ -376,6 +438,10 @@ def main():
             print("[train] profiling pipeline stages (barrier mode)")
             stage_profiler.profile_stages(profile_def,
                                           tracer=telemetry.get_tracer())
+        if args.serve_smoke:
+            buckets = tuple(int(b) for b in args.serve_buckets.split(","))
+            serve_smoke(profile_def, mesh, publisher,
+                        next(smoke_stream()), buckets)
     finally:
         if hasattr(stream, "close"):
             stream.close()        # release the HostPipeline worker

@@ -1,1 +1,28 @@
-from repro.serve.loop import BatchingServer  # noqa: F401
+"""Production serving subsystem (docs/serve.md).
+
+* :mod:`repro.serve.server` — continuous batching over bucketed compiled
+  shapes with a real ``max_wait_ms`` deadline (plus the legacy
+  pad-and-drain :class:`BatchingServer`).
+* :mod:`repro.serve.snapshot` — immutable read-only serving snapshots of
+  the bf16-hi embedding slab, versioned publish/retire, and the
+  bitwise-identical ``score_from_snapshot`` path.
+* :mod:`repro.serve.publish` — online training wiring: a train-loop hook
+  publishing fresh snapshots to a concurrently running server, with
+  measured train-to-serve freshness.
+"""
+
+from repro.serve.server import (  # noqa: F401
+    BatchingServer,
+    ContinuousBatchingServer,
+    ServerClosed,
+    bucket_for,
+)
+from repro.serve.snapshot import (  # noqa: F401
+    ServingSnapshot,
+    SnapshotRegistry,
+    make_bucket_scorers,
+    make_snapshot_score_step,
+    snapshot_from_state,
+    snapshot_state,
+)
+from repro.serve.publish import SnapshotPublisher, combined_serve_stats  # noqa: F401

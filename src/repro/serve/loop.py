@@ -1,61 +1,5 @@
-"""Minimal batched serving loop (the serve_p99 path).
+"""Back-compat shim: the pad-and-drain :class:`BatchingServer` moved to
+:mod:`repro.serve.server` when serving grew into a subsystem (continuous
+batching + snapshots + publish; see docs/serve.md)."""
 
-Requests queue up; the server pads them to the compiled batch size and runs
-the jitted score step.  Request latencies land in a bounded-memory
-log-bucketed histogram (:class:`repro.telemetry.LatencyHistogram`) so
-:meth:`BatchingServer.percentiles` reports p50/p99 — the metric the
-``serve_p99`` shape exists for — at O(1) memory however long the server
-stays up.  Each drained chunk is also a ``serve/batch`` span on the
-process tracer.
-"""
-
-from __future__ import annotations
-
-import time
-from collections import deque
-from typing import Any, Callable
-
-import numpy as np
-
-from repro import telemetry
-
-
-class BatchingServer:
-    def __init__(self, score_fn: Callable[[dict], np.ndarray],
-                 batch_size: int, pad_batch: Callable[[list], dict],
-                 max_wait_ms: float = 2.0):
-        self.score_fn = score_fn
-        self.batch_size = batch_size
-        self.pad_batch = pad_batch
-        self.max_wait_ms = max_wait_ms
-        self.queue: deque = deque()
-        # 1us..100s in ms units, 2% relative quantile error
-        self.latency = telemetry.LatencyHistogram(lo=1e-3, hi=1e5,
-                                                  growth=1.02)
-
-    def submit(self, request: Any):
-        self.queue.append((time.perf_counter(), request))
-
-    def drain(self):
-        """Process the queue in compiled-batch chunks."""
-        while self.queue:
-            n = min(self.batch_size, len(self.queue))
-            items = [self.queue.popleft() for _ in range(n)]
-            t_in = [t for t, _ in items]
-            reqs = [r for _, r in items]
-            with telemetry.span("serve/batch", cat="serve", n=n):
-                batch = self.pad_batch(reqs)
-                scores = np.asarray(self.score_fn(batch))[:n]
-            t_done = time.perf_counter()
-            for t in t_in:
-                self.latency.record((t_done - t) * 1e3)
-            yield reqs, scores
-
-    def percentiles(self) -> dict:
-        """{p50_ms, p99_ms, mean_ms, n} (empty before any request) — the
-        historical key contract, served from the bounded histogram."""
-        s = self.latency.summary()
-        if not s:
-            return {}
-        return {"p50_ms": s["p50"], "p99_ms": s["p99"],
-                "mean_ms": s["mean"], "n": s["n"]}
+from repro.serve.server import BatchingServer  # noqa: F401

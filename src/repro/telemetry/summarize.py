@@ -30,15 +30,19 @@ def load_events(path) -> list[dict]:
 
 
 def summarize(path) -> dict:
-    """Aggregate a trace file into ``{"tracks", "metrics", "instants"}``.
+    """Aggregate a trace file into ``{"tracks", "metrics", "instants",
+    "serve"}``.
 
     tracks:   track name -> span name -> {count, total_ms, mean_ms,
               modeled_bytes, modeled_flops} (byte/flop columns only when
               the spans carried them)
     metrics:  {"cumulative", "last_window", "hit_rate",
                "last_window_hit_rate", "drains"} from the
-               ``repro.metrics`` counter samples (empty when none)
+              ``repro.metrics`` counter samples (empty when none)
     instants: event name -> count (failure-log events etc.)
+    serve:    aggregate over ``serve/*`` spans — total batches/requests/
+              time plus a per-bucket breakdown of the serve/batch spans
+              (empty when the trace has no serving traffic)
     """
     events = load_events(path)
     track_of: dict[int, str] = {}
@@ -49,6 +53,7 @@ def summarize(path) -> dict:
     tracks: dict[str, dict] = {}
     instants: dict[str, int] = {}
     drains: list[dict] = []
+    serve: dict = {}
     for ev in events:
         ph = ev.get("ph")
         track = track_of.get(ev.get("tid"), str(ev.get("tid")))
@@ -61,6 +66,8 @@ def summarize(path) -> dict:
             for k in ("modeled_bytes", "modeled_flops", "modeled_us"):
                 if k in args:
                     row[k] = float(args[k])   # per-dispatch model, not summed
+            if ev["name"].startswith("serve/"):
+                _fold_serve(serve, ev["name"], ev.get("dur", 0.0) / 1e3, args)
         elif ph == "i":
             instants[ev["name"]] = instants.get(ev["name"], 0) + 1
         elif ph == "C" and ev.get("name") == METRICS_COUNTER:
@@ -82,7 +89,28 @@ def summarize(path) -> dict:
             "last_window_hit_rate": _metrics.hit_rate(win),
             "drains": len(samples),
         }
-    return {"tracks": tracks, "metrics": metrics, "instants": instants}
+    for row in serve.values():
+        row["mean_ms"] = row["total_ms"] / row["count"]
+        for b in row.get("by_bucket", {}).values():
+            b["mean_ms"] = b["total_ms"] / b["count"]
+    return {"tracks": tracks, "metrics": metrics, "instants": instants,
+            "serve": serve}
+
+
+def _fold_serve(serve: dict, name: str, dur_ms: float, args: dict) -> None:
+    """Fold one ``serve/*`` span into the serve aggregate: batch/request
+    counts and wall time, split per compiled bucket when the span says
+    which bucket it ran (serve/batch spans from the continuous server)."""
+    row = serve.setdefault(name, {"count": 0, "total_ms": 0.0, "requests": 0})
+    row["count"] += 1
+    row["total_ms"] += dur_ms
+    row["requests"] += int(args.get("n", 0))
+    if "bucket" in args:
+        b = row.setdefault("by_bucket", {}).setdefault(
+            str(args["bucket"]), {"count": 0, "total_ms": 0.0, "requests": 0})
+        b["count"] += 1
+        b["total_ms"] += dur_ms
+        b["requests"] += int(args.get("n", 0))
 
 
 def _fmt_qty(v: float) -> str:
@@ -106,6 +134,19 @@ def format_summary(s: dict) -> str:
             lines.append(f"  {name:<28} {r['count']:>7} "
                          f"{r['total_ms']:>10.3f} {r['mean_ms']:>9.3f} "
                          f"{b:>9} {f:>9}")
+    if s.get("serve"):
+        lines.append("serve spans:")
+        lines.append(f"  {'span / bucket':<28} {'count':>7} {'reqs':>7} "
+                     f"{'total_ms':>10} {'mean_ms':>9}")
+        for name in sorted(s["serve"]):
+            r = s["serve"][name]
+            lines.append(f"  {name:<28} {r['count']:>7} {r['requests']:>7} "
+                         f"{r['total_ms']:>10.3f} {r['mean_ms']:>9.3f}")
+            for bk in sorted(r.get("by_bucket", {}), key=int):
+                b = r["by_bucket"][bk]
+                lines.append(f"    bucket {bk:<19} {b['count']:>7} "
+                             f"{b['requests']:>7} {b['total_ms']:>10.3f} "
+                             f"{b['mean_ms']:>9.3f}")
     if s["instants"]:
         lines.append("instant events:")
         for name in sorted(s["instants"]):

@@ -215,10 +215,18 @@ class DataRebalancer:
 class TrainLoop:
     def __init__(self, cfg: TrainLoopConfig, step_fn: Callable, state: Any,
                  batches: Iterator[Any], state_shardings: Any = None,
-                 batch_shardings: Any = None, faults=None, event_log=None):
+                 batch_shardings: Any = None, faults=None, event_log=None,
+                 step_hook: Optional[Callable[[int, Any], Any]] = None,
+                 serve_stats: Optional[Callable[[], dict]] = None):
+        # step_hook(completed_step, state) runs after every completed step
+        # (the serve snapshot publisher: repro/serve/publish.py);
+        # serve_stats() is folded into each heartbeat record as rec["serve"]
+        # (per-bucket latency percentiles, queue depth, snapshot freshness)
         self.cfg = cfg
         self.step_fn = step_fn
         self.state = state
+        self.step_hook = step_hook
+        self.serve_stats = serve_stats
         self.faults = faults if faults is not None else NO_FAULTS
         self.events = event_log
         if cfg.prefetch > 0:
@@ -312,6 +320,11 @@ class TrainLoop:
             rec["cache_hit_rate"] = step_mx.hit_rate(self._metrics_window)
         if self.ckpt is not None and self.ckpt.save_durations:
             rec["ckpt_save_s"] = [round(d, 6) for d in self.ckpt.save_durations[-8:]]
+        if self.serve_stats is not None:
+            try:
+                rec["serve"] = self.serve_stats()
+            except Exception as e:  # noqa: BLE001 — telemetry must not kill the run
+                rec["serve"] = {"error": repr(e)}
         path = Path(self.cfg.heartbeat_path)
         path.parent.mkdir(parents=True, exist_ok=True)
         with path.open("a") as f:
@@ -371,6 +384,8 @@ class TrainLoop:
                 completed = step + 1
                 if self.monitor.record(step, dt):
                     print(f"[train] straggler step {step}: {dt * 1e3:.1f} ms")
+                if self.step_hook is not None:
+                    self.step_hook(completed, self.state)
                 if step % self.cfg.log_every == 0:
                     print(f"[train] step {step} loss {loss:.4f} {dt * 1e3:.1f} ms")
                 if self.ckpt and completed % self.cfg.ckpt_every == 0:

@@ -1,0 +1,293 @@
+"""Serving subsystem (docs/serve.md): snapshot scoring is BITWISE equal
+to the full-state score step, snapshots never leak optimizer state, the
+bf16-hi serving table is half the fp32 bytes, versioned publish/retire,
+continuous batching over bucketed compiled shapes with a REAL max_wait
+deadline, poisoned-worker fail-fast, and train-to-serve freshness."""
+
+import dataclasses
+import json
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hybrid as H
+from repro.launch.mesh import make_mesh
+from repro.models import recsys as R
+from repro.serve import (BatchingServer, ContinuousBatchingServer,
+                         ServerClosed, SnapshotPublisher, SnapshotRegistry,
+                         bucket_for, combined_serve_stats,
+                         make_bucket_scorers, make_snapshot_score_step,
+                         snapshot_from_state, snapshot_state)
+from repro.train import TrainLoop, TrainLoopConfig
+
+RNG = np.random.default_rng(0)
+
+
+def small_fm(optimizer="split_sgd", B=8):
+    return dataclasses.replace(R.make_fm((50,) * 6, batch=B),
+                               sparse_optimizer=optimizer)
+
+
+def fm_batch(mdef, layout, B):
+    rows = [mdef.spec.table_rows[t] for t in layout.slot_to_table]
+    idx = np.stack([RNG.integers(0, m, (B, 1)) for m in rows], axis=1)
+    return {"idx": jnp.asarray(idx, jnp.int32),
+            "labels": jnp.asarray(RNG.integers(0, 2, (B,)), jnp.float32)}
+
+
+# ------------------------------------------------------------ snapshots --
+
+@pytest.mark.parametrize("opt", ["split_sgd", "sgd"])
+def test_snapshot_scoring_bitwise_equals_score_step(opt):
+    """The acceptance pin: scoring from a ServingSnapshot is bitwise
+    identical to hybrid.make_score_step on the same weights — for the
+    bf16-hi (split_sgd) AND fp32 (sgd) stores."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    mdef = small_fm(opt)
+    state, layout = H.init_state(jax.random.PRNGKey(0), mdef, mesh)
+    step, _, _, _ = H.make_train_step(mdef, mesh)
+    batch = fm_batch(mdef, layout, mdef.batch)
+    for _ in range(2):
+        state, _ = step(state, batch)
+
+    ref_fn, _, _, _ = H.make_score_step(mdef, mesh)
+    ref = np.asarray(ref_fn(state, batch))
+    snap = snapshot_from_state(mdef, state, step=2)
+
+    fn, _, _, _ = make_snapshot_score_step(mdef, mesh, donate_batch=False)
+    got = np.asarray(fn(snap.state, batch))
+    assert got.dtype == ref.dtype and got.tobytes() == ref.tobytes()
+
+    # the donated-batch production path scores the same bits (fresh batch
+    # copy: donation consumes the argument buffers)
+    fn_d, _, _, _ = make_snapshot_score_step(mdef, mesh, donate_batch=True)
+    copy = {k: jnp.array(v) for k, v in batch.items()}
+    got_d = np.asarray(fn_d(snap.state, copy))
+    assert got_d.tobytes() == ref.tobytes()
+
+
+def test_snapshot_excludes_optimizer_state():
+    """A snapshot holds only forward slabs — never momentum/accumulator
+    state, never the Split-SGD lo half — and holds them by REFERENCE."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    mdef = small_fm("momentum")
+    state, _ = H.init_state(jax.random.PRNGKey(0), mdef, mesh)
+    assert "mom" in state["emb"]            # the store does carry it
+    snap = snapshot_state(mdef, state)
+    assert set(snap) == {"emb_w", "dense_hi"}
+    assert snap["emb_w"] is state["emb"]["w"]   # default: zero-cost view
+    # copy=True (what the publisher uses) owns its buffers, so a train
+    # step donating `state` later cannot delete the snapshot's tables
+    owned = snapshot_state(mdef, state, copy=True)
+    assert owned["emb_w"] is not state["emb"]["w"]
+    assert np.array_equal(np.asarray(owned["emb_w"]),
+                          np.asarray(state["emb"]["w"]))
+
+    mdef_s = small_fm("split_sgd")
+    state_s, _ = H.init_state(jax.random.PRNGKey(1), mdef_s, mesh)
+    snap_s = snapshot_state(mdef_s, state_s)
+    assert snap_s["emb_w"] is state_s["emb"]["hi"]
+    assert snap_s["emb_w"].dtype == jnp.bfloat16
+
+
+def test_snapshot_bf16_hi_serving_bytes_half_of_fp32():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    state, _ = H.init_state(jax.random.PRNGKey(0), small_fm("split_sgd"), mesh)
+    snap = snapshot_from_state(small_fm("split_sgd"), state)
+    assert snap.emb_bytes * 2 == snap.fp32_emb_bytes
+
+    state32, _ = H.init_state(jax.random.PRNGKey(0), small_fm("sgd"), mesh)
+    snap32 = snapshot_from_state(small_fm("sgd"), state32)
+    assert snap32.emb_bytes == snap32.fp32_emb_bytes
+
+
+def test_registry_publish_retire_versions():
+    reg = SnapshotRegistry(keep=2)
+    assert reg.current() is None
+    for step in (0, 5, 10):
+        reg.publish({"emb_w": np.zeros(1)}, step=step)
+    assert reg.versions() == [2, 3]         # keep=2 auto-retired v1
+    assert reg.current().version == 3 and reg.current().step == 10
+    assert reg.get(1) is None and reg.get(2).step == 5
+    assert reg.retire(2) and not reg.retire(2)
+    assert reg.versions() == [3]
+    with pytest.raises(ValueError):
+        SnapshotRegistry(keep=0)
+
+
+# --------------------------------------------------------------- server --
+
+def test_bucket_for_picks_smallest_fit():
+    assert bucket_for(1, (4, 16)) == 4
+    assert bucket_for(4, (4, 16)) == 4
+    assert bucket_for(5, (4, 16)) == 16
+    with pytest.raises(ValueError):
+        bucket_for(17, (4, 16))
+
+
+def _echo_server(**kw):
+    """Buckets 4/16; scores payload*2 via a padded 'vals' batch."""
+    fns = {b: (lambda batch: batch["vals"] * 2) for b in (4, 16)}
+    pad = lambda ps, b: {"vals": np.array(ps + [0] * (b - len(ps)))}  # noqa: E731
+    return ContinuousBatchingServer(fns, pad, **kw)
+
+
+def test_continuous_server_scores_and_batches():
+    with _echo_server(max_wait_ms=20.0) as srv:
+        handles = [srv.submit(i) for i in range(10)]
+        assert [h.result(timeout=10.0) for h in handles] == \
+            [2 * i for i in range(10)]
+        stats = srv.stats()
+    assert stats["requests"] == 10 and stats["queue_depth"] == 0
+    # 10 requests coalesce within the wait window: a 16-batch (or a 4 + a
+    # 16 if the worker won the race) — never ten 4-batches
+    assert sum(stats["batches"].values()) <= 2
+    for b, p in stats["buckets"].items():
+        assert p["n"] > 0 and p["p50_ms"] <= p["p99_ms"]
+
+
+def test_continuous_server_partial_batch_waits_for_deadline():
+    """A sub-bucket queue is NOT flushed immediately: a request submitted
+    30 ms after the first still joins the same compiled batch when
+    max_wait_ms covers the gap."""
+    with _echo_server(max_wait_ms=300.0) as srv:
+        h1 = srv.submit(1)
+        t = threading.Timer(0.03, lambda: srv.submit(2))
+        t.start()
+        assert h1.result(timeout=10.0) == 2
+        t.join()
+        # both requests rode one batch: the worker waited for the joiner
+        deadline = time.perf_counter() + 5.0
+        while srv.requests < 2 and time.perf_counter() < deadline:
+            time.sleep(0.005)
+        assert sum(srv.batches.values()) == 1
+        assert srv.requests == 2
+
+
+def test_continuous_server_poisoned_by_scorer_error():
+    fns = {4: lambda batch: (_ for _ in ()).throw(RuntimeError("boom"))}
+    pad = lambda ps, b: {}  # noqa: E731
+    srv = ContinuousBatchingServer(fns, pad, max_wait_ms=1.0)
+    h = srv.submit(0)
+    with pytest.raises(ServerClosed) as ei:
+        h.result(timeout=10.0)
+    assert isinstance(ei.value.__cause__, RuntimeError)
+    # sticky-dead: later submits fail promptly instead of hanging
+    with pytest.raises(ServerClosed):
+        srv.submit(1)
+    srv.close()
+
+
+def test_continuous_server_close_fails_queued():
+    srv = _echo_server(max_wait_ms=1.0)
+    srv.close()
+    with pytest.raises(ServerClosed):
+        srv.submit(0)
+
+
+def test_server_over_snapshots_picks_up_publish():
+    """End-to-end: the server reads the registry per batch, so a publish
+    between batches serves the NEW tables with no restart."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    mdef = small_fm("split_sgd", B=4)
+    state, layout = H.init_state(jax.random.PRNGKey(0), mdef, mesh)
+    step, _, _, _ = H.make_train_step(mdef, mesh)
+    batch = fm_batch(mdef, layout, 4)
+    reg = SnapshotRegistry()
+    reg.publish(snapshot_state(mdef, state), step=0)
+    fns, pad = make_bucket_scorers(mdef, mesh, (4,),
+                                   lambda: reg.current().state)
+    payloads = [{k: np.asarray(v)[i] for k, v in batch.items()}
+                for i in range(4)]
+    with ContinuousBatchingServer(fns, pad, max_wait_ms=10.0) as srv:
+        r1 = np.array([h.result(60.0) for h in
+                       [srv.submit(p) for p in payloads]])
+        state2, _ = step(state, batch)
+        reg.publish(snapshot_state(mdef, state2), step=1)
+        r2 = np.array([h.result(60.0) for h in
+                       [srv.submit(p) for p in payloads]])
+    assert np.isfinite(r1).all() and np.isfinite(r2).all()
+    assert not np.array_equal(r1, r2)       # trained tables are live
+
+
+# ------------------------------------------------- BatchingServer (sync) --
+
+def test_batching_server_max_wait_is_not_dead():
+    """Regression for the dead-parameter bug: a sub-batch-size queue must
+    wait for max_wait_ms, not pad-and-flush immediately — a straggler
+    submitted from another thread 30 ms in still joins the chunk."""
+    srv = BatchingServer(lambda b: np.zeros(4), batch_size=4,
+                         pad_batch=lambda reqs: {"n": len(reqs)},
+                         max_wait_ms=500.0)
+    srv.submit("a")
+    srv.submit("b")
+    joined = threading.Timer(0.03, lambda: (srv.submit("c"),
+                                            srv.submit("d")))
+    joined.start()
+    t0 = time.perf_counter()
+    chunks = [len(reqs) for reqs, _ in srv.drain()]
+    dt = time.perf_counter() - t0
+    joined.join()
+    assert chunks == [4]                    # one full chunk, no early flush
+    assert dt < 0.45                        # returned at fill, not deadline
+
+
+def test_batching_server_flushes_partial_at_deadline():
+    srv = BatchingServer(lambda b: np.zeros(4), batch_size=4,
+                         pad_batch=lambda reqs: {"n": len(reqs)},
+                         max_wait_ms=60.0)
+    srv.submit("only")
+    t0 = time.perf_counter()
+    chunks = [len(reqs) for reqs, _ in srv.drain()]
+    dt = time.perf_counter() - t0
+    assert chunks == [1]
+    assert dt >= 0.055                      # held the partial to deadline
+
+
+# ------------------------------------------------------- publish + loop --
+
+def test_publisher_cadence_and_freshness():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    mdef = small_fm("split_sgd")
+    state, _ = H.init_state(jax.random.PRNGKey(0), mdef, mesh)
+    pub = SnapshotPublisher(mdef, publish_every=2)
+    assert pub.freshness() == {}
+    snap = pub.publish(0, state)            # v1 before training starts
+    # published snapshots own their slabs (donation safety)
+    assert snap.state["emb_w"] is not state["emb"]["hi"]
+    for step in range(1, 6):
+        pub(step, state)                    # the TrainLoop step_hook shape
+    assert pub.publishes == 3               # step 0, 2, 4
+    assert pub.registry.current().version == 3
+    f = pub.freshness()
+    assert f["version"] == 3 and f["steps_behind"] == 1  # head 5, snap 4
+    assert 0 <= f["seconds_behind"] < 60
+    stats = combined_serve_stats(pub)()
+    assert stats["snapshot"]["publishes"] == 3
+    assert stats["snapshot"]["versions"] == [2, 3]
+    with pytest.raises(ValueError):
+        SnapshotPublisher(mdef, publish_every=0)
+
+
+def test_trainloop_step_hook_and_serve_heartbeat(tmp_path):
+    hooks = []
+
+    def step(state, batch):
+        return state + 1, float(state)
+
+    hb = tmp_path / "hb.jsonl"
+    loop = TrainLoop(TrainLoopConfig(steps=4, log_every=100, prefetch=0,
+                                     heartbeat_path=str(hb),
+                                     heartbeat_every=2),
+                     step, 0, iter(range(100)),
+                     step_hook=lambda s, st: hooks.append(s),
+                     serve_stats=lambda: {"snapshot": {"version": 7}})
+    loop.run()
+    assert hooks == [1, 2, 3, 4]            # every completed step, in order
+    recs = [json.loads(ln) for ln in hb.read_text().splitlines()]
+    assert recs
+    assert all(r["serve"] == {"snapshot": {"version": 7}} for r in recs)

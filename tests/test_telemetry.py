@@ -133,6 +133,51 @@ def test_latency_histogram_quantiles():
     assert s["mean"] == pytest.approx(vals.mean(), rel=0.05)
 
 
+def test_latency_histogram_out_of_range_samples():
+    """Samples outside [lo, hi) are clamped into the edge buckets but stay
+    EXACT in min/max/mean — recording them must never raise or be lost."""
+    h = LatencyHistogram(lo=1.0, hi=100.0, growth=1.02)
+    h.record(0.001)     # far below lo -> first bucket
+    h.record(0.5)
+    h.record(10.0)
+    h.record(5000.0)    # far above hi -> last bucket
+    s = h.summary()
+    assert s["n"] == 4
+    assert s["min"] == 0.001 and s["max"] == 5000.0
+    assert s["mean"] == pytest.approx((0.001 + 0.5 + 10.0 + 5000.0) / 4)
+    # quantiles stay inside the observed range; an above-hi sample
+    # saturates at the last bucket, so its quantile caps near hi (the
+    # exact value survives only in min/max/mean)
+    assert s["min"] <= h.quantile(0.0) <= h.quantile(1.0) <= s["max"]
+    assert 100.0 <= h.quantile(1.0) <= 105.0
+
+
+def test_latency_histogram_single_sample():
+    h = LatencyHistogram()
+    h.record(42.0)
+    s = h.summary()
+    assert s["n"] == 1
+    assert s["min"] == s["max"] == s["mean"] == 42.0
+    # with one sample every quantile is that sample (clamping to the
+    # exact min/max beats the bucket midpoint)
+    assert s["p50"] == s["p99"] == 42.0
+
+
+def test_latency_histogram_relative_error_bound():
+    """Documented accuracy contract: with growth=1.02 any quantile of a
+    known distribution is within 2% relative error (bucket width + the
+    'lower' rank convention's one-sample slack)."""
+    rng = np.random.default_rng(7)
+    vals = rng.lognormal(mean=1.0, sigma=1.5, size=20_000)
+    h = LatencyHistogram(lo=1e-3, hi=1e5, growth=1.02)
+    for v in vals:
+        h.record(float(v))
+    svals = np.sort(vals)
+    for q in (0.01, 0.25, 0.5, 0.9, 0.99):
+        exact = svals[int(q * len(svals))]      # 'lower' rank convention
+        assert h.quantile(q) == pytest.approx(exact, rel=0.02), q
+
+
 def test_serve_loop_uses_histogram():
     from repro.serve import BatchingServer
 
@@ -346,6 +391,30 @@ def test_summarize_round_trip(tmp_path):
     assert m["last_window"]["bags"] == 4.0
     assert m["last_window"]["skipped_bags"] == 3.0
     assert m["last_window_hit_rate"] == step_mx.hit_rate(m["last_window"])
+
+
+def test_summarize_aggregates_serve_spans(tmp_path):
+    """`summarize` folds serve/* spans into a serve section with a
+    per-bucket breakdown (batches, requests, wall time)."""
+    tr = Tracer(enabled=True, trace_dir=str(tmp_path))
+    tr.set_track("serve_worker")
+    for bucket, n in ((8, 5), (8, 8), (32, 20)):
+        with tr.span("serve/batch", cat="serve", bucket=bucket, n=n,
+                     queue_depth=0):
+            time.sleep(0.001)
+    tr.instant("serve/publish", cat="serve", step=4, version=2)
+    s = summarize(tr.export())
+    row = s["serve"]["serve/batch"]
+    assert row["count"] == 3 and row["requests"] == 33
+    assert row["by_bucket"]["8"] == pytest.approx(
+        {"count": 2, "requests": 13,
+         "total_ms": row["by_bucket"]["8"]["total_ms"],
+         "mean_ms": row["by_bucket"]["8"]["total_ms"] / 2})
+    assert row["by_bucket"]["32"]["requests"] == 20
+    assert s["instants"]["serve/publish"] == 1
+    # non-serving traces keep an empty section
+    assert summarize(Tracer(enabled=True,
+                            trace_dir=str(tmp_path)).export())["serve"] == {}
 
 
 def test_summarize_cli(tmp_path, capsys):
