@@ -25,6 +25,20 @@ timed end-to-end (CPU wall-clock: schedule-shape only, NOT
 hardware-representative — the modeled numbers target TPU_V5E).  Results
 land in ``BENCH_pipeline.json``.
 
+``--exchange-dtype D0,D1,...`` (e.g. ``fp32,bf16``) additionally evaluates
+the compressed exchange wire formats (repro/dist/exchange.py) at each
+dtype: an analytic per-rank wire-volume model at the 64 modeled ranks
+(the bwd dY all_to_all share of Eq. 2 + the dense-gradient
+reduce-scatter share of Eq. 1 scale with the wire itemsize; the index
+stream, the fwd layout switch, and the always-bf16 weight all-gather do
+not), the Sect. VI overlap model re-run with the compressed exchange,
+and a compiled-HLO leg (``exchange_dtype`` threaded into the measured
+subprocess) whose collective bytes shrink accordingly.  Paired rows land
+in the ``wire`` section next to ``wire_reduction_x`` — the modeled
+compressible-byte reduction vs the fp32 wire, an EXACT gate key
+(benchmarks/check_bench.py): it is a pure ratio of itemsizes, 2.0 for
+bf16 — and ``wire_reduction_ok`` (>= 1.9, the acceptance floor).
+
 ``--cache-rows K0,K1,...`` additionally measures the frequency-tiered
 hot-row cache (repro/core/cache.py, docs/cache.md) at each hot_rows=K on
 a zipf(1.05) stream: the subprocess trains the table-mode pipelined step
@@ -120,7 +134,8 @@ from repro.launch.dryrun import parse_collective_bytes
 mesh = make_mesh((1, {ranks}), ("data", "model"))
 cfg = DLRMConfig(name="bench", num_dense=32, bottom=(64, 16), top=(64,),
                  table_rows=(2000,) * 8, emb_dim=16, pooling=5,
-                 batch={batch}, emb_mode="table", microbatches={mb})
+                 batch={batch}, emb_mode="table", microbatches={mb},
+                 exchange_dtype={exdt})
 step, shardings, bspecs, layout = make_train_step(cfg, mesh)
 state, _ = init_state(jax.random.PRNGKey(0), cfg, mesh)
 rng = np.random.default_rng(0)
@@ -149,9 +164,11 @@ print(json.dumps(dict(microbatches={mb}, measured_ms=measured_ms,
 """
 
 
-def run_measured(ranks: int, batch: int, mb: int, dry_run: bool) -> dict:
+def run_measured(ranks: int, batch: int, mb: int, dry_run: bool,
+                 exchange_dtype: str | None = None) -> dict:
     return _run_sub(SUB.format(ranks=ranks, batch=batch, mb=mb,
-                               dry_run=dry_run))
+                               dry_run=dry_run,
+                               exdt=repr(exchange_dtype)))
 
 
 def _run_sub(code: str) -> dict:
@@ -268,6 +285,78 @@ def pipeline_rows(microbatches, ranks: int, batch: int, dry_run: bool,
     return out
 
 
+def wire_rows(dtypes, ranks: int, batch: int, dry_run: bool,
+              json_path: Path, chip=TPU_V5E):
+    """Compressed exchange wire formats (repro/dist/exchange.py): analytic
+    per-rank wire volume + the Sect. VI overlap model at each dtype, and a
+    compiled-HLO leg with ``exchange_dtype`` threaded into the subprocess.
+
+    The compressible volume is the bwd dY all_to_all share of Eq. 2 plus
+    the dense-gradient reduce-scatter share of Eq. 1; the index stream,
+    the fwd layout switch (fp32) and the weight all-gather (always bf16 —
+    the Split-SGD hi half) are wire-dtype-independent."""
+    from repro.dist.exchange import wire_itemsize
+
+    cfg = dlrm_small(mode="table")
+    S, N, E, P = len(cfg.table_rows), cfg.batch, cfg.emb_dim, cfg.pooling
+    RM, M = 64, 4                      # modeled ranks / microbatches
+    ici_bw = chip.ici_bw_per_link * chip.ici_links
+    ag_B = (allreduce_bytes(cfg.bottom_sizes, bytes_per_elem=2)
+            + allreduce_bytes(cfg.top_sizes, bytes_per_elem=2))
+
+    def model(isz: int) -> dict:
+        dY_B = S * N * E * isz / RM
+        rs_B = (allreduce_bytes(cfg.bottom_sizes, bytes_per_elem=isz)
+                + allreduce_bytes(cfg.top_sizes, bytes_per_elem=isz))
+        idx_bytes = S * N * P * 4 / RM
+        a2a_bytes = (S * N * E * 4) / RM + dY_B      # fwd fp32 + bwd wire
+        t_ex = (idx_bytes + a2a_bytes) / ici_bw
+        t_comp = dense_flops(cfg) / RM / chip.peak_flops_bf16
+        t_tail = ((rs_B + ag_B) / ici_bw
+                  + (2 * N * S * E * 4 / RM) / chip.hbm_bw)
+        ex_mb, comp_mb = t_ex / M, t_comp / M
+        t_overlap = ex_mb + (M - 1) * max(comp_mb, ex_mb) + comp_mb + t_tail
+        return {"wire_itemsize_B": isz,
+                "modeled_dY_a2a_B_per_rank": dY_B,
+                "modeled_dense_rs_B": rs_B,
+                "modeled_dense_ag_B": ag_B,
+                "modeled_compressible_B": dY_B + rs_B,
+                "modeled_overlap_s": t_overlap}
+
+    fp32_ref = model(4)
+    section, out = {}, []
+    for dt in dtypes:
+        rec = model(wire_itemsize(dt))
+        rec["modeled_overlap_speedup_x"] = (fp32_ref["modeled_overlap_s"]
+                                            / rec["modeled_overlap_s"])
+        measured = run_measured(ranks, batch, 1, dry_run, exchange_dtype=dt)
+        rec["collective_bytes"] = measured["collective_bytes"]
+        rec["collective_counts"] = measured["collective_counts"]
+        section[dt] = rec
+        out.append((f"wire_{dt}_compressible_B_per_rank",
+                    rec["modeled_compressible_B"],
+                    "bwd dY a2a (Eq.2 share) + dense RS (Eq.1) @64r"))
+        out.append((f"wire_{dt}_overlap_speedup_x",
+                    rec["modeled_overlap_speedup_x"],
+                    "Sect.VI overlap model vs fp32 wire @64r M=4"))
+        out.append((f"wire_{dt}_measured_a2a_B",
+                    measured["collective_bytes"].get("all-to-all", 0),
+                    f"compiled HLO, {ranks}r table mode"))
+    if "fp32" in section:
+        base_B = section["fp32"]["modeled_compressible_B"]
+        for dt in dtypes:
+            red = base_B / section[dt]["modeled_compressible_B"]
+            section[dt]["wire_reduction_x"] = red
+            if dt != "fp32":
+                section[dt]["wire_reduction_ok"] = bool(red >= 1.9)
+                out.append((f"wire_{dt}_reduction_x", red,
+                            "modeled compressible bytes vs fp32 wire"))
+    _write_merged(json_path, {"wire": dict(
+        section, modeled_ranks=RM, modeled_microbatches=M,
+        measured_ranks=ranks, measured_batch=batch)})
+    return out
+
+
 def merge_sections(old, new):
     # local copy of bench_split_sgd.merge_sections (same dual-path import
     # caveat as bench_split_sgd._timeit): key-stable deep merge, so a
@@ -332,6 +421,11 @@ def main(argv=None):
                     help="forced device count for the measured leg")
     ap.add_argument("--batch", type=int, default=64,
                     help="global batch for the measured leg")
+    ap.add_argument("--exchange-dtype", default=None,
+                    help="comma list of wire formats, e.g. fp32,bf16: "
+                         "model + compile the compressed exchange "
+                         "collectives at each dtype "
+                         "(repro/dist/exchange.py)")
     ap.add_argument("--cache-rows", default=None,
                     help="comma list of hot_rows K values, e.g. 0,64: "
                          "measure the hot-row cache's bag hit rate and "
@@ -346,6 +440,11 @@ def main(argv=None):
         ms = [int(x) for x in args.microbatches.split(",") if x]
         for name, val, derived in pipeline_rows(
                 ms, args.ranks, args.batch, args.dry_run, Path(args.json)):
+            print(f"{name},{val:.4f},{derived}")
+    if args.exchange_dtype:
+        dts = [x for x in args.exchange_dtype.split(",") if x]
+        for name, val, derived in wire_rows(dts, args.ranks, args.batch,
+                                            args.dry_run, Path(args.json)):
             print(f"{name},{val:.4f},{derived}")
     if args.cache_rows:
         ks = [int(x) for x in args.cache_rows.split(",") if x]

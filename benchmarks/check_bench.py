@@ -64,7 +64,7 @@ COST_RE = re.compile(r"(^|_)(us|ms|s|sec|seconds|wall|time)(_|$)|us_measured")
 # walls: banded for visibility, with the real gate on the exact-class
 # ``overhead_ok`` bool next to it.
 BAND_RE = re.compile(r"collective_bytes|collective_counts|/coll/|flops"
-                     r"|overhead_ratio")
+                     r"|overhead_ratio|overlap_speedup")
 # analytically derived from model keys: exact up to float repr
 # (modeled_*_ms values are functions of MEASURED times — the cost class
 # catches them via their _ms suffix)

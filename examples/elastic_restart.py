@@ -73,7 +73,8 @@ def main():
         old_lo_nat = dp.to_bucketed_layout  # noqa: F841 (layout docs)
         # simplest correct path: checkpoint stores lo in bucket layout for
         # the OLD shard count; reconstruct fp32 via the old layout inverse
-        ns_old, nb = 8, cfg.num_buckets
+        from repro.dist.exchange import resolve_exchange
+        ns_old, nb = 8, resolve_exchange(cfg).num_buckets
         padded = old_lo.size
         bchunk = padded // (ns_old * nb)
         lo_nat = old_lo.reshape(ns_old, nb, bchunk).transpose(1, 0, 2

@@ -28,6 +28,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core.embedding import EmbeddingSpec
 from repro.core import sharded_embedding as se
+from repro.dist.exchange import ExchangeConfig
 from repro.core.interaction import dot_interaction, interaction_output_dim
 from repro.models.mlp import init_mlp, mlp_forward
 from repro.optim import row as row_optim
@@ -54,14 +55,24 @@ class DLRMConfig:
     sparse_optimizer: Optional[str] = None
     opt_beta: Optional[float] = None
     opt_eps: Optional[float] = None
-    split_sgd: bool = True          # C5 on/off (legacy optimizer sugar)
+    # DEPRECATED C5 on/off sugar (None = the 'split_sgd' default without
+    # the DeprecationWarning; read only when sparse_optimizer is unset)
+    split_sgd: Optional[bool] = None
     # Pallas fused sparse-bwd + row-optimizer update (the split path is
     # bit-identical to the reference).  None = on where the kernel compiles
     # (TPU), off elsewhere (CPU interpret emulation pays O(shard) per grid
     # step); True/False forces the choice for A/B benchmarking and tests.
     fused_update: Optional[bool] = None
-    compress_grads: bool = False    # bf16 wire + error feedback
-    num_buckets: int = 4            # C4 bucketing
+    # typed comm/precision config (repro/dist/exchange.py): exchange
+    # lowering + per-collective wire formats + dense error feedback +
+    # RS+AG bucketing in ONE frozen dataclass.  Mutually exclusive with
+    # the flat kwargs below.
+    exchange: Optional[ExchangeConfig] = None
+    # sugar: both wire dtypes at once ('fp32' | 'bf16' | 'bf16_sr')
+    exchange_dtype: Optional[str] = None
+    # DEPRECATED flat kwargs (resolve_exchange coerces + warns):
+    compress_grads: Optional[bool] = None   # bf16 wire + error feedback
+    num_buckets: Optional[int] = None       # C4 bucketing
     lr: float = 0.1
     mlp_impl: str = "xla"           # 'xla' | 'pallas'
     # 'replicated' reproduces the paper's data loader (every rank reads the
@@ -74,8 +85,9 @@ class DLRMConfig:
     # batch into M microbatches with a double-buffered index exchange so
     # the layout-switch collectives overlap dense compute.  1 = monolithic.
     microbatches: int = 1
-    # index-exchange lowering: 'fused' one all_gather, 'ring' ppermute chunks
-    exchange_impl: str = "fused"
+    # DEPRECATED index-exchange lowering: 'fused' | 'ring' (use
+    # exchange=ExchangeConfig(impl=...))
+    exchange_impl: Optional[str] = None
     # weighted bags: batch carries 'weights' [B, S, P] in the idx layout
     weighted: bool = False
     # host-pre-sorted sparse update (repro/data/pipeline.py): the loader
@@ -226,7 +238,8 @@ def as_hybrid_def(cfg: DLRMConfig):
                 "labels": ((), jnp.float32)},
         emb_mode=cfg.emb_mode, sparse_optimizer=cfg.sparse_optimizer,
         opt_beta=cfg.opt_beta, opt_eps=cfg.opt_eps, split_sgd=cfg.split_sgd,
-        fused_update=cfg.fused_update, compress_grads=cfg.compress_grads,
+        fused_update=cfg.fused_update, exchange=cfg.exchange,
+        exchange_dtype=cfg.exchange_dtype, compress_grads=cfg.compress_grads,
         num_buckets=cfg.num_buckets, lr=cfg.lr, emb_lr=cfg.lr,
         idx_input=cfg.idx_input, microbatches=cfg.microbatches,
         exchange_impl=cfg.exchange_impl, weighted=cfg.weighted,

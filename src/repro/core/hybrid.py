@@ -38,6 +38,7 @@ from repro import compat
 from repro.core.embedding import EmbeddingSpec
 from repro.core import pipeline
 from repro.core import sharded_embedding as se
+from repro.dist.exchange import ExchangeConfig, resolve_exchange
 from repro.optim import data_parallel as dp
 from repro.optim import row as row_optim
 
@@ -70,9 +71,10 @@ class HybridDef:
     # registered default): momentum coefficient / adagrad denominator floor
     opt_beta: Optional[float] = None
     opt_eps: Optional[float] = None
-    # legacy sugar: True -> sparse_optimizer='split_sgd', False -> 'sgd'
-    # (only read when sparse_optimizer is unset)
-    split_sgd: bool = True
+    # DEPRECATED sugar (only read when sparse_optimizer is unset): True ->
+    # sparse_optimizer='split_sgd', False -> 'sgd'.  None (default) keeps
+    # the 'split_sgd' fallback without the DeprecationWarning.
+    split_sgd: Optional[bool] = None
     # fused Pallas sparse-bwd + row-optimizer update (kernels/
     # embedding_update) — the split path is bit-identical to the reference,
     # touches O(touched rows) instead of O(shard rows).  None (default) =
@@ -80,8 +82,23 @@ class HybridDef:
     # interpret emulation pays O(shard) per grid step.  True/False forces
     # the choice (A/B, tests).
     fused_update: Optional[bool] = None
-    compress_grads: bool = False
-    num_buckets: int = 4
+    # typed comm/precision config (repro/dist/exchange.py): the index-
+    # exchange lowering, the per-collective wire formats of the dY
+    # exchange + dense reduce-scatter ('fp32' | 'bf16' | 'bf16_sr'), the
+    # dense error feedback, and the RS+AG bucketing, as ONE frozen
+    # ExchangeConfig.  Mutually exclusive with the flat kwargs below.
+    exchange: Optional[ExchangeConfig] = None
+    # sugar: set BOTH wire dtypes at once ('fp32' is today's wire,
+    # bitwise; 'bf16' halves the compressible collective bytes; 'bf16_sr'
+    # additionally dithers with the seeded sr counter — deterministic and
+    # checkpoint-replayable)
+    exchange_dtype: Optional[str] = None
+    # DEPRECATED flat kwargs, coerced by resolve_exchange with a
+    # DeprecationWarning: compress_grads=True == dense_dtype='bf16' with
+    # error feedback; num_buckets / exchange_impl map to the same-named
+    # ExchangeConfig fields.  None (default) = unset.
+    compress_grads: Optional[bool] = None
+    num_buckets: Optional[int] = None
     lr: float = 0.01
     emb_lr: float = 0.01
     idx_input: str = "replicated"   # 'sharded': on-chip index exchange
@@ -89,9 +106,7 @@ class HybridDef:
     # global batch is split into, with the index exchange double-buffered
     # across them.  1 = the monolithic step.
     microbatches: int = 1
-    # 'fused': one all_gather per exchange; 'ring': ppermute-chunked (finer
-    # units for the latency-hiding scheduler; bit-identical result).
-    exchange_impl: str = "fused"
+    exchange_impl: Optional[str] = None
     # weighted bags: the batch carries a 'weights' field in the exact
     # layout of 'idx' ([B, S, P] per-lookup bag weights); the forward
     # computes sum(w * row) and the sparse update scales dY per lookup.
@@ -155,8 +170,9 @@ def state_struct(mdef: HybridDef, mesh):
     E = mdef.spec.dim
     dense_tree = jax.eval_shape(lambda: mdef.init_dense(jax.random.PRNGKey(0)))
     n_dense = dp.ravel_size(dense_tree)
-    padded = -(-n_dense // (ns_total * mdef.num_buckets)) * (
-        ns_total * mdef.num_buckets)
+    ex_cfg = resolve_exchange(mdef)
+    padded = -(-n_dense // (ns_total * ex_cfg.num_buckets)) * (
+        ns_total * ex_cfg.num_buckets)
     rows = layout.total_rows
     opt = row_optim.resolve(mdef)
     hot_rows = getattr(mdef, "hot_rows", 0)
@@ -172,7 +188,7 @@ def state_struct(mdef: HybridDef, mesh):
                 dense_tree),
             "lo": jax.ShapeDtypeStruct((padded,), jnp.uint16),
             "err": (jax.ShapeDtypeStruct((padded,), jnp.float32)
-                    if mdef.compress_grads else None),
+                    if ex_cfg.needs_err else None),
         },
     }
     specs = {
@@ -180,11 +196,13 @@ def state_struct(mdef: HybridDef, mesh):
         "dense": {
             "hi": jax.tree.map(lambda _: P(), structs["dense"]["hi"]),
             "lo": P(all_axes),
-            "err": P(all_axes) if mdef.compress_grads else None,
+            "err": P(all_axes) if ex_cfg.needs_err else None,
         },
     }
-    if opt.stochastic_round:
-        # per-step stochastic-rounding counter: replicated int32 scalar
+    if opt.stochastic_round or ex_cfg.needs_sr:
+        # per-step stochastic-rounding counter: replicated int32 scalar,
+        # consumed by the compressed-state row optimizers and/or the
+        # 'bf16_sr' wire encoders
         structs["sr"] = jax.ShapeDtypeStruct((), jnp.int32)
         specs["sr"] = P()
     if hot_rows > 0:
@@ -282,15 +300,16 @@ def init_state(key, mdef: HybridDef, mesh):
     W = jax.random.uniform(ke, (layout.total_rows, mdef.spec.dim),
                            jnp.float32, -scale, scale)
     dense = mdef.init_dense(kd)
+    ex_cfg = resolve_exchange(mdef)
     arrays = dp.dp_global_arrays(dense, ns_total,
-                                 compress=mdef.compress_grads,
-                                 num_buckets=mdef.num_buckets)
+                                 compress=ex_cfg.needs_err,
+                                 num_buckets=ex_cfg.num_buckets)
     opt = row_optim.resolve(mdef)
     hot_rows = getattr(mdef, "hot_rows", 0)
     emb = opt.init_store(W, counters=hot_rows > 0)
     state = {"emb": emb, "dense": {"hi": arrays["hi"], "lo": arrays["lo"],
                                    "err": arrays["err"]}}
-    if opt.stochastic_round:
+    if opt.stochastic_round or ex_cfg.needs_sr:
         state["sr"] = jnp.asarray(mdef.sr_seed, jnp.int32)
     if hot_rows > 0:
         from repro.core import cache as hot_cache

@@ -61,6 +61,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core import sharded_embedding as se
 from repro.data.pipeline import PSORT_KEYS
+from repro.dist import exchange as exchange_cfg
 from repro.optim import data_parallel as dp
 from repro.optim import row as row_optim
 
@@ -124,11 +125,9 @@ def validate_pipeline(mdef, mesh, microbatches: int) -> None:
     if mdef.idx_input not in ("replicated", "sharded"):
         raise ValueError(f"unknown idx_input {mdef.idx_input!r}; "
                          "expected 'replicated' or 'sharded'")
-    impl = getattr(mdef, "exchange_impl", "fused")
-    if impl not in ("fused", "ring"):
-        raise ValueError(f"unknown exchange_impl {impl!r}; "
-                         "expected 'fused' (one all_gather) or 'ring' "
-                         "(ppermute-chunked)")
+    # unknown exchange_impl / wire dtype, flat-kwarg vs typed-config
+    # conflicts, bad num_buckets — all fail here, loudly
+    exchange_cfg.resolve_exchange(mdef)
     if microbatches < 1:
         raise ValueError(f"microbatches must be >= 1, got {microbatches}")
     ns = int(np.prod(list(mesh.shape.values())))
@@ -139,9 +138,11 @@ def validate_pipeline(mdef, mesh, microbatches: int) -> None:
     hot_rows = int(getattr(mdef, "hot_rows", 0))
     if hot_rows < 0:
         raise ValueError(f"hot_rows must be >= 0, got {hot_rows}")
+    # validated even with the cache off: a malformed 'deferred:' string
+    # should fail at build time, not when hot_rows is finally turned on
+    from repro.core import cache as hot_cache
+    hot_cache.parse_hot_sync(getattr(mdef, "hot_sync", "allreduce"))
     if hot_rows > 0:
-        from repro.core import cache as hot_cache
-        hot_cache.parse_hot_sync(getattr(mdef, "hot_sync", "allreduce"))
         if int(getattr(mdef, "promote_every", 1)) < 1:
             raise ValueError("promote_every must be >= 1, got "
                              f"{mdef.promote_every}")
@@ -204,7 +205,8 @@ def build_stages(mdef, mesh, layout) -> PipelineStages:
     emb_ax, replica_ax = emb_axes(mdef, mesh)
     nb = (int(np.prod([mesh.shape[a] for a in batch_axes]))
           if batch_axes else 1)
-    impl = getattr(mdef, "exchange_impl", "fused")
+    ex_cfg = exchange_cfg.resolve_exchange(mdef)
+    impl = ex_cfg.impl
     B = mdef.batch
     fused = (jax.default_backend() == "tpu" if mdef.fused_update is None
              else mdef.fused_update)
@@ -257,8 +259,12 @@ def build_stages(mdef, mesh, layout) -> PipelineStages:
             loss_fn, argnums=(0, 1))(dense_hi, emb_out)
         return loss, g_dense, d_emb
 
-    def dY_exchange(d_emb):
-        return se.gather_dY(layout, d_emb, emb_ax, replica_ax)
+    def dY_exchange(d_emb, seed=None, tag=0):
+        # seed = the per-step sr counter (None outside the train step,
+        # e.g. the stage profiler — the dither then keys off step 0);
+        # tag = the microbatch index, so no two payloads share a stream
+        return se.gather_dY(layout, d_emb, emb_ax, replica_ax,
+                            wire_dtype=ex_cfg.dY_dtype, seed=seed, tag=tag)
 
     def sparse_update(emb_store, idx_upd, dY, weights=None, presort=None,
                       seed=None):
@@ -277,12 +283,14 @@ def build_stages(mdef, mesh, layout) -> PipelineStages:
                                fused=fused, weights=weights,
                                presort=presort, seed=seed)
 
-    def dense_update(dense_state, g_dense):
+    def dense_update(dense_state, g_dense, seed=None):
         st = dp.DPState(hi=dense_state["hi"], lo_shard=dense_state["lo"],
                         mom_shard=None, err_shard=dense_state["err"])
         st2 = dp.rs_ag_split_sgd(st, g_dense, mdef.lr, all_axes,
-                                 compress=mdef.compress_grads,
-                                 num_buckets=mdef.num_buckets, mean=False)
+                                 wire_dtype=ex_cfg.dense_dtype,
+                                 error_feedback=ex_cfg.error_feedback,
+                                 num_buckets=ex_cfg.num_buckets, mean=False,
+                                 seed=seed)
         return {"hi": st2.hi, "lo": st2.lo_shard, "err": st2.err_shard}
 
     ex_comm = ("all_gather(idx)" if mdef.idx_input == "sharded"
@@ -391,10 +399,11 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
         W_fwd = opt.fwd_weights(emb_store)
         dense_hi = state["dense"]["hi"]
         # per-step stochastic-rounding seed: a replicated int32 counter in
-        # the train state (present only when the optimizer registered
-        # stochastic_round=True), consumed by the single epilogue
-        # sparse_update and incremented once per step — so resume-from-
-        # checkpoint replays the exact dither sequence.
+        # the train state (present when the optimizer registered
+        # stochastic_round=True OR a 'bf16_sr' wire format is configured),
+        # consumed by the epilogue sparse_update and the bf16_sr wire
+        # encoders, incremented once per step — so resume-from-checkpoint
+        # replays the exact dither sequence, state AND wire.
         sr = state.get("sr")
         # host-pre-sorted update stream: each shard's [1, L] block of the
         # psort_* batch fields (leading dim = combined mesh index, the
@@ -454,7 +463,7 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
                 emb_out = jnp.where(hit[..., None], hot_bag, emb_out)
             loss, g_dense, d_emb = stages.dense_fwd_bwd(
                 dense_hi, emb_out, mb)
-            dY = stages.dY_exchange(d_emb)
+            dY = stages.dY_exchange(d_emb, seed=sr, tag=i)
             loss_acc = loss if loss_acc is None else loss_acc + loss
             g_acc = (g_dense if g_acc is None
                      else jax.tree.map(jnp.add, g_acc, g_dense))
@@ -474,7 +483,7 @@ def make_pipelined_train_step(mdef, mesh, microbatches: int = 1):
         new_emb = stages.sparse_update(emb_store, idx_full, dY_full,
                                        weights=wgt_full, presort=presort,
                                        seed=sr)
-        new_dense = stages.dense_update(state["dense"], g_acc)
+        new_dense = stages.dense_update(state["dense"], g_acc, seed=sr)
         new_state = {"emb": new_emb, "dense": new_dense}
         if sr is not None:
             new_state["sr"] = sr + jnp.asarray(1, sr.dtype)

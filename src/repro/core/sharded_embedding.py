@@ -343,25 +343,79 @@ def _local_rows(layout: ShardedEmbeddingLayout, idx_local: jax.Array,
     return local, valid
 
 
+def _wire_rank(axis_name, replica_axes) -> jax.Array:
+    """Global sender index over every axis the dY exchange spans — the rank
+    coordinate of the wire-dither tag, so no two devices' payloads share a
+    stream.  Uses the single-sourced device-major flattening rule."""
+    from repro.optim.data_parallel import combined_axis_index
+    axes: list = []
+    if replica_axes is not None:
+        axes += list(replica_axes if isinstance(replica_axes, (tuple, list))
+                     else [replica_axes])
+    axes += list(axis_name if isinstance(axis_name, (tuple, list))
+                 else [axis_name])
+    return combined_axis_index(tuple(axes))
+
+
 def gather_dY(layout: ShardedEmbeddingLayout, dY_mp: jax.Array, axis_name,
-              replica_axes=None) -> jax.Array:
+              replica_axes=None, wire_dtype: str = "fp32", seed=None,
+              tag: int = 0) -> jax.Array:
     """Bring the batch-model-sharded cotangent dY [B/ns, S, E] back to the
     layout each shard scatters from: row mode all-gathers the batch over the
     model axes; table mode inverse-all_to_alls to [B, K, E] padded-slot order
-    (plus an optional replica gather over the data axes)."""
+    (plus an optional replica gather over the data axes).
+
+    ``wire_dtype`` selects the on-wire precision (repro/dist/exchange.py).
+    Row mode has ALWAYS shipped a round-to-nearest bf16 payload (matching
+    the bf16 psum_scatter forward), so ``'fp32'`` and ``'bf16'`` both keep
+    that historical wire bit-for-bit and ``'bf16_sr'`` swaps the rounding
+    for the seeded counter dither.  Table mode moves fp32 by default;
+    ``'bf16'``/``'bf16_sr'`` halve the all_to_all (and replica-gather)
+    payload.  ``seed`` is the replicated per-step sr counter; ``tag`` the
+    static payload site within the step (microbatch index).
+
+    16-bit payloads cross the collective as BITCAST uint16 lanes, not as
+    a bf16-typed array: ``convert(collective(convert(x)))`` is a pure
+    data-movement sandwich XLA legally simplifies back onto an fp32
+    carrier (the rounding survives; the byte saving does not), while a
+    bitcast is opaque to the algebraic simplifier — the compiled HLO
+    genuinely moves 2 bytes/element (checked by
+    benchmarks/bench_comm_model.py --exchange-dtype against the lowered
+    collective bytes).  Bitcasting changes no payload bits, so this is
+    value-identical to the convert-based wire."""
+    from repro.dist import exchange as exchange_cfg
+    from repro.optim import stochastic
+
+    def _sr(x):
+        return stochastic.sr_round_bf16_wire(
+            x, jnp.int32(0) if seed is None else seed,
+            exchange_cfg.wire_tag(exchange_cfg.TAG_DY, tag,
+                                  _wire_rank(axis_name, replica_axes)))
+
     if layout.mode == "row":
-        return jax.lax.all_gather(dY_mp.astype(jnp.bfloat16), axis_name,
-                                  axis=0, tiled=True).astype(jnp.float32)
+        payload = (_sr(dY_mp) if wire_dtype == "bf16_sr"
+                   else dY_mp.astype(jnp.bfloat16))
+        wire = jax.lax.bitcast_convert_type(payload, jnp.uint16)
+        wire = jax.lax.all_gather(wire, axis_name, axis=0, tiled=True)
+        return jax.lax.bitcast_convert_type(
+            wire, jnp.bfloat16).astype(jnp.float32)
     src = np.where(layout.padded_slots >= 0, layout.padded_slots, 0)
     dY_slots = jnp.take(dY_mp, jnp.asarray(src), axis=1)
     dummy = jnp.asarray(layout.padded_slots < 0)[None, :, None]
     dY_slots = jnp.where(dummy, 0.0, dY_slots)
+    narrow = wire_dtype in ("bf16", "bf16_sr")
+    if narrow:
+        dY_slots = (_sr(dY_slots) if wire_dtype == "bf16_sr"
+                    else dY_slots.astype(jnp.bfloat16))
+        dY_slots = jax.lax.bitcast_convert_type(dY_slots, jnp.uint16)
     dY_local = jax.lax.all_to_all(dY_slots, axis_name, split_axis=1,
                                   concat_axis=0, tiled=True)
     if replica_axes is not None:
         dY_local = jax.lax.all_gather(dY_local, replica_axes, axis=0,
                                       tiled=True)
-    return dY_local
+    if narrow:
+        dY_local = jax.lax.bitcast_convert_type(dY_local, jnp.bfloat16)
+    return dY_local.astype(jnp.float32)
 
 
 def _row_sorted_streams(layout: ShardedEmbeddingLayout, g_flat: jax.Array,

@@ -1,1 +1,3 @@
 """Distribution helpers: mesh-axis conventions and GSPMD placement policies."""
+
+from repro.dist.exchange import ExchangeConfig, resolve_exchange  # noqa: E402,F401

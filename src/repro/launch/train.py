@@ -226,6 +226,14 @@ def main():
                     help="hot-slab refresh: 'allreduce' (every step; "
                          "bitwise == cache off) or 'deferred:N' (refresh "
                          "every N steps; bounded staleness)")
+    ap.add_argument("--exchange-dtype", default=None,
+                    choices=("fp32", "bf16", "bf16_sr"),
+                    help="wire format of the dY exchange + dense gradient "
+                         "reduce-scatter (docs/pipeline.md 'Communication "
+                         "precision'): fp32 = today's wire (bitwise), "
+                         "bf16 = round-to-nearest (dense leg carries "
+                         "error feedback), bf16_sr = seeded stochastic "
+                         "rounding (deterministic, checkpoint-replayable)")
     ap.add_argument("--trace-dir", default=None,
                     help="enable the process tracer (docs/telemetry.md): "
                          "writes <dir>/trace.json (Chrome trace-event "
@@ -302,6 +310,7 @@ def main():
                                   hot_rows=args.hot_rows,
                                   promote_every=args.promote_every,
                                   hot_sync=args.hot_sync,
+                                  exchange_dtype=args.exchange_dtype,
                                   step_metrics=args.step_metrics)
         state, layout = D.init_state(key, cfg, mesh)
         profile_def = D.as_hybrid_def(cfg)
@@ -332,6 +341,7 @@ def main():
                                    hot_rows=args.hot_rows,
                                    promote_every=args.promote_every,
                                    hot_sync=args.hot_sync,
+                                   exchange_dtype=args.exchange_dtype,
                                    step_metrics=args.step_metrics)
         state, layout = H.init_state(key, mdef, mesh)
         profile_def = mdef
@@ -374,6 +384,11 @@ def main():
                 "--hot-rows caches hot embedding rows of the recsys hybrid "
                 "step (dlrm/fm/bst/sasrec/din); LM archs have no sparse "
                 "embedding path")
+        if args.exchange_dtype is not None:
+            raise SystemExit(
+                "--exchange-dtype compresses the recsys hybrid step's dY "
+                "exchange + dense reduce-scatter (dlrm/fm/bst/sasrec/din); "
+                "LM archs have no exchange collectives")
         if args.step_metrics:
             raise SystemExit(
                 "--step-metrics counts the recsys hybrid step's sparse "

@@ -130,14 +130,32 @@ def dp_global_arrays(params_fp32: Any, ns: int, momentum: float = 0.0,
 
 def rs_ag_split_sgd(state: DPState, grads: Any, lr, axis_name,
                     beta: float = 0.0, compress: bool = False,
-                    num_buckets: int = 4, mean: bool = True) -> DPState:
+                    num_buckets: int = 4, mean: bool = True,
+                    wire_dtype: Optional[str] = None,
+                    error_feedback: bool = True, seed=None) -> DPState:
     """One data-parallel step: bucketed reduce-scatter of grads, split-SGD on
     the local shard, all-gather of updated bf16 weights.
 
     Bucketing splits the flat gradient into ``num_buckets`` independent
     RS -> update -> AG chains so XLA can overlap bucket k's collectives with
     bucket k+1's compute (the paper's progression-thread overlap, as a
-    schedule instead of threads)."""
+    schedule instead of threads).
+
+    ``wire_dtype`` selects the reduce-scatter wire format
+    (repro/dist/exchange.py): ``'fp32'`` the uncompressed wire, ``'bf16'``
+    round-to-nearest truncation with the per-device fp32 residual carried
+    in ``err_shard`` when ``error_feedback`` and the slab exist (exactly
+    the legacy ``compress=True`` scheme), ``'bf16_sr'`` the seeded
+    stochastic-rounding wire (``seed`` = the replicated per-step sr
+    counter; unbiased with no error slab).  ``None`` (default) maps the
+    legacy ``compress`` bool, bit-for-bit."""
+    from repro.dist import exchange as exchange_cfg
+    from repro.optim import stochastic
+    if wire_dtype is None:
+        wire_dtype = ("bf16" if compress and state.err_shard is not None
+                      else "fp32")
+    ef = (wire_dtype == "bf16" and error_feedback
+          and state.err_shard is not None)
     ns = _axis_size(axis_name)
     g_flat, _ = ravel_pytree(jax.tree.map(
         lambda g: g.astype(jnp.float32), grads))
@@ -157,10 +175,15 @@ def rs_ag_split_sgd(state: DPState, grads: Any, lr, axis_name,
             g_flat, (b * (g_flat.shape[0] // num_buckets),),
             (g_flat.shape[0] // num_buckets,))
         eb = None
-        if compress and state.err_shard is not None:
+        if ef:
             # error feedback lives on the *shard*; add it after the RS
             eb = jax.lax.dynamic_slice(state.err_shard, (b * bchunk,), (bchunk,))
+        if wire_dtype == "bf16":
             gb_wire = gb.astype(jnp.bfloat16)
+        elif wire_dtype == "bf16_sr":
+            gb_wire = stochastic.sr_round_bf16_wire(
+                gb, jnp.int32(0) if seed is None else seed,
+                exchange_cfg.wire_tag(exchange_cfg.TAG_DENSE, b, shard))
         else:
             gb_wire = gb
         # reduce-scatter (mean over replicas unless grads are pre-scaled)

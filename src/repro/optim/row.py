@@ -81,6 +81,7 @@ see the store as an opaque dict of row-aligned slabs.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -653,12 +654,22 @@ def make(spec: Any, *, beta: Optional[float] = None,
 def resolve(mdef: Any) -> RowOptimizer:
     """RowOptimizer for a model definition (``HybridDef``, ``DLRMConfig``,
     or anything with the same fields).  ``sparse_optimizer`` (name or
-    instance) wins; a falsy value falls back to the legacy ``split_sgd``
-    bool (True -> 'split_sgd', False -> 'sgd').  ``opt_beta``/``opt_eps``
-    override the registered defaults."""
+    instance) wins; a falsy value falls back to the DEPRECATED
+    ``split_sgd`` bool sugar (True -> 'split_sgd', False -> 'sgd'; an
+    explicit bool warns — the unset ``None`` default resolves to
+    'split_sgd' silently).  ``opt_beta``/``opt_eps`` override the
+    registered defaults."""
     spec = getattr(mdef, "sparse_optimizer", None)
     if not spec:
-        spec = "split_sgd" if getattr(mdef, "split_sgd", True) else "sgd"
+        sugar = getattr(mdef, "split_sgd", None)
+        if sugar is None:
+            spec = "split_sgd"
+        else:
+            warnings.warn(
+                "split_sgd=<bool> is deprecated sugar; pass "
+                "sparse_optimizer='split_sgd' (or 'sgd') instead",
+                DeprecationWarning, stacklevel=2)
+            spec = "split_sgd" if sugar else "sgd"
     return make(spec, beta=getattr(mdef, "opt_beta", None),
                 eps=getattr(mdef, "opt_eps", None))
 

@@ -37,6 +37,10 @@ _MIX2 = 0x846CA68B
 # Weyl / stream constants decorrelating the (seed, row, lane) counters
 _GOLD = 0x9E3779B1
 _ROWC = 0x85EBCA6B
+# wire-payload stream constant (PCG multiplier): keeps the collective
+# wire dither of repro/dist/exchange.py off the row-state dither streams
+# above even when a tag numerically equals a row id
+_WIREC = 0xB5297A4D
 
 
 def mix32(x: jax.Array) -> jax.Array:
@@ -81,3 +85,39 @@ def sr_round_bf16(x: jax.Array, noise_u32: jax.Array) -> jax.Array:
     dithered = bits + (noise_u32 & jnp.uint32(0xFFFF))
     return jax.lax.bitcast_convert_type(
         (dithered >> 16).astype(jnp.uint16), jnp.bfloat16)
+
+
+def wire_noise(seed: jax.Array, tag: jax.Array, shape: tuple) -> jax.Array:
+    """Dither stream for one WIRE payload (a collective operand of
+    repro/dist/exchange.py): uint32 noise of ``shape``, a pure function of
+    ``(seed, tag, flat element index)``.
+
+    Same determinism contract as :func:`sr_noise` — counter-based, no
+    sampler state, no traversal order — so a run resumed from a
+    checkpointed ``sr`` counter replays the exact wire dither.  ``tag``
+    (see ``exchange.wire_tag``) positions the payload within the step
+    (stream base, microbatch/bucket, sender rank); the ``_WIREC``
+    multiplier keeps these streams disjoint from the row-state streams
+    even when a tag numerically equals a row id.  The flat-iota element
+    counter is plain XLA (this path never runs inside a Pallas body, so
+    the 1-D iota restriction of kernel code does not apply)."""
+    seed_u = jnp.asarray(seed).astype(jnp.uint32)
+    tag_u = jnp.asarray(tag).astype(jnp.uint32)
+    base = mix32(seed_u * jnp.uint32(_GOLD)
+                 ^ (tag_u * jnp.uint32(_WIREC) + jnp.uint32(1)))
+    n = 1
+    for d in shape:
+        n *= int(d)
+    ctr = jax.lax.iota(jnp.uint32, n).reshape(shape)
+    return mix32(base ^ (ctr * jnp.uint32(_ROWC) + jnp.uint32(_GOLD)))
+
+
+def sr_round_bf16_wire(x: jax.Array, seed: jax.Array, tag) -> jax.Array:
+    """fp32 -> bf16 stochastic round of a wire payload under the seeded
+    counter dither.  Exactness guarantee (the degeneration contract of
+    the compressed collectives): any value already representable in bf16
+    — zeros included — passes through BITWISE, because its discarded
+    mantissa half is zero and the <= 0xFFFF dither cannot carry into the
+    kept half."""
+    x = jnp.asarray(x, jnp.float32)
+    return sr_round_bf16(x, wire_noise(seed, tag, x.shape))

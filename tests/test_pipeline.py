@@ -146,8 +146,7 @@ def test_m1_bit_identical_to_legacy_monolithic_step():
                             lo_shard=state['dense']['lo'],
                             mom_shard=None, err_shard=state['dense']['err'])
             st2 = dp.rs_ag_split_sgd(st, g_dense, cfg.lr, all_axes,
-                                     num_buckets=cfg.num_buckets,
-                                     mean=False)
+                                     num_buckets=4, mean=False)
             return ({'emb': {'hi': hi2, 'lo': lo2},
                      'dense': {'hi': st2.hi, 'lo': st2.lo_shard,
                                'err': st2.err_shard}},
